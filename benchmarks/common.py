@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: trained tiny LMs, quantization sweep
+drivers, CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import quantize_model
+from repro.data.corpus import calibration_slices, eval_batches
+from repro.data.evaluate import perplexity
+from repro.data.pretrained import corpus_tokens, get_trained_lm
+
+# scaled-down analog of the paper's 128 slices x 2048 tokens
+N_CALIB, CALIB_LEN = 24, 192
+EVAL_SEQ, EVAL_BATCH = 192, 8
+MAX_EVAL_BATCHES = 6
+
+
+def calib_batches_for(corpus: str):
+    toks = corpus_tokens(corpus, split="train")
+    sl = calibration_slices(toks, N_CALIB, CALIB_LEN, seed=1)
+    # group slices into batches of 4 for the capture pass
+    return [sl[i:i + 4] for i in range(0, len(sl), 4)]
+
+
+def eval_ppl(cfg, params, corpus: str) -> float:
+    toks = corpus_tokens(corpus, split="eval")
+    return perplexity(cfg, params, eval_batches(toks, EVAL_BATCH, EVAL_SEQ),
+                      max_batches=MAX_EVAL_BATCHES)
+
+
+def quantized_ppl(cfg, params, corpus, method, bits, **kw) -> tuple:
+    """Returns (ppl, seconds)."""
+    qcfg = cfg.quant.__class__(bits=bits, **kw) if kw else \
+        cfg.quant.__class__(bits=bits)
+    t0 = time.time()
+    qp, _ = quantize_model(cfg, params, calib_batches_for(corpus),
+                           method=method, qcfg=qcfg)
+    dt = time.time() - t0
+    return eval_ppl(cfg, qp, corpus), dt
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,25 @@
+"""Fig. 4 analogue: impact of the step-1 intermediate bit-width (3..6)
+with the second step finalizing at 3 bits. Paper: 4-5 intermediate bits
+is the sweet spot (3 == plain re-encode loses; 6 explodes search time
+for little gain)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_ppl, quantized_ppl
+from repro.data.pretrained import get_trained_lm
+
+
+def main():
+    rows = {}
+    cfg, params = get_trained_lm("tiny-lm", corpus="wiki")
+    # final 2-bit (stress regime; see table5 note), intermediate 3..6
+    for ib in (3, 4, 5, 6):
+        ppl, dt = quantized_ppl(cfg, params, "wiki", "gptqt", 2,
+                                intermediate_bits=ib, reexplore_range=1,
+                                reexplore_points=17)
+        emit(f"fig4/intermediate{ib}", dt * 1e6, f"{ppl:.3f}")
+        rows[ib] = ppl
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Render the roofline table from artifacts/dryrun/*.json (EXPERIMENTS.md
+§Roofline source). One row per (arch x shape x mesh [x quant])."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh=None, pattern="*.json"):
+    cells = []
+    for p in sorted(ARTIFACTS.glob(pattern)):
+        d = json.loads(p.read_text())
+        if mesh and d.get("mesh") != mesh:
+            continue
+        d["_file"] = p.name
+        cells.append(d)
+    return cells
+
+
+HBM_BW = 819e9
+
+
+def analytic_stream_s(d):
+    """Lower-bound memory term: weight bytes (+cache read/write for
+    inference cells, +optimizer state for train) per device / HBM bw.
+    Unlike XLA 'bytes accessed' (which counts fusion-internal buffers and
+    dtype converts — an upper bound), this is the irreducible stream."""
+    n = d.get("n_devices", 256)
+    w = d.get("params_bytes_packed") or d.get("params_bytes_bf16", 0)
+    b = w
+    if d["shape"].startswith(("decode", "long")):
+        b += 2 * d.get("cache_bytes", 0)
+    elif d["shape"].startswith("prefill"):
+        b += d.get("cache_bytes", 0)
+    else:
+        b += d.get("state_bytes", 0)
+    return b / n / HBM_BW
+
+
+def fmt_row(d):
+    r = d.get("roofline", {})
+    q = f"w{d['quant_bits']}" if d.get("quant_bits") else "bf16"
+    if not d.get("ok"):
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | {q} "
+                f"| FAILED | | | | | | |")
+    return ("| {arch} | {shape} | {mesh} | {q} | {tc:.3e} | {tm:.3e} "
+            "| {ts:.3e} | {tx:.3e} | {bound} | {mfu:.3f} | {useful:.2f} |"
+            ).format(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], q=q,
+        tc=r["t_compute_s"], tm=r["t_memory_s"], ts=analytic_stream_s(d),
+        tx=r["t_collective_s"], bound=r["bound"], mfu=r["roofline_mfu"],
+        useful=r.get("useful_flops_ratio", 0.0))
+
+
+HEADER = ("| arch | shape | mesh | repr | t_compute (s) | t_mem HLO (s) "
+          "| t_mem stream (s) | t_collective (s) | bound "
+          "| roofline MFU ceil | useful/HLO flops |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(pattern=None):
+    import sys
+    pattern = pattern or (sys.argv[1] if len(sys.argv) > 1 else "*.json")
+    cells = load_cells(pattern=pattern)
+    print(HEADER)
+    for d in cells:
+        print(fmt_row(d))
+    ok = sum(1 for d in cells if d.get("ok"))
+    print(f"\n{ok}/{len(cells)} cells OK")
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark aggregator — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_intermediate_bit, table1_ppl,
+                            table3_ppl_shifted, table4_speed, table5_overfit,
+                            table6_reexplore)
+    print("name,us_per_call,derived")
+    suites = [
+        ("table4_speed", table4_speed.main),
+        ("table1_ppl", table1_ppl.main),
+        ("table3_ppl_shifted", table3_ppl_shifted.main),
+        ("table5_overfit", table5_overfit.main),
+        ("table6_reexplore", table6_reexplore.main),
+        ("fig4_intermediate_bit", fig4_intermediate_bit.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Tab. I/II analogue: perplexity of full/RTN/BCQ/GPTQ/GPTQT at 3-bit and
+2-bit on trained tiny LMs (wiki-analogue corpus). The paper's claim under
+test: GPTQT <= GPTQ < BCQ << RTN at 3-bit; at 2-bit RTN/BCQ collapse
+while GPTQT stays reasonable."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_ppl, quantized_ppl
+from repro.data.pretrained import get_trained_lm
+
+MODELS = ["tiny-lm", "tiny-lm-wide"]
+METHODS = ["rtn", "bcq", "gptq", "gptqt"]
+
+
+def main(models=None):
+    rows = {}
+    for name in models or MODELS:
+        cfg, params = get_trained_lm(name, corpus="wiki")
+        base = eval_ppl(cfg, params, "wiki")
+        emit(f"table1/{name}/full16", 0.0, f"{base:.3f}")
+        rows[(name, "full", 16)] = base
+        for bits in (3, 2):
+            for m in METHODS:
+                ppl, dt = quantized_ppl(cfg, params, "wiki", m, bits)
+                emit(f"table1/{name}/{m}-w{bits}", dt * 1e6, f"{ppl:.3f}")
+                rows[(name, m, bits)] = ppl
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Tab. III analogue: same method grid on the second corpus distribution
+("ptb" grammar) — shows the orderings are not corpus-specific."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_ppl, quantized_ppl
+from repro.data.pretrained import get_trained_lm
+
+METHODS = ["rtn", "bcq", "gptq", "gptqt"]
+
+
+def main():
+    rows = {}
+    cfg, params = get_trained_lm("tiny-lm", corpus="ptb")
+    base = eval_ppl(cfg, params, "ptb")
+    emit("table3/tiny-lm/full16", 0.0, f"{base:.3f}")
+    rows[("full", 16)] = base
+    for m in METHODS:
+        ppl, dt = quantized_ppl(cfg, params, "ptb", m, 3)
+        emit(f"table3/tiny-lm/{m}-w3", dt * 1e6, f"{ppl:.3f}")
+        rows[(m, 3)] = ppl
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Tab. IV analogue: per-token generation cost.
+
+No TPU in this container, so this benchmark reports BOTH:
+  (a) measured CPU wall-time per decode-shaped matmul for the three
+      representations (dense bf16-equivalent, GPTQ-style int+dequant,
+      GPTQT fused binary coding) at several model widths — the relative
+      ordering is the paper's Tab. IV structure;
+  (b) the structural projection that determines real decode latency on
+      the bandwidth-bound target: weight bytes per token / HBM bw
+      (v5e 819 GB/s), where GPTQT-3bit moves ~18.75% of bf16 bytes plus
+      alpha/beta overhead. The projected speedup column is `derived`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.quant.packing import pack_signs
+
+HBM_BW = 819e9
+WIDTHS = [(1024, 4096), (2048, 8192), (4096, 16384)]
+BITS = 3
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def main():
+    rows = {}
+    rng = np.random.default_rng(0)
+    for K, N in WIDTHS:
+        x = jnp.asarray(rng.standard_normal((1, K)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+        # GPTQ-style: int codes + per-row scale, dequant then matmul
+        q = jnp.asarray(rng.integers(0, 8, (K, N)).astype(np.int8))
+        s = jnp.asarray(rng.random((1, N), dtype=np.float32))
+        # GPTQT: packed bitplanes
+        signs = jnp.asarray(rng.integers(0, 2, (BITS, K, N)).astype(bool))
+        codes = pack_signs(signs)
+        alphas = jnp.asarray(rng.random((1, N, BITS), dtype=np.float32))
+        betas = jnp.zeros((1, N), jnp.float32)
+
+        dense = jax.jit(lambda x, w: x @ w)
+        gptq_path = jax.jit(
+            lambda x, q, s: x @ (q.astype(jnp.float32) * s))
+        gptqt_path = jax.jit(
+            lambda x, c, a, b: ref.bcq_matmul_ref(x, c, a, b, K))
+
+        t_d = _bench(dense, x, w)
+        t_g = _bench(gptq_path, x, q, s)
+        t_t = _bench(gptqt_path, x, codes, alphas, betas)
+
+        bytes_dense = K * N * 2                        # bf16 target bytes
+        bytes_packed = (BITS * (K // 32) * N * 4 + N * BITS * 4 + N * 4)
+        proj_speedup = bytes_dense / bytes_packed      # bandwidth-bound
+        emit(f"table4/K{K}N{N}/dense", t_d * 1e6, "1.00x")
+        emit(f"table4/K{K}N{N}/gptq_dequant", t_g * 1e6,
+             f"{t_d / t_g:.2f}x_cpu")
+        emit(f"table4/K{K}N{N}/gptqt_fused", t_t * 1e6,
+             f"proj_{proj_speedup:.2f}x_v5e")
+        rows[(K, N)] = {"dense_us": t_d * 1e6, "gptq_us": t_g * 1e6,
+                        "gptqt_us": t_t * 1e6,
+                        "proj_speedup_v5e": proj_speedup,
+                        "proj_us_dense_v5e": bytes_dense / HBM_BW * 1e6,
+                        "proj_us_gptqt_v5e": bytes_packed / HBM_BW * 1e6}
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Tab. V analogue (quantization overfitting): GPTQ(linear) vs
+GPTQ(min MSE) vs GPTQ+BCQ vs GPTQT, 3-bit, on a trained tiny LM.
+The paper's point: grids fitted to minimize plain weight-MSE (min-MSE,
+BCQ) do WORSE inside GPTQ than the plain linear grid, while GPTQT's
+two-step grid does better."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_ppl, quantized_ppl
+from repro.data.pretrained import get_trained_lm
+
+METHODS = ["gptq", "gptq_minmse", "gptq_bcq", "gptqt"]
+
+# 2-bit: at tiny-LM scale 3-bit is saturated (all compensated methods sit
+# at fp16 ppl); the overfitting effect the paper shows at 3-bit on OPT
+# appears here in the 2-bit stress regime (documented deviation).
+BITS = 2
+
+
+def main():
+    rows = {}
+    cfg, params = get_trained_lm("tiny-lm", corpus="wiki")
+    base = eval_ppl(cfg, params, "wiki")
+    emit("table5/full16", 0.0, f"{base:.3f}")
+    for m in METHODS:
+        ppl, dt = quantized_ppl(cfg, params, "wiki", m, BITS)
+        emit(f"table5/{m}-w{BITS}", dt * 1e6, f"{ppl:.3f}")
+        rows[m] = ppl
+    return rows
+
+
+if __name__ == "__main__":
+    main()

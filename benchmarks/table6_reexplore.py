@@ -1,0 +1,24 @@
+"""Tab. VI analogue: effect of the re-exploration range (0 / 1 / 2 bits,
+Eq. 7) on GPTQT perplexity, 3-bit final + 5-bit intermediate."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_ppl, quantized_ppl
+from repro.data.pretrained import get_trained_lm
+
+
+def main():
+    rows = {}
+    cfg, params = get_trained_lm("tiny-lm", corpus="wiki")
+    # 2-bit final / 4-bit intermediate: the stress regime where the scale
+    # re-exploration has visible effect at tiny-LM scale
+    for rng in (0, 1, 2):
+        ppl, dt = quantized_ppl(cfg, params, "wiki", "gptqt", 2,
+                                intermediate_bits=4, reexplore_range=rng,
+                                reexplore_points=17)
+        emit(f"table6/range{rng}", dt * 1e6, f"{ppl:.3f}")
+        rows[rng] = ppl
+    return rows
+
+
+if __name__ == "__main__":
+    main()

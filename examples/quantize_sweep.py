@@ -1,0 +1,31 @@
+"""Ablation sweeps on a trained tiny LM: intermediate bit-width (Fig. 4)
+and re-exploration range (Tab. VI).
+
+  PYTHONPATH=src python examples/quantize_sweep.py
+"""
+from __future__ import annotations
+
+
+def main():
+    from benchmarks.common import eval_ppl, quantized_ppl
+    from repro.data.pretrained import get_trained_lm
+
+    cfg, params = get_trained_lm("tiny-lm")
+    print(f"fp32 ppl: {eval_ppl(cfg, params, 'wiki'):.3f}\n")
+
+    print("Fig.4 analogue — intermediate bits (final = 3):")
+    for ib in (3, 4, 5, 6):
+        ppl, dt = quantized_ppl(cfg, params, "wiki", "gptqt", 3,
+                                intermediate_bits=ib, reexplore_points=17)
+        print(f"  n={ib}: ppl {ppl:8.3f}   ({dt:.1f}s quantize)")
+
+    print("\nTab.VI analogue — re-exploration range (n=5, k=3):")
+    for rng in (0, 1, 2):
+        ppl, dt = quantized_ppl(cfg, params, "wiki", "gptqt", 3,
+                                intermediate_bits=5, reexplore_range=rng,
+                                reexplore_points=17)
+        print(f"  range={rng}: ppl {ppl:8.3f}   ({dt:.1f}s quantize)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: train a tiny LM, quantize it with GPTQT (the paper's
+two-step method) and its baselines, compare perplexity.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--bits", type=int, default=3)
+    args = ap.parse_args()
+
+    from benchmarks.common import calib_batches_for, eval_ppl
+    from repro.core import quantize_model
+    from repro.data.pretrained import get_trained_lm
+
+    cfg, params = get_trained_lm("tiny-lm", steps=args.steps)
+    base = eval_ppl(cfg, params, "wiki")
+    print(f"\nfp32 baseline ppl: {base:.3f}\n")
+    calib = calib_batches_for("wiki")
+
+    print(f"{'method':12s} {'w-bits':>6s} {'ppl':>10s}")
+    for method in ("rtn", "bcq", "gptq", "gptqt"):
+        qp, rep = quantize_model(cfg, params, calib, method=method,
+                                 qcfg=cfg.quant.__class__(bits=args.bits))
+        ppl = eval_ppl(cfg, qp, "wiki")
+        print(f"{method:12s} {args.bits:6d} {ppl:10.3f}")
+    print("\nGPTQT should track GPTQ or better; BCQ/RTN degrade most "
+          "(paper Tab. I ordering).")
+
+
+if __name__ == "__main__":
+    main()

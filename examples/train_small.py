@@ -1,0 +1,43 @@
+"""End-to-end training driver: train a small LM for a few hundred steps
+with the full substrate — AdamW, cosine schedule, microbatching,
+checkpoint/auto-resume (kill it mid-run and re-launch: it continues).
+
+  PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--batch", type=int, default=12)
+    ap.add_argument("--seq", type=int, default=192)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_small")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import batches, token_stream
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch).replace(dtype="float32", remat="none")
+    toks = token_stream("wiki", 400_000)
+    data = batches(toks, args.batch, args.seq, seed=0)
+    tr = Trainer(
+        cfg,
+        TrainerConfig(steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, log_every=10, warmup=20,
+                      microbatches=args.microbatches,
+                      opt=AdamWConfig(lr=1.5e-3, weight_decay=0.01,
+                                      master_fp32=False)),
+        data, dtype="float32")
+    out = tr.run()
+    print(f"done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json + COMMITTED
+Crash-safety: everything is written into step_<N>.tmp and atomically
+renamed; the COMMITTED marker is written (and fsynced) last, so a crash
+mid-save leaves the previous checkpoint as the restore target. Saves can
+run on a background thread (async_save); keep_n garbage-collection prunes
+old steps. Restores are mesh-agnostic — arrays are stored unsharded, so a
+restart may use a different data-parallel size (elastic rescale) and
+reshard on load via the usual sharding rules.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def _unflatten_into(template, arrays):
+    import jax.numpy as jnp
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {a.shape} != "
+                             f"expected {leaf.shape}")
+        # return jax arrays: downstream code (calibration taps, jit
+        # donation) relies on leaves being jax.Array
+        leaves.append(jnp.asarray(a.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep_n: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ---------------- save ----------------
+    def save(self, step: int, tree, metadata: dict | None = None,
+             block: bool = False):
+        # snapshot to host memory synchronously (cheap), write async
+        arrays = _flatten(tree)
+        meta = {"step": int(step), "time": time.time(),
+                **(metadata or {})}
+        self.wait()   # never two writers (async then sync same step)
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, arrays, meta)
+
+    def _write(self, step, arrays, meta):
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        commit = final / "COMMITTED"
+        with open(commit, "w") as f:
+            f.write(str(meta["step"]))
+            f.flush()
+            os.fsync(f.fileno())
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------- restore ----------------
+    def committed_steps(self):
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if p.suffix == ".tmp" or not (p / "COMMITTED").exists():
+                continue
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return out
+
+    def latest_step(self):
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None):
+        """-> (tree matching template, metadata). template supplies
+        structure/shapes/dtypes (e.g. freshly-initialized state)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        arrays = dict(np.load(path / "arrays.npz"))
+        meta = json.loads((path / "meta.json").read_text())
+        return _unflatten_into(template, arrays), meta

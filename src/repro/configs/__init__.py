@@ -1,0 +1,83 @@
+"""Config registry: get_config(name) and per-arch reduced smoke configs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (LayerSpec, MambaConfig, MLAConfig,
+                                ModelConfig, MoEConfig, QuantConfig,
+                                ShapeSpec, SHAPES, runnable_shapes)
+
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.qwen3_4b import CONFIG as _qwen3_4b
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3_06b
+from repro.configs.gemma2_27b import CONFIG as _gemma2
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.chameleon_34b import CONFIG as _chameleon
+from repro.configs import paper_models as _paper
+
+# The 10 assigned pool architectures
+ASSIGNED = {
+    c.name: c for c in [
+        _jamba, _mixtral, _qwen3_moe, _qwen3_4b, _minicpm3,
+        _qwen3_06b, _gemma2, _falcon_mamba, _hubert, _chameleon,
+    ]
+}
+
+EXTRA = {
+    c.name: c for c in [
+        _paper.OPT_125M, _paper.LLAMA2_7B, _paper.BLOOM_560M,
+        _paper.TINY_LM, _paper.TINY_LM_WIDE, _paper.TINY_LM_DEEP,
+    ]
+}
+
+REGISTRY = {**ASSIGNED, **EXTRA}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config: small widths/depth/experts/vocab, same
+    block pattern and feature flags, suitable for a CPU forward/train step.
+    """
+    cfg = get_config(name)
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=len(cfg.pattern),          # one super-block
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=97,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2), d_ff_expert=64)
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, d_state=8, chunk=16)
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)
+        kw["head_dim"] = 24
+    if cfg.pattern and cfg.pattern[0].window is not None:
+        kw["pattern"] = tuple(
+            dataclasses.replace(s, window=32 if s.window else None)
+            for s in cfg.pattern)
+    # keep MoE-on-odd / attn-position structure for multi-layer patterns
+    return cfg.replace(**kw)
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MambaConfig", "MLAConfig", "LayerSpec",
+    "QuantConfig", "ShapeSpec", "SHAPES", "runnable_shapes",
+    "ASSIGNED", "EXTRA", "REGISTRY", "get_config", "smoke_config",
+]

@@ -1,0 +1,218 @@
+"""Model configuration dataclasses.
+
+A ModelConfig fully determines a model: the block *pattern* (a repeating
+super-block of layer specs, scanned `n_groups` times), attention flavour,
+MoE / Mamba / MLA sub-configs, and quantization registry defaults.
+
+Configs are pure data — importing this module never touches jax device
+state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25       # train-time dispatch capacity
+    inference_capacity_factor: float = 2.0  # prefill; decode is dropless
+    # "ep" shards experts over the model axis, "tp" shards each expert's
+    # hidden dim; "auto" picks ep when n_experts % model_axis == 0.
+    sharding: str = "auto"
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+    chunk: int = 256          # chunked-scan block length (training)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank > 0 else -(-d_model // 16)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside the repeating super-block."""
+    kind: str = "attn"          # "attn" | "mamba"
+    mlp: str = "dense"          # "dense" | "moe" | "none"
+    window: Optional[int] = None  # sliding-window size; None = global
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """GPTQT defaults for this model (overridable at call time)."""
+    bits: int = 3                 # final binary-coding bits (k)
+    intermediate_bits: int = 5    # step-1 linear bits (n)
+    group_size: int = 0           # 0 = per-channel (one group along K)
+    reexplore_range: int = 1      # Eq.7 range in bits (Tab. VI "range")
+    reexplore_points: int = 33    # grid points for S-hat search
+    exclude: Tuple[str, ...] = () # substrings of param paths to skip
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    # repeating super-block; len(pattern) must divide n_layers
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    causal: bool = True           # False -> encoder-only (bidirectional)
+    post_block_norms: bool = False  # gemma2 sandwich norms
+    # sub-modules
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    mla: Optional[MLAConfig] = None
+    # embedding / head
+    tie_embeddings: bool = True
+    embed_input: str = "tokens"   # "tokens" | "frames" (precomputed frontend)
+    norm_eps: float = 1e-6
+    # serving
+    has_decode: bool = True       # encoder-only archs: False
+    subquadratic: bool = False    # eligible for long_500k
+    # numerics
+    dtype: str = "bfloat16"
+    # unroll the over-groups scan (used by dry-run cost probes: XLA cost
+    # analysis counts while-loop bodies once, so probes compile 1- and
+    # 2-group unrolled models and extrapolate base + n_groups * delta)
+    scan_unroll: bool = False
+    # quantization defaults
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    # activation remat policy for training: "none"|"dots"|"full"
+    remat: str = "full"
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // self.n_heads
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern length {len(self.pattern)}")
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        assert self.mamba is not None
+        return self.mamba.expand * self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count (analytic; used for roofline MODEL_FLOPS and memory
+    # budgeting). Counts embedding once when tied.
+    def param_counts(self) -> dict:
+        d, hd = self.d_model, self.resolved_head_dim
+        nh, nkv = self.n_heads, self.n_kv_heads
+        counts = {"embed": self.vocab_size * d}
+        if not self.tie_embeddings:
+            counts["lm_head"] = self.vocab_size * d
+        per_pattern_total = 0
+        per_pattern_active = 0
+        for spec in self.pattern:
+            p = 0
+            a = 0
+            if spec.kind == "attn":
+                if self.mla is not None:
+                    m = self.mla
+                    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    p += d * m.q_lora_rank + m.q_lora_rank * nh * qk_hd
+                    p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    p += m.kv_lora_rank * nh * (m.qk_nope_head_dim + m.v_head_dim)
+                    p += nh * m.v_head_dim * d
+                else:
+                    p += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+                a += p
+            elif spec.kind == "mamba":
+                assert self.mamba is not None
+                mc = self.mamba
+                di = mc.expand * d
+                dtr = mc.resolved_dt_rank(d)
+                p += d * 2 * di                      # in_proj (x and z)
+                p += mc.d_conv * di                  # conv
+                p += di * (dtr + 2 * mc.d_state)     # x_proj
+                p += dtr * di + di                   # dt_proj (+bias)
+                p += di * mc.d_state + di            # A_log, D
+                p += di * d                          # out_proj
+                a += p
+            if spec.mlp == "dense":
+                w = 3 * d * self.d_ff
+                p += w
+                a += w
+            elif spec.mlp == "moe":
+                assert self.moe is not None
+                w1 = 3 * d * self.moe.d_ff_expert
+                p += self.moe.n_experts * w1 + d * self.moe.n_experts
+                a += self.moe.top_k * w1 + d * self.moe.n_experts
+            # norms
+            p += 2 * d + (2 * d if self.post_block_norms else 0)
+            a += 2 * d
+            per_pattern_total += p
+            per_pattern_active += a
+        counts["blocks_total"] = per_pattern_total * self.n_groups
+        counts["blocks_active"] = per_pattern_active * self.n_groups
+        counts["total"] = counts["embed"] + counts.get("lm_head", 0) + counts["blocks_total"]
+        counts["active"] = counts["embed"] + counts.get("lm_head", 0) + counts["blocks_active"]
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to the LM pool (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable_shapes(cfg: ModelConfig):
+    """Which of the 4 pool shapes apply to this arch (spec-mandated skips)."""
+    out = []
+    for s in SHAPES.values():
+        if s.kind == "decode" and not cfg.has_decode:
+            continue  # encoder-only: no decode step
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue  # needs sub-quadratic attention
+        out.append(s)
+    return out

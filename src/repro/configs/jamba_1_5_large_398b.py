@@ -1,0 +1,38 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2.
+[arXiv:2403.19887; hf]. Super-block of 8 layers: attention at index 4
+(1 attn : 7 mamba), MoE on odd layers (every other layer), dense FFN on
+even layers.
+"""
+from repro.configs.base import (LayerSpec, MambaConfig, ModelConfig,
+                                MoEConfig, QuantConfig)
+
+
+def _pattern():
+    specs = []
+    for i in range(8):
+        kind = "attn" if i == 4 else "mamba"
+        mlp = "moe" if i % 2 == 1 else "dense"
+        specs.append(LayerSpec(kind=kind, mlp=mlp))
+    return tuple(specs)
+
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    pattern=_pattern(),
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    subquadratic=True,   # 1:7 mamba; attn decode is O(S) with sharded KV
+    quant=QuantConfig(exclude=("x_proj", "dt_proj")),
+)

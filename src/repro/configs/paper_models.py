@@ -1,0 +1,38 @@
+"""Model families the GPTQT paper itself quantizes (OPT, Llama2, Bloom),
+mapped onto this framework's composable stack, plus the *tiny* trained-
+from-scratch LMs used by the in-repo perplexity reproduction (the offline
+container has no HF checkpoints — see DESIGN.md §6.2).
+
+The tiny models keep each family's distinguishing block structure
+(OPT: MHA+ReLU-ish dense FFN; Llama2: GQA+SwiGLU; Bloom: MHA+GeLU dense)
+at a width that trains to meaningful perplexity on CPU in minutes.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+# Full-size reference points (config fidelity; exercised via dry-run only)
+OPT_125M = ModelConfig(
+    name="opt-125m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=50272,
+    pattern=(LayerSpec(kind="attn", mlp="dense"),), tie_embeddings=True,
+)
+LLAMA2_7B = ModelConfig(
+    name="llama2-7b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=32, head_dim=128, d_ff=11008, vocab_size=32000,
+    pattern=(LayerSpec(kind="attn", mlp="dense"),), tie_embeddings=False,
+)
+BLOOM_560M = ModelConfig(
+    name="bloom-560m", family="dense", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, head_dim=64, d_ff=4096, vocab_size=250880,
+    pattern=(LayerSpec(kind="attn", mlp="dense"),), tie_embeddings=True,
+)
+
+# Tiny trained-from-scratch models for the perplexity reproduction.
+TINY_LM = ModelConfig(
+    name="tiny-lm", family="dense", n_layers=4, d_model=256,
+    n_heads=4, n_kv_heads=4, head_dim=64, d_ff=1024, vocab_size=258,
+    pattern=(LayerSpec(kind="attn", mlp="dense"),), tie_embeddings=True,
+    rope_theta=10000.0,
+)
+TINY_LM_WIDE = TINY_LM.replace(name="tiny-lm-wide", d_model=384, n_heads=6,
+                               n_kv_heads=3, d_ff=1536, n_layers=4)
+TINY_LM_DEEP = TINY_LM.replace(name="tiny-lm-deep", n_layers=8)

@@ -1,0 +1,260 @@
+"""quantize_model(): walk a param tree, calibrate per-layer Hessians by
+tapping linear() inputs on an unrolled forward, and quantize every
+eligible weight with the requested method.
+
+Methods (paper Tab. I/V grid):
+  rtn          round-to-nearest linear grid
+  gptq         GPTQ with linear grid
+  gptq_minmse  GPTQ with per-row MSE-optimal clipped grid   (Tab. V)
+  gptq_bcq     GPTQ with BCQ-fit binary-coding grid         (Tab. V)
+  bcq          plain BCQ (no error compensation)
+  gptqt        the paper's method (two-step + re-explore + fuse)
+
+`mode="fake"` replaces weights with dequantized fp arrays (perplexity
+evals, exactly what the paper measures); `mode="packed"` installs
+QuantizedTensor leaves (fused binary coding; serving/kernels path).
+Packed mode is available for gptqt/bcq — the binary-coding methods.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binary_coding as bc
+from repro.core import rtn as rtn_mod
+from repro.core.gptq import gptq_solve, output_error
+from repro.core.gptqt import gptqt_quantize
+from repro.core.hessian import hessian_from_inputs
+from repro.models import layers as L
+from repro.models.model import (_apply_layer, embed_inputs, unembed)
+from repro.quant.packing import pack_signs
+from repro.quant.qlinear import QuantizedTensor
+
+# param-leaf names eligible for quantization (2D GEMM weights + 3D expert
+# stacks); everything else (norms, convs, A_log, embeddings) is left alone.
+QUANTIZABLE = {
+    "wq", "wk", "wv", "wo", "wg", "wu", "wd", "in_proj", "out_proj",
+    "x_proj", "dt_w", "wq_a", "wq_b", "wkv_a", "wkv_b", "lm_head",
+}
+
+
+def _leaf_name(path):
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def eligible_paths(cfg, params, include_head=False):
+    """-> list of (path tuple, leaf) for quantizable weights."""
+    out = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        name = _leaf_name(path)
+        if name not in QUANTIZABLE:
+            continue
+        if name == "lm_head" and not include_head:
+            continue
+        if any(sub in name for sub in cfg.quant.exclude):
+            continue
+        out.append((path, leaf))
+    return out
+
+
+# --------------------------------------------------------------------------
+# calibration: unrolled forward with activation taps
+# --------------------------------------------------------------------------
+
+def forward_unrolled(cfg, group_trees, top, inputs):
+    """Python-loop forward over pre-sliced per-group param trees (so leaf
+    object ids are stable for the tap)."""
+    x = embed_inputs(cfg, top, inputs)
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    for gp in group_trees:
+        for i, spec in enumerate(cfg.pattern):
+            x, aux, _ = _apply_layer(cfg, spec, gp[f"L{i}"], x, positions, aux)
+    x = L.rmsnorm(x, top["final_ln"], cfg.norm_eps)
+    return unembed(cfg, top, x), aux
+
+
+def collect_hessians(cfg, params, calib_batches, include_head=False):
+    """Run calibration batches, return {path_str: (leaf, H or [H_e], n)}.
+
+    calib_batches: iterable of token (B, S) arrays (or frames).
+    """
+    blocks = params["blocks"]
+    n_groups = cfg.n_groups
+    group_trees = [jax.tree.map(lambda a: a[g], blocks) for g in range(n_groups)]
+    top = {k: v for k, v in params.items() if k != "blocks"}
+
+    # id -> path map over the sliced trees
+    id2path = {}
+    for g, gp in enumerate(group_trees):
+        for path, leaf in jax.tree_util.tree_leaves_with_path(gp):
+            name = _leaf_name(path)
+            if name in QUANTIZABLE:
+                id2path[id(leaf)] = (g, path, leaf)
+    if include_head and "lm_head" in top:
+        id2path[id(top["lm_head"])] = (-1, (jax.tree_util.DictKey("lm_head"),),
+                                       top["lm_head"])
+
+    acc: dict = {}
+    with L.tap_activations() as rec:
+        for batch in calib_batches:
+            forward_unrolled(cfg, group_trees, top, batch)
+            for wid, xs in rec.items():
+                if wid not in id2path:
+                    continue
+                g, path, leaf = id2path[wid]
+                key = (g, jax.tree_util.keystr(path))
+                ent = acc.setdefault(key, {"leaf": leaf, "g": g, "path": path,
+                                           "xs": []})
+                ent["xs"].extend(xs)
+            rec.clear()
+
+    if not acc:
+        raise RuntimeError(
+            "calibration captured no activations for any quantizable "
+            "weight — are the param leaves jax Arrays?")
+    out = {}
+    for key, ent in acc.items():
+        leaf = ent["leaf"]
+        if leaf.ndim == 3:      # expert stack (E, K, N): per-expert H
+            E = leaf.shape[0]
+            hs = []
+            for e in range(E):
+                xe = [x[e] for x in ent["xs"]]
+                hs.append(hessian_from_inputs(xe)[0])
+            out[key] = (ent["path"], ent["g"], leaf, hs)
+        else:
+            H, _ = hessian_from_inputs(ent["xs"])
+            out[key] = (ent["path"], ent["g"], leaf, H)
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-matrix dispatch
+# --------------------------------------------------------------------------
+
+def quantize_matrix(W, H, method, qcfg, mode="fake", exact_search=False):
+    """W: layer layout (K, N); H: (K, K). Returns (new leaf, stats)."""
+    Wt = W.astype(jnp.float32).T                         # (N, K)
+    bits = qcfg.bits
+    if method == "rtn":
+        wq, _ = rtn_mod.quantize_rtn(Wt, bits)
+    elif method == "bcq":
+        wq, alphas, signs = bc.bcq_alternating(Wt, bits)
+        if mode == "packed":
+            codes = pack_signs(jnp.transpose(signs, (0, 2, 1)))  # (k,K,N)
+            qt = QuantizedTensor(codes, alphas[None],            # (1,N,k)
+                                 jnp.zeros((1, Wt.shape[0]), jnp.float32),
+                                 k_in=Wt.shape[1], orig_dtype=str(W.dtype))
+            return qt, {"err": output_error(Wt, wq, H)}
+    elif method in ("gptq", "gptq_minmse", "gptq_bcq"):
+        if method == "gptq":
+            S, center = rtn_mod.row_grid(Wt, bits)
+            levels = rtn_mod.linear_levels(S, center, bits)
+        elif method == "gptq_minmse":
+            S, center = rtn_mod.minmse_grid(Wt, bits)
+            levels = rtn_mod.linear_levels(S, center, bits)
+        else:
+            levels = bc.bcq_levels(Wt, bits)
+        wq, _ = gptq_solve(Wt, H, levels)
+    elif method == "gptqt":
+        res = gptqt_quantize(
+            Wt, H, bits=bits, intermediate_bits=qcfg.intermediate_bits,
+            reexplore_range=qcfg.reexplore_range,
+            reexplore_points=qcfg.reexplore_points,
+            exact=exact_search, orig_dtype=str(W.dtype))
+        if mode == "packed":
+            return res.qt, {"err": output_error(Wt, res.wq_t, H)}
+        wq = res.wq_t
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return wq.T.astype(W.dtype), {"err": output_error(Wt, wq, H)}
+
+
+def _set_leaf(params, path, value):
+    """Functional leaf replacement by tree path."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    leaves = []
+    for p, leaf in flat:
+        leaves.append(value if p == path else leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def quantize_model(cfg, params, calib_batches, *, method="gptqt", qcfg=None,
+                   mode="fake", include_head=False, exact_search=False,
+                   verbose=False):
+    """Returns (new params, report dict). See module docstring."""
+    qcfg = qcfg or cfg.quant
+    hs = collect_hessians(cfg, params, calib_batches, include_head)
+    blocks = params["blocks"]
+    report = {}
+
+    # regroup: stacked block leaves quantized per group then restacked
+    by_path: dict = {}
+    for key, (path, g, leaf, H) in hs.items():
+        by_path.setdefault(jax.tree_util.keystr(path), []).append(
+            (g, path, leaf, H))
+
+    new_params = params
+    for pstr, entries in sorted(by_path.items()):
+        entries.sort(key=lambda e: e[0])
+        g0, path0, leaf0, _ = entries[0]
+        if g0 == -1:    # top-level (lm_head)
+            new_leaf, st = quantize_matrix(leaf0, entries[0][3], method, qcfg,
+                                           mode, exact_search)
+            new_params = {**new_params, "lm_head": new_leaf}
+            report[pstr] = st
+            continue
+        stacked_src = _get_by_path(blocks, path0)        # (G, ...) original
+        news, errs = [], []
+        for g, path, leaf, H in entries:
+            src = stacked_src[g]
+            if src.ndim == 3:                            # expert stack
+                per_e = [quantize_matrix(src[e], H[e], method, qcfg, mode,
+                                         exact_search) for e in range(src.shape[0])]
+                new_e = _stack_leaves([p for p, _ in per_e])
+                errs.extend(s["err"] for _, s in per_e)
+                news.append(new_e)
+            else:
+                nl, st = quantize_matrix(src, H, method, qcfg, mode,
+                                         exact_search)
+                errs.append(st["err"])
+                news.append(nl)
+        stacked_new = _stack_leaves(news)
+        new_blocks = _set_by_path(new_params["blocks"], path0, stacked_new)
+        new_params = {**new_params, "blocks": new_blocks}
+        report[pstr] = {"err": float(np.mean(errs))}
+        if verbose:
+            print(f"  quantized {pstr}: mean tr-err {report[pstr]['err']:.4g}")
+    return new_params, report
+
+
+def _stack_leaves(items):
+    if isinstance(items[0], QuantizedTensor):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *items,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+    return jnp.stack(items)
+
+
+def _get_by_path(tree, path):
+    node = tree
+    for k in path:
+        node = node[getattr(k, "key", getattr(k, "idx", None))]
+    return node
+
+
+def _set_by_path(tree, path, value):
+    k = path[0]
+    key = getattr(k, "key", getattr(k, "idx", None))
+    if len(path) == 1:
+        new = dict(tree)
+        new[key] = value
+        return new
+    new = dict(tree)
+    new[key] = _set_by_path(tree[key], path[1:], value)
+    return new

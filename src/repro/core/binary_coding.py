@@ -1,0 +1,109 @@
+"""Binary-coding quantization (BCQ, paper Eq. 3-4) and the BCchoice
+candidate enumeration used by GPTQT's second step.
+
+A k-bit binary coding of a row w is w ~ sum_i alpha_i b_i with
+b_i in {-1,+1}: 2^k representable values m +/- d_1 +/- ... +/- d_k.
+
+`enumerate_bc_choices(n, k)` enumerates every subset of the step-1
+integer axis {0..2^n-1} that is expressible as such a tree ("select
+specific nodes and cotyledons from the linear quantization tree", Fig. 3):
+with e_i = 2*d_i (positive integers, e_1 >= ... >= e_k) and
+m = (sum e_i)/2 + j, all 2^k leaves are integers in range. The paper's
+example [0,1,6,7] is (e=(5,1), j=0).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def sign_combos(bits: int) -> np.ndarray:
+    """(2^k, k) array of {-1,+1}: combo c uses sign of bit i of c."""
+    c = np.arange(2 ** bits)[:, None]
+    return (2 * ((c >> np.arange(bits)[None, :]) & 1) - 1).astype(np.float32)
+
+
+def enumerate_bc_choices(intermediate_bits: int, bits: int,
+                         max_candidates: int | None = None):
+    """Returns (E (C, k) float32 of e_i values, J (C,) float32 offsets).
+    Candidate level sets in int domain: j + (t + combos @ e) / 2."""
+    top = 2 ** intermediate_bits - 1
+    es, js = [], []
+    # e_1 >= e_2 >= ... >= e_k >= 1, sum <= top
+    for e in itertools.combinations_with_replacement(range(1, top + 1), bits):
+        e = tuple(sorted(e, reverse=True))
+        t = sum(e)
+        if t > top:
+            continue
+        for j in range(top - t + 1):
+            es.append(e)
+            js.append(j)
+    E = np.asarray(es, np.float32)
+    J = np.asarray(js, np.float32)
+    # dedupe identical level sets (degenerate e's can coincide)
+    combos = sign_combos(bits)
+    levels = J[:, None] + (E.sum(1)[:, None] + E @ combos.T) / 2.0
+    key = np.unique(np.sort(levels, axis=1), axis=0, return_index=True)[1]
+    E, J = E[np.sort(key)], J[np.sort(key)]
+    if max_candidates is not None and len(E) > max_candidates:
+        # keep a spread: sort by (span, offset) and stride-sample
+        idx = np.linspace(0, len(E) - 1, max_candidates).astype(int)
+        E, J = E[idx], J[idx]
+    return jnp.asarray(E), jnp.asarray(J)
+
+
+def choice_levels_int(E, J, bits: int):
+    """(C, k), (C,) -> (C, 2^k) int-domain level values (combo order)."""
+    combos = jnp.asarray(sign_combos(bits))              # (2^k, k)
+    return J[:, None] + (jnp.sum(E, axis=1)[:, None] + E @ combos.T) / 2.0
+
+
+# --------------------------------------------------------------------------
+# BCQ baseline (Kwon et al.): greedy + alternating least squares
+# --------------------------------------------------------------------------
+
+def bcq_greedy(Wt, bits: int):
+    """Eq. 3: residual sign coding. Wt (N, K) -> alphas (N, bits),
+    signs (bits, N, K)."""
+    r = Wt.astype(jnp.float32)
+    alphas, signs = [], []
+    for _ in range(bits):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=1)                 # = r.b / K
+        signs.append(b)
+        alphas.append(a)
+        r = r - a[:, None] * b
+    return jnp.stack(alphas, 1), jnp.stack(signs, 0)
+
+
+def bcq_alternating(Wt, bits: int, iters: int = 15):
+    """Eq. 4: alternately refit alphas by least squares and reassign signs
+    by nearest representable level. Returns (Wq, alphas, signs)."""
+    N, K = Wt.shape
+    alphas, signs = bcq_greedy(Wt, bits)
+    combos = jnp.asarray(sign_combos(bits))              # (L, k)
+    for _ in range(iters):
+        # refit alphas: per-row LS  (B^T B) a = B^T w
+        B = jnp.stack(list(signs), 0)                    # (k, N, K)
+        G = jnp.einsum("ink,jnk->nij", B, B)             # (N, k, k)
+        rhs = jnp.einsum("ink,nk->ni", B, Wt)            # (N, k)
+        G = G + 1e-6 * jnp.eye(bits)
+        alphas = jnp.linalg.solve(G, rhs[..., None])[..., 0]
+        alphas = jnp.abs(alphas)                         # canonical sign
+        # reassign: nearest of the 2^k levels
+        levels = combos @ alphas.T                       # (L, N)
+        idx = jnp.argmin(
+            jnp.abs(Wt[None] - levels[:, :, None]), axis=0)    # (N, K)
+        signs = jnp.stack(
+            [combos[idx, i] for i in range(bits)], 0)    # (k, N, K)
+    wq = jnp.einsum("ink,ni->nk", signs, alphas)
+    return wq, alphas, signs
+
+
+def bcq_levels(Wt, bits: int, iters: int = 15):
+    """Level values (N, 2^k) of the BCQ-fit grid (for GPTQ+BCQ, Tab. V)."""
+    _, alphas, _ = bcq_alternating(Wt, bits, iters)
+    combos = jnp.asarray(sign_combos(bits))
+    return alphas @ combos.T                             # (N, 2^k)

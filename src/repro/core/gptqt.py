@@ -1,0 +1,168 @@
+"""GPTQT: quantize twice (paper §II-B/C/D).
+
+Per weight matrix (worked in GPTQ orientation Wt = W^T, rows = output
+channels):
+
+  step 1   per-row linear grid at `intermediate_bits` n (centered form,
+           see core/rtn.py).
+  step 2   pick a BCchoice — a binary-coding-expressible subset of the
+           2^n integer levels — per row, minimizing the diag(H)-weighted
+           weight error (second-order proxy of the paper's output-error
+           criterion, DESIGN.md §6.3).
+  re-expl  grid-search the scale multiplier over the Eq. 7 range
+           [ (2^n-1)/(2^{n+r}-1), (2^n-1)/(2^{n-r}-1) ] with the chosen
+           BCchoice fixed ("stretch the axis like a spring").
+  solve    run the GPTQ solver against the final per-row float levels.
+  fuse     collapse both steps into pure binary coding (Eq. 11):
+           alpha_i = S'*e_i/2, beta = S'*(m - off) + center; pack sign
+           bitplanes -> QuantizedTensor.
+
+Scoring uses per-row histograms of the int-domain weights (sufficient
+statistics s0/s1/s2 per bin), which turns candidate search into two
+(N, bins) @ (bins, n_candidates) matmuls; `exact=True` scores elementwise
+instead (tests / tiny layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binary_coding import (choice_levels_int,
+                                      enumerate_bc_choices, sign_combos)
+from repro.core.gptq import gptq_solve
+from repro.core.rtn import row_grid
+from repro.quant.packing import pack_signs
+from repro.quant.qlinear import QuantizedTensor
+
+HIST_BINS_PER_LEVEL = 8
+
+
+@dataclass
+class GPTQTResult:
+    qt: QuantizedTensor          # packed representation (layer layout K,N)
+    wq_t: jnp.ndarray            # dequantized (N, K) fp32 (GPTQ orientation)
+    levels: jnp.ndarray          # (N, 2^k) final float levels
+    choice_e: jnp.ndarray        # (N, k) chosen e_i
+    choice_j: jnp.ndarray        # (N,) chosen offset j
+    scale: jnp.ndarray           # (N,) re-explored scale S'
+    center: jnp.ndarray          # (N,) row centers
+    mult: jnp.ndarray            # (N,) selected scale multiplier
+
+
+def _row_hist_stats(Wn, hd, n_levels, bins):
+    """Wn (N, K) int-domain weights; hd (K,) diag-H weights.
+    -> s0, s1, s2 (N, bins), bin centers (bins,)."""
+    N, K = Wn.shape
+    lo, hi = -0.5, n_levels - 0.5
+    width = (hi - lo) / bins
+    idx = jnp.clip(((Wn - lo) / width).astype(jnp.int32), 0, bins - 1)
+    flat = (jnp.arange(N)[:, None] * bins + idx).reshape(-1)
+    w = jnp.broadcast_to(hd[None, :], (N, K)).reshape(-1)
+    x = Wn.reshape(-1)
+    s0 = jax.ops.segment_sum(w, flat, N * bins).reshape(N, bins)
+    s1 = jax.ops.segment_sum(w * x, flat, N * bins).reshape(N, bins)
+    s2 = jax.ops.segment_sum(w * x * x, flat, N * bins).reshape(N, bins)
+    centers = lo + (jnp.arange(bins) + 0.5) * width
+    return s0, s1, s2, centers
+
+
+def _score_candidates_hist(s0, s1, s2, centers, cand_levels):
+    """cand_levels (C, L) int-domain (any order). Returns scores (N, C)."""
+    sorted_lv = jnp.sort(cand_levels, axis=1)            # (C, L)
+    mids = (sorted_lv[:, 1:] + sorted_lv[:, :-1]) / 2.0  # (C, L-1)
+    # nearest level value per (candidate, bin)
+    idx = jnp.sum(centers[None, :, None] > mids[:, None, :], axis=-1)  # (C,B)
+    V = jnp.take_along_axis(sorted_lv, idx, axis=1)      # (C, B)
+    # err(N,C) = sum_b s2 - 2 V s1 + V^2 s0
+    const = jnp.sum(s2, axis=1, keepdims=True)           # (N, 1)
+    return const - 2.0 * (s1 @ V.T) + (s0 @ (V * V).T)
+
+
+def _score_candidates_exact(Wn, hd, cand_levels):
+    """Elementwise scoring. Wn (N,K); cand_levels (C,L) -> (N, C)."""
+    def one(lv):
+        d = jnp.min(jnp.abs(Wn[..., None] - lv[None, None, :]), axis=-1)
+        return jnp.sum(d * d * hd[None, :], axis=1)
+    return jax.lax.map(one, cand_levels).T               # (N, C)
+
+
+def _mult_grid(reexplore_range: int, n: int, points: int):
+    if reexplore_range <= 0:
+        return jnp.ones((1,), jnp.float32)
+    top = 2.0 ** n - 1.0
+    lo = top / (2.0 ** (n + reexplore_range) - 1.0)
+    hi = top / (2.0 ** (n - reexplore_range) - 1.0)
+    return jnp.exp(jnp.linspace(jnp.log(lo), jnp.log(hi), points)).astype(jnp.float32)
+
+
+def gptqt_quantize(Wt, H, *, bits=3, intermediate_bits=5,
+                   reexplore_range=1, reexplore_points=33,
+                   max_candidates=4096, exact=False, percdamp=0.01,
+                   actorder=True, orig_dtype="bfloat16") -> GPTQTResult:
+    """Wt (N_out, K_in) fp32; H (K, K). Full GPTQT pipeline."""
+    Wt = Wt.astype(jnp.float32)
+    N, K = Wt.shape
+    n, k = intermediate_bits, bits
+    n_levels = 2 ** n
+    hd = jnp.clip(jnp.diag(H.astype(jnp.float32)), 1e-12, None)
+
+    # ---- step 1: linear grid ----
+    S0, center = row_grid(Wt, n)
+
+    # ---- step 2: BCchoice search at S0 ----
+    E, J = enumerate_bc_choices(n, k, max_candidates=max_candidates)
+    cand_levels = choice_levels_int(E, J, k)             # (C, 2^k)
+    Wn = (Wt - center[:, None]) / S0[:, None] + (n_levels - 1) / 2.0
+    if exact:
+        scores = _score_candidates_exact(Wn, hd, cand_levels)
+    else:
+        bins = HIST_BINS_PER_LEVEL * n_levels
+        s0, s1, s2, centers = _row_hist_stats(Wn, hd, n_levels, bins)
+        scores = _score_candidates_hist(s0, s1, s2, centers, cand_levels)
+    best = jnp.argmin(scores, axis=1)                    # (N,)
+    ce, cj = E[best], J[best]                            # (N,k), (N,)
+
+    # ---- re-explore scale (Eq. 7), choice fixed ----
+    mults = _mult_grid(reexplore_range, n, reexplore_points)
+    combos = jnp.asarray(sign_combos(k))                 # (L, k)
+    off = (n_levels - 1) / 2.0
+    # int-domain levels per row: (N, L)
+    row_levels_int = cj[:, None] + (jnp.sum(ce, 1)[:, None] + ce @ combos.T) / 2.0
+    sorted_rl = jnp.sort(row_levels_int, axis=1)
+    mids = (sorted_rl[:, 1:] + sorted_rl[:, :-1]) / 2.0
+
+    def mult_err(m):
+        Wm = (Wt - center[:, None]) / (S0 * m)[:, None] + off
+        idx = jnp.sum(Wm[:, :, None] > mids[:, None, :], axis=-1)
+        q = jnp.take_along_axis(sorted_rl, idx.reshape(N, -1), axis=1).reshape(N, K)
+        d = (Wm - q) * (S0 * m)[:, None]                 # back to float domain
+        return jnp.sum(d * d * hd[None, :], axis=1)      # (N,)
+
+    errs = jax.lax.map(mult_err, mults)                  # (M, N)
+    mi = jnp.argmin(errs, axis=0)                        # (N,)
+    mult = mults[mi]
+    S = S0 * mult                                        # (N,)
+
+    # ---- final float levels, computed EXACTLY as fused dequant does ----
+    alphas = (ce / 2.0) * S[:, None]                     # (N, k)
+    beta = (cj + jnp.sum(ce, 1) / 2.0 - off) * S + center  # (N,)
+    levels = beta[:, None] + alphas @ combos.T           # (N, 2^k), combo order
+
+    # ---- GPTQ solve against the fused grid ----
+    wq_t, idx = gptq_solve(Wt, H, levels, percdamp=percdamp, actorder=actorder)
+
+    # ---- pack: combo index IS the sign pattern ----
+    signs = ((idx[:, :, None] >> jnp.arange(k)[None, None, :]) & 1) > 0  # (N,K,k)
+    signs = jnp.transpose(signs, (2, 1, 0))              # (k, K, N)
+    codes = pack_signs(signs)
+    qt = QuantizedTensor(
+        codes=codes,                 # (k, ceil(K/32), N)
+        alphas=alphas[None],         # (G=1, N, k)
+        betas=beta[None],            # (G=1, N)
+        k_in=K, orig_dtype=orig_dtype)
+    return GPTQTResult(qt=qt, wq_t=wq_t, levels=levels, choice_e=ce,
+                       choice_j=cj, scale=S, center=center, mult=mult)

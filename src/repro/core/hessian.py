@@ -1,0 +1,32 @@
+"""Calibration Hessian accumulation: H = 2 X X^T (paper Eq. 1 context).
+
+X is the layer *input* matrix; rows of W are quantized independently so a
+single (K, K) Hessian serves all output channels. Accumulated in fp32,
+averaged over samples (scale cancels in the solver except through the
+relative damping, matching the GPTQ reference implementation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hessian_from_inputs(xs):
+    """xs: list of (T_i, K) activation matrices -> (H (K,K) fp32, n)."""
+    K = xs[0].shape[-1]
+    H = jnp.zeros((K, K), jnp.float32)
+    n = 0
+    for x in xs:
+        x = x.reshape(-1, K).astype(jnp.float32)
+        H = H + 2.0 * (x.T @ x)
+        n += x.shape[0]
+    return H / max(n, 1), n
+
+
+def damp(H, percdamp: float = 0.01):
+    """GPTQ-style damping + dead-column handling. Returns (H, dead mask)."""
+    diag = jnp.diag(H)
+    dead = diag <= 0.0
+    H = H + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    lam = percdamp * jnp.mean(jnp.where(dead, 0.0, diag))
+    H = H + lam * jnp.eye(H.shape[0], dtype=H.dtype)
+    return H, dead

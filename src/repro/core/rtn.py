@@ -1,0 +1,59 @@
+"""Round-to-nearest (RTN) linear quantization + min-MSE clip search.
+
+Grid convention (shared across the project): per output channel r,
+    level(c) = S_r * (c - off) + center_r,  c in {0 .. 2^n - 1},
+    off = (2^n - 1) / 2,  center_r = (Wmax_r + Wmin_r) / 2,
+    S_r = (Wmax_r - Wmin_r) / (2^n - 1).
+This is the paper's asymmetric grid written in centered form, so that
+re-exploring S (Eq. 7) stretches the axis symmetrically about the row's
+center ("like a spring", Fig. 2).
+
+All functions take W_t of shape (N_rows=out, K_cols=in).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def row_grid(Wt, bits: int, clip: float = 1.0):
+    """Per-row (scale, center). clip < 1 shrinks the covered range."""
+    wmax = jnp.max(Wt, axis=1)
+    wmin = jnp.min(Wt, axis=1)
+    center = (wmax + wmin) / 2.0
+    S = clip * (wmax - wmin) / (2.0 ** bits - 1.0)
+    S = jnp.maximum(S, 1e-12)
+    return S.astype(jnp.float32), center.astype(jnp.float32)
+
+
+def linear_levels(S, center, bits: int):
+    """(N,) grids -> (N, 2^n) float level values."""
+    n_levels = int(2 ** bits)
+    off = (n_levels - 1) / 2.0
+    c = jnp.arange(n_levels, dtype=jnp.float32) - off
+    return S[:, None] * c[None, :] + center[:, None]
+
+
+def quantize_rtn(Wt, bits: int, clip: float = 1.0):
+    """-> (Wq, int codes) with the row grid above."""
+    S, center = row_grid(Wt, bits, clip)
+    off = (2.0 ** bits - 1.0) / 2.0
+    q = jnp.round((Wt - center[:, None]) / S[:, None] + off)
+    q = jnp.clip(q, 0, 2 ** bits - 1)
+    wq = S[:, None] * (q - off) + center[:, None]
+    return wq.astype(jnp.float32), q.astype(jnp.int32)
+
+
+def minmse_grid(Wt, bits: int, n_grid: int = 32, lo: float = 0.4):
+    """GPTQ(min MSE) baseline (Tab. V): per-row clip ratio minimizing the
+    plain weight MSE. Returns (S, center) of the winning clipped grid."""
+    ratios = jnp.linspace(lo, 1.0, n_grid)
+
+    def err_for(r):
+        wq, _ = quantize_rtn(Wt, bits, clip=float(r))
+        return jnp.sum((wq - Wt) ** 2, axis=1)
+
+    errs = jnp.stack([err_for(r) for r in ratios])      # (G, N)
+    best = jnp.argmin(errs, axis=0)                     # (N,)
+    best_ratio = ratios[best]
+    S, center = row_grid(Wt, bits)
+    return (S * best_ratio).astype(jnp.float32), center

@@ -1,0 +1,5 @@
+from repro.data.corpus import (ByteTokenizer, batches, calibration_slices,
+                               eval_batches, generate_corpus, token_stream)
+
+__all__ = ["ByteTokenizer", "generate_corpus", "token_stream",
+           "calibration_slices", "batches", "eval_batches"]

@@ -1,0 +1,28 @@
+"""Perplexity evaluation (the paper's metric for every results table)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import forward
+
+
+def perplexity(cfg, params, batch_iter, *, max_batches=None) -> float:
+    """Token-level perplexity over deterministic eval windows."""
+    fwd = jax.jit(lambda p, x: forward(cfg, p, x)[0])
+    total_nll, total_tok = 0.0, 0
+    for bi, batch in enumerate(batch_iter):
+        if max_batches is not None and bi >= max_batches:
+            break
+        logits = fwd(params, jnp.asarray(batch["inputs"]))
+        logits = logits.astype(jnp.float32)
+        labels = jnp.asarray(batch["labels"])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        nll = lse - gold
+        total_nll += float(jnp.sum(nll))
+        total_tok += int(np.prod(labels.shape))
+    return math.exp(total_nll / max(total_tok, 1))

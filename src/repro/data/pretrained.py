@@ -1,0 +1,51 @@
+"""Train-once cache of tiny LMs for the perplexity reproduction.
+
+The paper quantizes pretrained OPT/Llama2/Bloom checkpoints; offline we
+train small LMs on the synthetic corpora (DESIGN.md §6.2) and cache the
+weights under artifacts/models/<name>/ so every benchmark and example
+reuses the same checkpoint.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.corpus import batches, token_stream
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+ROOT = Path(__file__).resolve().parents[3]
+MODELS_DIR = ROOT / "artifacts" / "models"
+
+
+def get_trained_lm(name: str = "tiny-lm", *, corpus: str = "wiki",
+                   steps: int = 300, batch: int = 12, seq: int = 192,
+                   lr: float = 1.5e-3, force: bool = False):
+    """Returns (cfg, params). Trains + caches on first call."""
+    cfg = get_config(name).replace(dtype="float32", remat="none")
+    ckpt_dir = MODELS_DIR / f"{name}-{corpus}-s{steps}"
+    toks = token_stream(corpus, 400_000)
+    data = batches(toks, batch, seq, seed=0)
+    tr = Trainer(
+        cfg,
+        TrainerConfig(steps=steps, ckpt_every=max(steps // 3, 50),
+                      ckpt_dir=str(ckpt_dir), log_every=50, warmup=30,
+                      opt=AdamWConfig(lr=lr, weight_decay=0.01,
+                                      master_fp32=False)),
+        data, dtype="float32")
+    if not force and tr.ckpt.latest_step() == steps:
+        tr.try_resume()
+        return cfg, tr.params
+    print(f"[pretrained] training {name} on {corpus} for {steps} steps ...")
+    tr.run()
+    return cfg, tr.params
+
+
+def corpus_tokens(corpus: str = "wiki", n_chars: int = 400_000,
+                  split: str = "eval"):
+    """Train/eval split of a corpus token stream (eval = disjoint tail)."""
+    toks = token_stream(corpus, n_chars + 60_000, seed=0)
+    return toks[:n_chars] if split == "train" else toks[n_chars:]

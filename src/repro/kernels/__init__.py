@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical hot spot: binary-coded GEMM
+(bcq_matmul / bcq_gemv) with ops.py dispatch and ref.py oracles."""
+from repro.kernels import ops, ref
+from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
+
+__all__ = ["ops", "ref", "bcq_matmul", "bcq_gemv"]

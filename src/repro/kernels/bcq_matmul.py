@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: dequant-fused binary-coded GEMM.
+
+Computes y = x @ W where W[k, n] = sum_i alphas[n, i] * s_i[k, n] + betas[n]
+and the sign bitplanes s_i are packed 32-per-uint32 along K. The packed
+codes (bits/16 of the bf16 bytes at 3-bit) stream HBM->VMEM tile by tile;
+each tile is expanded to a dense (BK, BN) weight tile *in VMEM* and fed to
+the MXU as one bf16 GEMM — the TPU-native replacement for GPU LUT-GEMM
+(DESIGN.md §2). Accumulation over the K grid axis happens in an fp32 VMEM
+scratch accumulator.
+
+Layout notes (TPU-friendly):
+  x       (M, K)            -> blocks (BM, BK)
+  codes   (bits, K/32, N)   -> blocks (bits, BK/32, BN); K is the
+                               second-minor dim so unpacking expands
+                               sublanes, keeping N on the 128-wide lane dim
+  alphas  (1, N, bits)      -> (1, BN, bits)  [per-output-channel, G=1]
+  betas   (1, N)            -> (1, BN)
+All MXU dims (BM, BN, BK) default to multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
+            bits: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = codes_ref[...]                               # (bits, BK/32, BN)
+    bk32, bn = codes.shape[1], codes.shape[2]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint32, (1, 1, WORD, 1), 2)                  # (1,1,32,1)
+    planes = (codes[:, :, None, :] >> shifts) & jnp.uint32(1)
+    planes = planes.reshape(bits, bk32 * WORD, bn).astype(jnp.float32)
+    signs = 2.0 * planes - 1.0                           # (bits, BK, BN)
+
+    w = jnp.broadcast_to(beta_ref[0][None, :], signs.shape[1:]).astype(jnp.float32)
+    for i in range(bits):                                # static unroll
+        w = w + alpha_ref[0, :, i][None, :] * signs[i]
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w.astype(x_ref.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
+               block_k=256, interpret=False):
+    """x (M, K) with K % 32 == 0; codes (bits, K/32, N); alphas (1, N, bits);
+    betas (1, N). Returns (M, N) in x.dtype. Pads M/N/K to block multiples.
+    """
+    M, K = x.shape
+    bits, KW, N = codes.shape
+    assert KW * WORD == K, (K, KW)
+    assert alphas.shape == (1, N, bits), alphas.shape
+    assert betas.shape == (1, N), betas.shape
+
+    bm = min(block_m, max(8, M))
+    Mp = -(-M // bm) * bm
+    Np = -(-N // block_n) * block_n
+    Kp = -(-K // block_k) * block_k
+    if Mp != M or Kp != K:
+        x = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    if Np != N or Kp != K:
+        codes = jnp.pad(codes, ((0, 0), (0, (Kp - K) // WORD), (0, Np - N)))
+        alphas = jnp.pad(alphas, ((0, 0), (0, Np - N), (0, 0)))
+        betas = jnp.pad(betas, ((0, 0), (0, Np - N)))
+
+    nk = Kp // block_k
+    grid = (Mp // bm, Np // block_n, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bits, block_k // WORD, block_n),
+                         lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((1, block_n, bits), lambda i, j, k: (0, j, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, codes, alphas, betas)
+    return out[:M, :N]
+
+
+def bcq_gemv(x, codes, alphas, betas, *, block_n=512, block_k=512,
+             interpret=False):
+    """Decode-shaped variant: tiny M (1..8 rows). Pads M to the 8-sublane
+    tile and uses wider N/K blocks (the op is bandwidth-bound: the packed
+    codes dominate bytes; x and y are negligible)."""
+    return bcq_matmul(x, codes, alphas, betas, block_m=8,
+                      block_n=block_n, block_k=block_k, interpret=interpret)

@@ -1,0 +1,57 @@
+"""jit'd wrappers + dispatch for the binary-coded GEMM.
+
+`bcq_apply(x, qt)` is what `layers.linear` calls for QuantizedTensor
+weights: it picks the Pallas kernel on TPU (or when FORCE_PALLAS is set,
+running interpret=True off-TPU for tests) and the pure-jnp reference
+otherwise. Expert stacks (leading dims) and grouped scales fall back to
+the reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
+from repro.quant.packing import WORD
+
+# None = auto (use Pallas iff backend is TPU). Tests/benches may override.
+FORCE_PALLAS: bool | None = None
+
+
+def _use_pallas() -> bool:
+    if FORCE_PALLAS is not None:
+        return FORCE_PALLAS
+    return jax.default_backend() == "tpu"
+
+
+def bcq_apply(x, qt):
+    """x (..., k_in) @ QuantizedTensor -> (..., n_out)."""
+    lead = qt.codes.shape[:-3]
+    if lead:                      # expert/group stacks: reference path
+        w = _dequant_nd(qt, x.dtype)
+        return jnp.einsum("...k,...kn->...n", x, w)
+    if qt.alphas.shape[-3] != 1 or not _use_pallas():
+        w = ref.dequant_ref(qt.codes, qt.alphas, qt.betas, qt.k_in,
+                            dtype=x.dtype)
+        return jnp.einsum("...k,kn->...n", x, w)
+
+    interpret = jax.default_backend() != "tpu"
+    xm = x.reshape(-1, qt.k_in)
+    kp = qt.codes.shape[-2] * WORD
+    if kp != qt.k_in:
+        xm = jnp.pad(xm, ((0, 0), (0, kp - qt.k_in)))
+    fn = bcq_gemv if xm.shape[0] <= 8 else bcq_matmul
+    y = fn(xm, qt.codes, qt.alphas, qt.betas, interpret=interpret)
+    return y.reshape(*x.shape[:-1], qt.n_out)
+
+
+def _dequant_nd(qt, dtype):
+    """Dequantize with arbitrary leading dims (expert/group stacks)."""
+    lead = qt.codes.shape[:-3]
+    codes = qt.codes.reshape(-1, *qt.codes.shape[-3:])
+    alphas = qt.alphas.reshape(-1, *qt.alphas.shape[-3:])
+    betas = qt.betas.reshape(-1, *qt.betas.shape[-2:])
+    ws = jax.vmap(lambda c, a, b: ref.dequant_ref(c, a, b, qt.k_in, dtype))(
+        codes, alphas, betas)
+    return ws.reshape(*lead, qt.k_in, qt.n_out)

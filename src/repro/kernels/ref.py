@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the binary-coded GEMM kernels.
+
+`bcq_matmul_ref` is the correctness reference (dequantize, then matmul).
+`bcq_matmul_bitplane_ref` is the GPU-LUT-GEMM-style reassociation
+    y = sum_i alpha_i * (x @ S_i) + (sum_k x) * beta
+— mathematically identical, but it costs `bits` MXU passes instead of
+one; we keep it to *demonstrate* why the TPU adaptation fuses dequant
+into a single GEMM instead (see DESIGN.md §2 and benchmarks/table4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.packing import unpack_signs
+
+
+def dequant_ref(codes, alphas, betas, k_in: int, dtype=jnp.float32):
+    """codes (bits, K/32, N) u32; alphas (G, N, bits); betas (G, N)
+    -> W (k_in, N)."""
+    signs = unpack_signs(codes, k_in)                    # (bits, K, N)
+    G = alphas.shape[0]
+    glen = -(-k_in // G)
+    a = jnp.repeat(alphas, glen, axis=0)[:k_in]          # (K, N, bits)
+    b = jnp.repeat(betas, glen, axis=0)[:k_in]           # (K, N)
+    w = jnp.einsum("ikn,kni->kn", signs, a) + b
+    return w.astype(dtype)
+
+
+def bcq_matmul_ref(x, codes, alphas, betas, k_in: int):
+    """x (..., k_in) -> (..., N)."""
+    w = dequant_ref(codes, alphas, betas, k_in, dtype=jnp.float32)
+    return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def bcq_matmul_bitplane_ref(x, codes, alphas, betas, k_in: int):
+    """Per-bitplane reassociation (G=1 only)."""
+    assert alphas.shape[0] == 1
+    signs = unpack_signs(codes, k_in)                    # (bits, K, N)
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((*x.shape[:-1], codes.shape[-1]), jnp.float32)
+    for i in range(codes.shape[0]):
+        acc = acc + alphas[0, :, i] * jnp.einsum("...k,kn->...n", xf, signs[i])
+    acc = acc + jnp.sum(xf, axis=-1, keepdims=True) * betas[0]
+    return acc.astype(x.dtype)

@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, record memory/cost/collective
+analysis for the roofline report.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --arch jamba-1.5-large-398b --shape decode_32k --quant 3
+
+Artifacts: artifacts/dryrun/{arch}__{shape}__{mesh}[__w{bits}].json
+
+NOTE: the XLA_FLAGS assignment below MUST run before any jax import —
+jax locks the device count on first initialization.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ASSIGNED, get_config, runnable_shapes
+from repro.dist.context import mesh_context
+from repro.dist.sharding import (cache_shardings, inputs_shardings,
+                                 last_logits_sharding, opt_state_shardings,
+                                 params_shardings, batch_pspec)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import decode_step, init_cache, init_params, prefill
+from repro.quant.abstract import packed_param_bytes, quantize_params_abstract
+from repro.roofline.analysis import (model_flops, parse_collectives,
+                                     roofline_terms)
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+class CollStub:
+    """CollectiveStats-shaped container for extrapolated probe results."""
+
+    def __init__(self, wire_bytes, by_op, count, top=None):
+        self.total_wire_bytes = wire_bytes
+        self.by_op = by_op
+        self.count = count
+        self.top = top or []
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape_spec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.embed_input == "tokens":
+        inputs = sds((B, S), jnp.int32)
+    else:
+        inputs = sds((B, S, cfg.d_model), jnp.bfloat16)
+    if shape_spec.kind == "train":
+        return {"inputs": inputs, "labels": sds((B, S), jnp.int32)}
+    if shape_spec.kind == "prefill":
+        return {"inputs": inputs}
+    # decode: one new token against a cache of length S
+    return {"tokens": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)}
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg, B, S):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, dtype=jnp.bfloat16))
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+
+def lower_cell(cfg, shape_spec, mesh, quant_bits=None, microbatches=1,
+               remat=None, fsdp=True):
+    """Returns (lowered, meta). Never allocates device memory for the
+    full model (ShapeDtypeStruct only)."""
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    p_abs = abstract_params(cfg)
+    meta = {"params_bytes_bf16": packed_param_bytes(p_abs)}
+    specs = input_specs(cfg, shape_spec)
+
+    if shape_spec.kind == "train":
+        p_sh = params_shardings(cfg, p_abs, mesh, fsdp=fsdp)
+        opt_abs = jax.eval_shape(
+            functools.partial(init_train_state, cfg,
+                              opt_cfg=AdamWConfig()), p_abs)
+        o_sh = opt_state_shardings(cfg, opt_abs, mesh, fsdp=fsdp)
+        in_sh = inputs_shardings(cfg, mesh, shape_spec)
+        step = make_train_step(cfg, AdamWConfig(), microbatches=microbatches)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, in_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1))
+        lowered = fn.lower(p_abs, opt_abs, specs)
+        meta["state_bytes"] = packed_param_bytes(opt_abs)
+        return lowered, meta
+
+    # inference: optionally quantized weights
+    if quant_bits:
+        p_abs = quantize_params_abstract(cfg, p_abs, quant_bits)
+        meta["params_bytes_packed"] = packed_param_bytes(p_abs)
+    p_sh = params_shardings(cfg, p_abs, mesh, fsdp=fsdp)
+
+    if shape_spec.kind == "prefill":
+        in_sh = inputs_shardings(cfg, mesh, shape_spec)["inputs"]
+        c_abs = abstract_cache(cfg, shape_spec.global_batch,
+                               shape_spec.seq_len)
+        c_sh = cache_shardings(cfg, c_abs, mesh)
+        lg_sh = last_logits_sharding(cfg, mesh, shape_spec.global_batch)
+        fn = jax.jit(
+            functools.partial(prefill, cfg, max_len=shape_spec.seq_len),
+            in_shardings=(p_sh, in_sh),
+            out_shardings=(lg_sh, c_sh))
+        lowered = fn.lower(p_abs, specs["inputs"])
+        meta["cache_bytes"] = packed_param_bytes(c_abs)
+        return lowered, meta
+
+    # decode
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    c_abs = abstract_cache(cfg, B, S)
+    c_sh = cache_shardings(cfg, c_abs, mesh)
+    tok_sh = jax.NamedSharding(mesh, batch_pspec(mesh, B))
+    pos_sh = jax.NamedSharding(mesh, batch_pspec(mesh, B, ()))
+    lg_sh = last_logits_sharding(cfg, mesh, B)
+    fn = jax.jit(
+        functools.partial(decode_step, cfg),
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(lg_sh, c_sh),
+        donate_argnums=(1,))
+    lowered = fn.lower(p_abs, c_abs, specs["tokens"], specs["pos"])
+    meta["cache_bytes"] = packed_param_bytes(c_abs)
+    return lowered, meta
+
+
+def _probe_costs(cfg, shape_spec, mesh, groups, **kw):
+    """Compile an unrolled `groups`-group model and return flat metrics.
+    XLA cost analysis counts while-loop bodies once, so probes unroll
+    EVERY scan: the over-groups scan (n_layers = groups * pattern),
+    the attention kv-chunk scan and the mamba chunk scan (with coarser
+    chunks so the unroll stays compilable); per-step cost is then
+    base + n_groups * delta over the 2-/3-group probes."""
+    import dataclasses as _dc
+
+    from repro.models import attention as _attn
+    from repro.models import mamba as _mam
+
+    pcfg = cfg.replace(n_layers=groups * len(cfg.pattern), scan_unroll=True)
+    S = shape_spec.seq_len
+    if pcfg.mamba is not None and shape_spec.kind != "decode":
+        pcfg = pcfg.replace(mamba=_dc.replace(pcfg.mamba,
+                                              chunk=max(256, S // 8)))
+    old_kv, old_au, old_mu = _attn.KV_CHUNK, _attn.FORCE_UNROLL, _mam.FORCE_UNROLL
+    _attn.KV_CHUNK = max(1024, S // 8)
+    _attn.FORCE_UNROLL = True
+    _mam.FORCE_UNROLL = True
+    try:
+        lowered, _ = lower_cell(pcfg, shape_spec, mesh, **kw)
+        compiled = lowered.compile()
+    finally:
+        _attn.KV_CHUNK, _attn.FORCE_UNROLL = old_kv, old_au
+        _mam.FORCE_UNROLL = old_mu
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire_bytes": coll.total_wire_bytes,
+        "coll_count": coll.count,
+        "by_op": coll.by_op,
+        "top": coll.top,
+    }
+
+
+def _extrapolate(c2, c3, n_groups):
+    """Probes at 2 and 3 groups (the 1-group point sits outside the
+    linear region: the partitioner makes different global choices there).
+    delta = c3 - c2; base = c2 - 2*delta; total = base + n_groups*delta."""
+    out = {}
+    for k in ("flops", "bytes", "wire_bytes"):
+        delta = max(c3[k] - c2[k], 0.0)
+        base = max(c2[k] - 2.0 * delta, 0.0)
+        out[k] = base + n_groups * delta
+    out["coll_count_per_group"] = max(c3["coll_count"] - c2["coll_count"], 0)
+    return out
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, quant_bits=None,
+             microbatches=1, remat=None, fsdp=True, save=True, tag="",
+             probe=True):
+    cfg = get_config(arch)
+    shape_spec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = 512 if multi_pod else 256
+    t0 = time.time()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "quant_bits": quant_bits, "microbatches": microbatches,
+        "n_devices": n_dev, "ok": False,
+    }
+    kw = dict(quant_bits=quant_bits, microbatches=microbatches,
+              remat=remat, fsdp=fsdp)
+    try:
+        with mesh_context(mesh):
+            # (a) full-depth scanned model: the compile-validation +
+            # memory-analysis artifact.
+            lowered, meta = lower_cell(cfg, shape_spec, mesh, **kw)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = parse_collectives(compiled.as_text())
+            # (b, c) unrolled probes for trip-count-correct costs
+            if probe:
+                c2 = _probe_costs(cfg, shape_spec, mesh, 2, **kw)
+                c3 = _probe_costs(cfg, shape_spec, mesh, 3, **kw)
+                ex = _extrapolate(c2, c3, cfg.n_groups)
+                cost = {"flops": ex["flops"], "bytes accessed": ex["bytes"]}
+                coll = CollStub(ex["wire_bytes"],
+                                {"probe_2g": c2["by_op"],
+                                 "probe_3g": c3["by_op"]},
+                                c3["coll_count"], top=c3.get("top"))
+        result.update(meta)
+        result.update({
+            "ok": True,
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "probe": probe,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_live_bytes_est": (mem.argument_size_in_bytes
+                                        + mem.output_size_in_bytes
+                                        + mem.temp_size_in_bytes
+                                        - mem.alias_size_in_bytes),
+            },
+            "collectives": {"wire_bytes": coll.total_wire_bytes,
+                            "count": coll.count, "by_op": coll.by_op,
+                            "top": [(f"{b:.3e}", op, ln)
+                                    for b, op, ln in coll.top]},
+            "roofline": roofline_terms(cost or {}, coll),
+            "model_flops_global": model_flops(cfg, shape_spec),
+        })
+        r = result["roofline"]
+        mf_dev = result["model_flops_global"] / n_dev
+        r["model_flops_per_device"] = mf_dev
+        r["useful_flops_ratio"] = (mf_dev / r["flops_per_device"]
+                                   if r["flops_per_device"] else 0.0)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        q = f"__w{quant_bits}" if quant_bits else ""
+        tg = f"__{tag}" if tag else ""
+        out = ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}{q}{tg}.json"
+        out.write_text(json.dumps(result, indent=1, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--quant", type=int, default=None,
+                    help="GPTQT weight bits for inference cells")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the cost-extrapolation probes (compile "
+                         "validation only; multipod sweeps use this: the "
+                         "roofline table is single-pod per the spec)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, cfg in ASSIGNED.items():
+            for s in runnable_shapes(cfg):
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch, shape in cells:
+        r = run_cell(arch, shape, multi_pod=args.multipod,
+                     quant_bits=args.quant, microbatches=args.microbatches,
+                     remat=args.remat, fsdp=not args.no_fsdp, tag=args.tag,
+                     probe=not args.no_probe)
+        status = "OK " if r["ok"] else "FAIL"
+        extra = ""
+        if r["ok"]:
+            rf = r["roofline"]
+            extra = (f"bound={rf['bound']:10s} "
+                     f"tC={rf['t_compute_s']:.3e} tM={rf['t_memory_s']:.3e} "
+                     f"tX={rf['t_collective_s']:.3e} "
+                     f"compile={r['t_compile_s']:.1f}s")
+            n_ok += 1
+        else:
+            extra = r["error"][:160]
+        print(f"[{status}] {arch:26s} {shape:12s} {r['mesh']:8s} {extra}",
+              flush=True)
+    print(f"{n_ok}/{len(cells)} cells OK")
+    return 0 if n_ok == len(cells) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Production mesh construction. A FUNCTION (not module-level state) so
+importing this module never touches jax device initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+    Axes: data = FSDP/ZeRO + batch, model = TP/EP, pod = pure DP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-process CPU mesh for tests/examples (1 device)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

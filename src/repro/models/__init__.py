@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, loss_fn, prefill)
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "init_cache",
+           "decode_step"]

@@ -1,0 +1,209 @@
+"""Attention: GQA with qk-norm / sliding window / softcap, memory-bounded
+chunked ("flash-style") full-sequence path, and single-token decode with a
+KV cache (rolling buffer for sliding-window layers).
+
+Shapes: activations (B, S, D); q/k/v (B, S, H, hd); caches (B, H, S, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear, rmsnorm, rope, softcap
+
+NEG_INF = -1e30
+# full-sequence attention switches to the chunked path above this length
+CHUNKED_THRESHOLD = 2048
+KV_CHUNK = 1024
+# dry-run cost probes set this: XLA cost analysis counts while-loop bodies
+# once, so probes unroll the kv-chunk scan (with coarser chunks)
+FORCE_UNROLL = False
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_attn(cfg, key, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.zeros((hd,), dtype)
+        p["kn"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg, p, x):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(x, p["wq"])
+    k = linear(x, p["wk"])
+    v = linear(x, p["wv"])
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def _group_q(q, n_kv):
+    """(B, S, H, d) -> (B, S, Hkv, rep, d). GQA is computed in grouped
+    form — K/V are never materialized at H heads (a jnp.repeat here
+    costs rep x cache bytes AND forces SPMD reshards; see EXPERIMENTS.md
+    §Perf H1)."""
+    B, S, H, d = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, d)
+
+
+# --------------------------------------------------------------------------
+# full-sequence attention (training / prefill)
+# --------------------------------------------------------------------------
+
+def _mask_bias(sq, skv, *, causal, window, q_offset=0, dtype=jnp.float32):
+    """(sq, skv) additive bias. q position i attends kv position j iff
+    (not causal or j <= i+q_offset) and (window is None or i+q_offset-j < window)."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= (qi - kj) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def _attend_dense(q, k, v, *, causal, window, cap, scale):
+    """Direct S x S attention (small sequences / oracle). Grouped GQA;
+    v head dim may differ from q/k head dim (MLA)."""
+    B, Sq, H, hd = q.shape
+    dv = v.shape[-1]
+    qg = _group_q(q, k.shape[2])                         # (B,Sq,Hkv,r,d)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = logits + _mask_bias(Sq, k.shape[1], causal=causal, window=window)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(B, Sq, H, dv)
+
+
+def _attend_chunked(q, k, v, *, causal, window, cap, scale):
+    """Flash-style streaming over KV chunks: O(S * KV_CHUNK) live memory
+    instead of O(S^2). Running (max, denom, acc) carried through a scan."""
+    B, Sq, H, hd = q.shape
+    Skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = H // hkv
+    qg = _group_q(q, hkv)                                # (B,Sq,Hkv,r,d)
+    nc = -(-Skv // KV_CHUNK)
+    pad = nc * KV_CHUNK - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nc, KV_CHUNK, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, KV_CHUNK, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
+                            kb).astype(jnp.float32) * scale
+        logits = softcap(logits, cap)
+        kj = ci * KV_CHUNK + jnp.arange(KV_CHUNK)[None, :]
+        ok = kj < Skv
+        if causal:
+            ok = ok & (kj <= qi)
+        if window is not None:
+            ok = ok & ((qi - kj) < window)
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+        bm = jnp.maximum(m, jnp.max(logits, axis=-1))
+        r = jnp.exp(m - bm)
+        p = jnp.exp(logits - bm[..., None])
+        l = l * r + jnp.sum(p, axis=-1)
+        acc = acc * r[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (bm, l, acc), None
+
+    m0 = jnp.full((B, hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, hkv, rep, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nc), kc, vc), unroll=FORCE_UNROLL)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,hkv,r,Sq,dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def attn_forward(cfg, spec, p, x, positions):
+    """Full-sequence attention layer core (no residual/norm)."""
+    q, k, v = _project_qkv(cfg, p, x)
+    hd = cfg.resolved_head_dim
+    if cfg.mla is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = hd ** -0.5
+    S = x.shape[1]
+    fn = _attend_chunked if S > CHUNKED_THRESHOLD else _attend_dense
+    out = fn(q, k, v, causal=cfg.causal, window=spec.window,
+             cap=cfg.attn_softcap, scale=scale)
+    out = out.reshape(*x.shape[:2], cfg.n_heads * hd)
+    return linear(out, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# decode (single new token, KV cache)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, spec, batch, max_len, dtype):
+    hd = cfg.resolved_head_dim
+    S = max_len if spec.window is None else min(max_len, spec.window)
+    shape = (batch, cfg.n_kv_heads, S, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(cfg, spec, p, x, cache, pos):
+    """x: (B, 1, D); pos: (B,) int32 absolute positions. Returns (y, cache).
+    Sliding-window layers use a rolling buffer of size `window` indexed by
+    pos % window."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(cfg, p, x)          # (B,1,H,hd)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    ck, cv = cache["k"], cache["v"]
+    S = ck.shape[2]
+    slot = pos if spec.window is None else pos % spec.window
+    b_idx = jnp.arange(B)
+    # k[:, 0] is (B, Hkv, hd); write each sample's new key at its slot.
+    ck = ck.at[b_idx, :, slot].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[b_idx, :, slot].set(v[:, 0].astype(cv.dtype))
+
+    # grouped GQA against the cache (B, Hkv, S, hd): no head repeat.
+    qg = q[:, 0].reshape(B, cfg.n_kv_heads,
+                         cfg.n_heads // cfg.n_kv_heads, hd)
+    logits = jnp.einsum("bhrd,bhkd->bhrk", qg,
+                        ck.astype(q.dtype)).astype(jnp.float32) * hd ** -0.5
+    logits = softcap(logits, cfg.attn_softcap)
+    # valid slots: for global layers j <= pos; for window layers the buffer
+    # holds the last `window` positions -> slot j valid iff its absolute
+    # position <= pos, i.e. filled (pos - window < abs_j <= pos).
+    j = jnp.arange(S)[None, :]
+    if spec.window is None:
+        ok = j <= pos[:, None]
+    else:
+        ok = j < jnp.minimum(pos[:, None] + 1, spec.window)
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrk,bhkd->bhrd", w, cv.astype(q.dtype))
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    y = linear(out, p["wo"])
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,110 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions
+    broadcastable to the S axis (e.g. (S,) or (B, S))."""
+    d = x.shape[-1]
+    assert d % 2 == 0, "rope dim must be even"
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * freqs          # (S, d/2) or (B, S, d/2)
+    if x.ndim == 4:                          # (B, S, H, D): add head axis
+        angles = angles[..., None, :]
+        if angles.ndim == 3:                 # positions were (S,)
+            angles = angles[None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# Activation tap: when set (calibration), every linear() records its input
+# keyed by the weight's object id. Only used on unjitted, unrolled forwards.
+_TAP = None
+
+
+class tap_activations:
+    """with tap_activations() as rec: ... ; rec[id(w)] -> list of inputs."""
+
+    def __enter__(self):
+        global _TAP
+        self.rec = {}
+        _TAP = self.rec
+        return self.rec
+
+    def __exit__(self, *exc):
+        global _TAP
+        _TAP = None
+        return False
+
+
+def linear(x, w):
+    """Apply a (possibly quantized) weight: x (..., K) @ w (K, N)."""
+    if _TAP is not None and isinstance(w, jax.Array):
+        _TAP.setdefault(id(w), []).append(x.reshape(-1, x.shape[-1]))
+    if hasattr(w, "quantized_matmul"):           # QuantizedTensor
+        return w.quantized_matmul(x)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+def swiglu(p, x):
+    """Gated MLP: p = {wg:(D,F), wu:(D,F), wd:(F,D)}."""
+    h = jax.nn.silu(linear(x, p["wg"])) * linear(x, p["wu"])
+    return linear(h, p["wd"])
+
+
+def init_linear(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_swiglu(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": init_linear(k1, d, f, dtype),
+            "wu": init_linear(k2, d, f, dtype),
+            "wd": init_linear(k3, f, d, dtype)}
+
+
+def cross_entropy(logits, labels, *, final_cap=None, mask=None, z_loss=0.0):
+    """Mean token cross-entropy (fp32 accumulation). labels < 0 ignored.
+
+    Sharding-friendly form: the gold logit is a masked *reduction over
+    the vocab axis* (partial sums + tiny all-reduce when vocab is
+    model-sharded) rather than a take_along_axis gather, which makes
+    GSPMD all-gather the full logits; see EXPERIMENTS.md §Perf H4.
+    """
+    logits = softcap(logits, final_cap)
+    lmax = jax.lax.stop_gradient(
+        jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - lmax).astype(jnp.float32)
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    V = logits.shape[-1]
+    is_gold = jnp.arange(V) == jnp.maximum(labels, 0)[..., None]
+    gold_shifted = jnp.sum(jnp.where(is_gold, shifted, 0.0), axis=-1)
+    nll = jnp.log(sumexp) - gold_shifted
+    if z_loss:
+        lse = jnp.log(sumexp) + lmax[..., 0].astype(jnp.float32)
+        nll = nll + z_loss * lse ** 2
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & mask
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

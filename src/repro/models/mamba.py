@@ -1,0 +1,156 @@
+"""Mamba-1 (S6) block: causal depthwise conv + selective SSM scan.
+
+The training/prefill path uses a *chunked* selective scan: the sequence is
+split into chunks of `cfg.mamba.chunk`; within a chunk the first-order
+recurrence is computed with an associative scan, across chunks a lax.scan
+carries the (d_inner, d_state) boundary state. Live memory is
+O(B * chunk * d_inner * d_state) instead of O(B * L * d_inner * d_state),
+which is what makes the 500k-token cells fit. A = -exp(A_log) is diagonal
+and negative, so per-step decays exp(dt*A) are in (0, 1] and cumulative
+products are numerically stable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+# see attention.FORCE_UNROLL — set by dry-run cost probes
+FORCE_UNROLL = False
+
+
+def init_mamba(cfg, key, dtype):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 5)
+    p = {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, di), jnp.float32)
+                   * mc.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * mc.d_state, dtype),
+        "dt_w": init_linear(ks[3], dtr, di, dtype),
+        # bias init so softplus(dt_bias) ~ [1e-3, 1e-1] (mamba default)
+        "dt_b": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))
+        ).astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(jax.random.fold_in(key, 9), di, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shift-add. x: (B, L, di); w: (K, di)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        sh = K - 1 - i
+        xi = x if sh == 0 else jnp.pad(x, ((0, 0), (sh, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _ssm_features(cfg, p, xc):
+    """xc: (B, L, di) post-conv+silu -> dt (B,L,di), Bm/Cm (B,L,ds)."""
+    mc = cfg.mamba
+    dtr = mc.resolved_dt_rank(cfg.d_model)
+    feats = linear(xc, p["x_proj"])
+    dt_r, Bm, Cm = jnp.split(feats, [dtr, dtr + mc.d_state], axis=-1)
+    dt = linear(dt_r, p["dt_w"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_b"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _scan_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan(x, dt, A, Bm, Cm, h0, chunk):
+    """Chunked selective scan.
+    x, dt: (B, L, di) fp32; A: (di, ds); Bm, Cm: (B, L, ds); h0: (B, di, ds).
+    Returns y (B, L, di), hN (B, di, ds)."""
+    Bsz, L, di = x.shape
+    ds = A.shape[1]
+    nc = -(-L // chunk)
+    pad = nc * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    # chunk-major xs for lax.scan
+    def cm(t):  # (B, L', ...) -> (nc, B, chunk, ...)
+        return t.reshape(Bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xs = (cm(x), cm(dt), cm(Bm), cm(Cm))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp                       # (B, ck, ...)
+        la = dtc[..., None] * A                     # (B, ck, di, ds), <= 0
+        a = jnp.exp(la)
+        b = (dtc * xc)[..., None] * Bc[:, :, None, :]
+        aprod, bsum = jax.lax.associative_scan(_scan_combine, (a, b), axis=1)
+        hseq = aprod * h[:, None] + bsum            # (B, ck, di, ds)
+        y = jnp.einsum("bkds,bks->bkd", hseq, Cc)
+        return hseq[:, -1], y
+
+    hN, ys = jax.lax.scan(chunk_step, h0, xs, unroll=FORCE_UNROLL)
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * chunk, di)[:, :L]
+    return y, hN
+
+
+def mamba_forward(cfg, p, x, *, state=None, return_state=False):
+    """Full-sequence mamba block core. x: (B, L, D)."""
+    mc = cfg.mamba
+    di = cfg.d_inner
+    xz = linear(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, Bm, Cm = _ssm_features(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((x.shape[0], di, mc.d_state), jnp.float32) if state is None else state
+    y, hN = selective_scan(xc.astype(jnp.float32), dt, A, Bm, Cm, h0, mc.chunk)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    if return_state:
+        # conv tail: last (d_conv-1) post-in_proj inputs for decode continuity
+        tail = xi[:, -(mc.d_conv - 1):]
+        return out, {"ssm": hN, "conv": tail}
+    return out
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    mc = cfg.mamba
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(cfg, p, x, cache):
+    """Single-token step. x: (B, 1, D); cache {ssm, conv}."""
+    mc = cfg.mamba
+    xz = linear(x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                 # (B, 1, di)
+    win = jnp.concatenate([cache["conv"], xi], axis=1)  # (B, d_conv, di)
+    xc = jnp.einsum("bkd,kd->bd", win, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))[:, None]  # (B,1,di)
+    dt, Bm, Cm = _ssm_features(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                # (B, di, ds)
+    b = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * cache["ssm"] + b
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])
+    y = y + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype)[:, None] * jax.nn.silu(z)
+    out = linear(y, p["out_proj"])
+    return out, {"ssm": h, "conv": win[:, 1:]}

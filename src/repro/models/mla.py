@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+KV is compressed to a per-position latent c_kv (kv_lora_rank) plus a
+shared rotary key k_pe (qk_rope_head_dim); the decode cache stores only
+(latent, k_pe) — a large KV-memory reduction that compounds with GPTQT
+weight quantization in the decode roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear, rmsnorm, rope, softcap
+
+NEG_INF = -1e30
+
+
+def init_mla(cfg, key, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_a_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, H * qk_hd, dtype),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _queries(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qa = rmsnorm(linear(x, p["wq_a"]), p["q_a_norm"], cfg.norm_eps)
+    q = linear(qa, p["wq_b"])
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latent(cfg, p, x, positions):
+    m = cfg.mla
+    kv = linear(x, p["wkv_a"])
+    c_kv, k_pe = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    k_pe = rope(k_pe, positions, cfg.rope_theta)   # (B, S, rope_hd), shared
+    return c_kv, k_pe
+
+
+def _expand_kv(cfg, p, c_kv):
+    m = cfg.mla
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    kvb = linear(c_kv, p["wkv_b"])
+    kvb = kvb.reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    return k_nope, v
+
+
+def mla_forward(cfg, spec, p, x, positions):
+    """Full-sequence MLA. For long sequences the score computation is
+    routed through the shared chunked flash path using the concatenation
+    identity [q_nope||q_pe]·[k_nope||k_pe] = q_nope·k_nope + q_pe·k_pe
+    (k_pe broadcast across heads), so no S x S tensor is materialized."""
+    from repro.models import attention as attn_mod
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_pe = _queries(cfg, p, x, positions)
+    c_kv, k_pe = _latent(cfg, p, x, positions)
+    k_nope, v = _expand_kv(cfg, p, c_kv)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_cat = jnp.concatenate([q_nope, q_pe], axis=-1)     # (B,S,H,dn+dr)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    fn = (attn_mod._attend_chunked if S > attn_mod.CHUNKED_THRESHOLD
+          else attn_mod._attend_dense)
+    out = fn(q_cat, k_cat, v, causal=cfg.causal, window=spec.window,
+             cap=cfg.attn_softcap, scale=scale)          # (B,S,H,dv)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return linear(out, p["wo"])
+
+
+def init_mla_cache(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(cfg, spec, p, x, cache, pos):
+    m = cfg.mla
+    B = x.shape[0]
+    q_nope, q_pe = _queries(cfg, p, x, pos[:, None])     # (B,1,H,·)
+    c_new, kpe_new = _latent(cfg, p, x, pos[:, None])    # (B,1,·)
+    b_idx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[b_idx, pos].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_pe = cache["k_pe"].at[b_idx, pos].set(kpe_new[:, 0].astype(cache["k_pe"].dtype))
+    k_nope, v = _expand_kv(cfg, p, c_kv.astype(x.dtype))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe.astype(x.dtype)))
+    logits = logits.astype(jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    S = c_kv.shape[1]
+    ok = jnp.arange(S)[None, :] <= pos[:, None]
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    out = out.reshape(B, 1, cfg.n_heads * m.v_head_dim)
+    y = linear(out, p["wo"])
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

@@ -1,0 +1,310 @@
+"""Model assembly: composable decoder/encoder stack driven by ModelConfig.
+
+Layers are grouped into the config's repeating super-block ("pattern");
+parameters for each pattern position are stacked along a leading
+`n_groups` axis and the stack is traversed with `lax.scan`, keeping HLO
+size (and compile time) independent of depth. Activation rematerialization
+wraps the scan body (policy from cfg.remat).
+
+Public entry points:
+  init_params(cfg, key)            -> param pytree
+  forward(cfg, params, inputs)     -> (logits, aux_loss)        [train]
+  prefill(cfg, params, tokens, max_len) -> (last_logits, cache) [serve]
+  init_cache(cfg, batch, max_len)  -> cache pytree
+  decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import mla as mla_mod
+from repro.dist.context import constrain_batch
+from repro.models.layers import (cross_entropy, init_linear, init_swiglu,
+                                 linear, rmsnorm, softcap, swiglu)
+from repro.models.moe import init_moe, moe_forward
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(cfg, spec, key, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"ln": jnp.zeros((d,), dtype)}
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            p["attn"] = mla_mod.init_mla(cfg, ks[0], dtype)
+        else:
+            p["attn"] = attn.init_attn(cfg, ks[0], dtype)
+    else:
+        p["mamba"] = mam.init_mamba(cfg, ks[0], dtype)
+    if cfg.post_block_norms:
+        p["post_ln"] = jnp.zeros((d,), dtype)
+    if spec.mlp != "none":
+        p["ln2"] = jnp.zeros((d,), dtype)
+        if spec.mlp == "dense":
+            p["mlp"] = init_swiglu(ks[1], d, cfg.d_ff, dtype)
+        else:
+            p["moe"] = init_moe(cfg, ks[1], dtype)
+        if cfg.post_block_norms:
+            p["post_ln2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    d = cfg.d_model
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    params = {"final_ln": jnp.zeros((d,), dtype)}
+    if cfg.embed_input == "tokens":
+        params["embed"] = (jax.random.normal(
+            k_embed, (cfg.vocab_size, d), jnp.float32) * 0.02).astype(dtype)
+    else:  # precomputed frame/patch embeddings -> learned input projection
+        params["embed"] = init_linear(k_embed, d, d, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(k_head, d, cfg.vocab_size, dtype)
+
+    blocks = {}
+    gkeys = jax.random.split(k_blocks, cfg.n_groups)
+    for i, spec in enumerate(cfg.pattern):
+        init_one = functools.partial(_init_layer, cfg, spec, dtype=dtype)
+        blocks[f"L{i}"] = jax.vmap(init_one)(
+            jax.vmap(lambda k: jax.random.fold_in(k, i))(gkeys))
+    params["blocks"] = blocks
+    return params
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, inputs):
+    if cfg.embed_input == "tokens":
+        return jnp.take(params["embed"], inputs, axis=0)
+    return linear(inputs, params["embed"])
+
+
+def unembed(cfg, params, x):
+    """Logits in the activation dtype — the fp32 upcast happens inside
+    the loss reductions (avoids materializing fp32 (B,S,V))."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = linear(x, params["lm_head"])
+    if logits.ndim == 3:       # anchor: batch on data, vocab on model
+        logits = constrain_batch(logits, None, "model")
+    return softcap(logits, cfg.final_softcap)
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+def _apply_layer(cfg, spec, lp, x, positions, aux, *, collect_cache=False,
+                 max_len=0):
+    cache_out = None
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            if collect_cache:
+                y, cache_out = _mla_prefill(cfg, spec, lp["attn"], h,
+                                            positions, max_len)
+            else:
+                y = mla_mod.mla_forward(cfg, spec, lp["attn"], h, positions)
+        else:
+            if collect_cache:
+                y, cache_out = _attn_prefill(cfg, spec, lp["attn"], h,
+                                             positions, max_len)
+            else:
+                y = attn.attn_forward(cfg, spec, lp["attn"], h, positions)
+    else:
+        if collect_cache:
+            y, cache_out = mam.mamba_forward(cfg, lp["mamba"], h,
+                                             return_state=True)
+        else:
+            y = mam.mamba_forward(cfg, lp["mamba"], h)
+    if cfg.post_block_norms:
+        y = rmsnorm(y, lp["post_ln"], cfg.norm_eps)
+    x = x + y
+    if spec.mlp != "none":
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            y = swiglu(lp["mlp"], h)
+        else:
+            # prefill (collect_cache) uses the larger inference capacity
+            cf = (cfg.moe.inference_capacity_factor if collect_cache
+                  else cfg.moe.capacity_factor)
+            y, a = moe_forward(cfg, lp["moe"], h, capacity_factor=cf)
+            aux = aux + a
+        if cfg.post_block_norms:
+            y = rmsnorm(y, lp["post_ln2"], cfg.norm_eps)
+        x = x + y
+    return x, aux, cache_out
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save only inputs
+
+
+# --------------------------------------------------------------------------
+# training / scoring forward
+# --------------------------------------------------------------------------
+
+def forward(cfg, params, inputs, *, remat=None):
+    """inputs: tokens (B, S) int32 or frames (B, S, D). -> (logits, aux)."""
+    x = embed_inputs(cfg, params, inputs)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, gp):
+        x, aux = carry
+        x = constrain_batch(x, None, None)   # anchor: batch on data axes
+        for i, spec in enumerate(cfg.pattern):
+            x, aux, _ = _apply_layer(cfg, spec, gp[f"L{i}"], x, positions, aux)
+        x = constrain_batch(x, None, None)
+        return (x, aux), None
+
+    body = _remat(body, remat if remat is not None else cfg.remat)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return unembed(cfg, params, x), aux
+
+
+def loss_fn(cfg, params, batch, *, aux_coef=0.01, remat=None):
+    logits, aux = forward(cfg, params, batch["inputs"], remat=remat)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + aux_coef * aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def _attn_prefill(cfg, spec, p, h, positions, max_len):
+    y = attn.attn_forward(cfg, spec, p, h, positions)
+    q, k, v = attn._project_qkv(cfg, p, h)
+    k = attn.rope(k, positions, cfg.rope_theta)
+    S = h.shape[1]
+    ck = k.transpose(0, 2, 1, 3)   # (B, Hkv, S, hd)
+    cv = v.transpose(0, 2, 1, 3)
+    if spec.window is None:
+        pad = max_len - S
+        ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        w = min(spec.window, max_len)
+        lo = max(0, S - w)
+        slots = jnp.arange(lo, S) % w
+        buf_k = jnp.zeros((ck.shape[0], ck.shape[1], w, ck.shape[3]), ck.dtype)
+        buf_v = jnp.zeros_like(buf_k)
+        ck = buf_k.at[:, :, slots].set(ck[:, :, lo:])
+        cv = buf_v.at[:, :, slots].set(cv[:, :, lo:])
+    return y, {"k": ck, "v": cv}
+
+
+def _mla_prefill(cfg, spec, p, h, positions, max_len):
+    y = mla_mod.mla_forward(cfg, spec, p, h, positions)
+    c_kv, k_pe = mla_mod._latent(cfg, p, h, positions)
+    pad = max_len - h.shape[1]
+    c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+    k_pe = jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0)))
+    return y, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Cache pytree mirroring params['blocks'] layout: leaf leading dim is
+    n_groups (scanned together with the block stack)."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            if cfg.mla is not None:
+                one = mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+            else:
+                one = attn.init_kv_cache(cfg, spec, batch, max_len, dtype)
+        else:
+            one = mam.init_mamba_cache(cfg, batch, dtype)
+        cache[f"L{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one)
+    return cache
+
+
+def prefill(cfg, params, tokens, max_len, *, remat="none"):
+    """Run the prompt, return (last-position logits, filled cache)."""
+    x = embed_inputs(cfg, params, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, aux, caches[f"L{i}"] = _apply_layer(
+                cfg, spec, gp[f"L{i}"], x, positions, aux,
+                collect_cache=True, max_len=max_len)
+        return (x, aux), caches
+
+    body = _remat(body, remat)
+    (x, _), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 params["blocks"], unroll=cfg.scan_unroll)
+    x = rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    return unembed(cfg, params, x)[:, 0], cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: (B,) absolute positions.
+    Returns (logits (B, V), new cache). Cache buffers are functionally
+    updated; callers should donate them."""
+    x = embed_inputs(cfg, params, tokens)
+
+    def body(x, inp):
+        gp, gc = inp
+        new_gc = {}
+        for i, spec in enumerate(cfg.pattern):
+            lp = gp[f"L{i}"]
+            h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+            if spec.kind == "attn":
+                if cfg.mla is not None:
+                    y, new_gc[f"L{i}"] = mla_mod.mla_decode(
+                        cfg, spec, lp["attn"], h, gc[f"L{i}"], pos)
+                else:
+                    y, new_gc[f"L{i}"] = attn.attn_decode(
+                        cfg, spec, lp["attn"], h, gc[f"L{i}"], pos)
+            else:
+                y, new_gc[f"L{i}"] = mam.mamba_decode(
+                    cfg, lp["mamba"], h, gc[f"L{i}"])
+            if cfg.post_block_norms:
+                y = rmsnorm(y, lp["post_ln"], cfg.norm_eps)
+            x = x + y
+            if spec.mlp != "none":
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                if spec.mlp == "dense":
+                    y = swiglu(lp["mlp"], h)
+                else:
+                    # decode dispatch: 4x capacity slack instead of fully
+                    # dropless (C=T) — C=T makes EVERY expert compute B
+                    # tokens, inflating decode weight traffic E/k-fold
+                    # (EXPERIMENTS.md §Perf iteration 2). At tiny T the
+                    # min() keeps it exactly dropless (tests unaffected).
+                    y, _ = moe_forward(cfg, lp["moe"], h, capacity_factor=4.0)
+                if cfg.post_block_norms:
+                    y = rmsnorm(y, lp["post_ln2"], cfg.norm_eps)
+                x = x + y
+        return x, new_gc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=cfg.scan_unroll)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return unembed(cfg, params, x)[:, 0], new_cache

@@ -1,0 +1,98 @@
+"""Top-k routed Mixture-of-Experts with capacity-bounded sparse dispatch.
+
+Dispatch is gather-based (sort tokens by expert, equal per-expert capacity
+slots, scatter-add combine) rather than the GShard one-hot-einsum form:
+the one-hot dispatch einsum costs O(T * E * C * D) MAC — orders of
+magnitude above the expert FLOPs at pool scale — while the sort/gather
+form is O(Tk log Tk) index work. Expert weights are (E, D, F): the E axis
+shards over `model` (EP) when divisible, else F shards (TP-in-expert).
+
+Tokens beyond an expert's capacity are dropped (standard GShard-style
+training behaviour; capacity_factor config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear
+
+
+def init_moe(cfg, key, dtype):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+
+    def ew(k, a, b):
+        return (jax.random.normal(k, (e, a, b), jnp.float32) * scale).astype(dtype)
+
+    return {
+        "router": init_linear(ks[0], d, e, jnp.float32),  # router in fp32
+        "wg": ew(ks[1], d, f),
+        "wu": ew(ks[2], d, f),
+        "wd": ew(ks[3], f, d) * (f ** -0.5) / scale,
+    }
+
+
+def moe_forward(cfg, p, x, *, capacity_factor=None, dropless=False):
+    """x: (B, S, D) -> (out, aux_loss). Capacity C = ceil(T*k/E * cf);
+    dropless=True sets C = T (exact; used for decode where T is tiny)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    if dropless:
+        C = T
+    else:
+        cf = capacity_factor or m.capacity_factor
+        C = min(T, max(1, int(-(-T * K // E) * cf)))
+
+    xf = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                    # (T, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sparse dispatch ----
+    e_flat = topi.reshape(T * K)
+    w_flat = topv.reshape(T * K)
+    order = jnp.argsort(e_flat, stable=True)
+    se = e_flat[order]
+    pos_in_e = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)        # E*C = drop bin
+    tok = order // K
+
+    slot_tok = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(tok)
+    slot_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(w_flat[order])
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = xpad[slot_tok[: E * C]].reshape(E, C, D)
+
+    # ---- expert computation (SwiGLU) ----
+    def ew(name):  # expert weight, possibly a QuantizedTensor stack
+        w = p[name]
+        return w.dequant(xe.dtype) if hasattr(w, "dequant") else w.astype(xe.dtype)
+
+    from repro.models import layers as _L
+    if _L._TAP is not None:   # calibration: per-expert inputs
+        _L._TAP.setdefault(id(p["wg"]), []).append(xe)
+        _L._TAP.setdefault(id(p["wu"]), []).append(xe)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, ew("wg")))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, ew("wu"))
+    if _L._TAP is not None:
+        _L._TAP.setdefault(id(p["wd"]), []).append(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, ew("wd"))
+
+    # ---- combine ----
+    contrib = ye.reshape(E * C, D) * slot_w[: E * C, None].astype(ye.dtype)
+    out = jnp.zeros((T + 1, D), ye.dtype).at[slot_tok[: E * C]].add(contrib)[:T]
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,4 @@
+from repro.quant.packing import pack_signs, padded_k, unpack_signs
+from repro.quant.qlinear import QuantizedTensor
+
+__all__ = ["pack_signs", "unpack_signs", "padded_k", "QuantizedTensor"]

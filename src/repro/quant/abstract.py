@@ -1,0 +1,55 @@
+"""Abstract (ShapeDtypeStruct) QuantizedTensor construction for the
+dry-run: replaces eligible weight leaves with packed stand-ins without
+allocating anything, so the quantized serving path can be lowered and
+compiled at full scale."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packing import WORD
+from repro.quant.qlinear import QuantizedTensor
+
+
+def quantized_leaf_abstract(leaf, bits: int):
+    """leaf: SDS/array of shape (..., K, N) -> QuantizedTensor of SDS."""
+    *lead, K, N = leaf.shape
+    KW = -(-K // WORD)
+    sds = jax.ShapeDtypeStruct
+    return QuantizedTensor(
+        codes=sds((*lead, bits, KW, N), jnp.uint32),
+        alphas=sds((*lead, 1, N, bits), jnp.float32),
+        betas=sds((*lead, 1, N), jnp.float32),
+        k_in=K, orig_dtype=str(leaf.dtype))
+
+
+def quantize_params_abstract(cfg, params, bits: int, include_head=False):
+    """Replace every eligible weight leaf with an abstract QuantizedTensor.
+    Works on a ShapeDtypeStruct pytree (from jax.eval_shape)."""
+    from repro.core.api import QUANTIZABLE, _leaf_name
+
+    def walk(tree, in_blocks=False):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v, in_blocks or k == "blocks")
+                elif (k in QUANTIZABLE
+                      and (k != "lm_head" or include_head)
+                      and not any(s in k for s in cfg.quant.exclude)
+                      and getattr(v, "ndim", 0) >= 2):
+                    out[k] = quantized_leaf_abstract(v, bits)
+                else:
+                    out[k] = v
+            return out
+        return tree
+
+    return walk(params)
+
+
+def packed_param_bytes(params) -> int:
+    """Total bytes of a (possibly quantized) abstract param tree."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,39 @@
+"""Bitplane packing for binary-coded weights.
+
+Sign tensors s in {-1,+1} of shape (..., bits, K, N) are stored as uint32
+words packed along K (the contraction dim): bit j of word w covers
+K index w*32 + j. K is padded to a multiple of 32 with zeros (-1 signs);
+`k_in` metadata on QuantizedTensor masks the pad out of dequantization.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def padded_k(k: int) -> int:
+    return -(-k // WORD) * WORD
+
+
+def pack_signs(signs):
+    """signs: (..., bits, K, N) bool/int (truthy = +1) -> uint32
+    (..., bits, ceil(K/32), N)."""
+    s = (signs > 0) if signs.dtype != jnp.bool_ else signs
+    *lead, bits, K, N = s.shape
+    Kp = padded_k(K)
+    if Kp != K:
+        pad = [(0, 0)] * (len(lead) + 1) + [(0, Kp - K), (0, 0)]
+        s = jnp.pad(s, pad)
+    s = s.reshape(*lead, bits, Kp // WORD, WORD, N).astype(jnp.uint32)
+    shifts = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return jnp.sum(s * shifts[:, None], axis=-2, dtype=jnp.uint32)
+
+
+def unpack_signs(codes, k_in: int):
+    """codes: (..., bits, K/32, N) uint32 -> float32 signs (..., bits, k_in, N)."""
+    *lead, bits, KW, N = codes.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    b = (codes[..., :, None, :] >> shifts[:, None]) & jnp.uint32(1)
+    b = b.reshape(*lead, bits, KW * WORD, N)[..., :k_in, :]
+    return (2.0 * b - 1.0).astype(jnp.float32)

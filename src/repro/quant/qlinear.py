@@ -1,0 +1,74 @@
+"""QuantizedTensor: the fused binary-coding weight representation (Eq. 11).
+
+W[k, n] = sum_i alphas[g(k), n, i] * s_i[k, n] + betas[g(k), n],
+s in {-1,+1} packed as uint32 bitplanes. This is a pytree, so it slots
+directly into param trees: lax.scan slices the leading (group/expert)
+axes of its leaves, pjit shards them (N on the `model` axis), and
+`layers.linear` dispatches on it transparently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packing import unpack_signs
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QuantizedTensor:
+    """Quantized stand-in for a weight of shape (..., k_in, n_out)."""
+
+    def __init__(self, codes, alphas, betas, k_in, orig_dtype="bfloat16"):
+        self.codes = codes        # (..., bits, ceil(K/32), N) uint32
+        self.alphas = alphas      # (..., G, N, bits) float32
+        self.betas = betas        # (..., G, N) float32
+        self.k_in = int(k_in)
+        self.orig_dtype = str(orig_dtype)
+
+    # ---- pytree ----
+    def tree_flatten_with_keys(self):
+        children = [(jax.tree_util.GetAttrKey(n), getattr(self, n))
+                    for n in ("codes", "alphas", "betas")]
+        return children, (self.k_in, self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, k_in=aux[0], orig_dtype=aux[1])
+
+    # ---- metadata ----
+    @property
+    def bits(self):
+        return self.codes.shape[-3]
+
+    @property
+    def n_out(self):
+        return self.codes.shape[-1]
+
+    @property
+    def shape(self):
+        return (*self.codes.shape[:-3], self.k_in, self.n_out)
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    def packed_bytes(self):
+        return sum(a.size * a.dtype.itemsize
+                   for a in (self.codes, self.alphas, self.betas))
+
+    # ---- numerics ----
+    def dequant(self, dtype=None):
+        """Materialize W (..., k_in, n_out)."""
+        signs = unpack_signs(self.codes, self.k_in)      # (...,bits,K,N)
+        G = self.alphas.shape[-3]
+        rep = self.k_in // G + (1 if self.k_in % G else 0)
+        a = jnp.repeat(self.alphas, rep, axis=-3)[..., :self.k_in, :, :]
+        b = jnp.repeat(self.betas, rep, axis=-2)[..., :self.k_in, :]
+        w = jnp.einsum("...ikn,...kni->...kn", signs, a) + b
+        return w.astype(dtype or self.orig_dtype)
+
+    def quantized_matmul(self, x):
+        """x (..., k_in) @ W -> (..., n_out). Dispatches to the Pallas
+        kernel on TPU, pure-jnp dequant elsewhere."""
+        from repro.kernels import ops
+        return ops.bcq_apply(x, self)

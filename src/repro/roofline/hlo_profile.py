@@ -1,0 +1,61 @@
+"""Static per-op profiling of compiled HLO text: approximate bytes/flops
+per op category, sorted hot list. This is the 'profiler' of the dry-run
+environment (no real hardware): it tells us WHICH ops dominate the
+memory/compute terms and whether collectives are redundant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_ARR_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?)\s+(?P<op>[\w\-]+)\(")
+
+
+def _bytes_of(type_str):
+    total = 0
+    for dt, dims in _ARR_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def profile_hlo(hlo_text: str, top: int = 25):
+    """Group output-bytes by op kind; list the largest single ops."""
+    by_kind = defaultdict(lambda: {"bytes": 0, "count": 0})
+    biggest = []
+    in_while_body = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _bytes_of(m.group("rtype"))
+        by_kind[op]["bytes"] += b
+        by_kind[op]["count"] += 1
+        biggest.append((b, op, line.strip()[:140]))
+    biggest.sort(key=lambda x: -x[0])
+    kinds = sorted(by_kind.items(), key=lambda kv: -kv[1]["bytes"])
+    return {"by_kind": kinds, "top_ops": biggest[:top]}
+
+
+def print_profile(hlo_text: str, top: int = 20):
+    p = profile_hlo(hlo_text, top)
+    print(f"{'op kind':28s} {'count':>6s} {'output GB':>10s}")
+    for k, v in p["by_kind"][:20]:
+        print(f"{k:28s} {v['count']:6d} {v['bytes']/1e9:10.3f}")
+    print("\n-- largest single ops --")
+    for b, op, line in p["top_ops"][:top]:
+        print(f"{b/1e9:8.3f} GB  {line}")
+    return p

@@ -1,0 +1,80 @@
+"""AdamW with optional fp32 master weights, implemented natively (no
+optax in this environment). The optimizer state mirrors the param tree,
+so the same PartitionSpec rules shard it (ZeRO comes for free from the
+FSDP `data` axis in the param specs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True     # keep fp32 master copy when params are bf16
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    f32 = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    state = {"mu": f32(params), "nu": f32(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda a: a.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    src = state.get("master", params)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        pf = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * pf)
+        return m, v, pf
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(src)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = treedef.unflatten([o[0] for o in out])
+    nu = treedef.unflatten([o[1] for o in out])
+    new_f32 = treedef.unflatten([o[2] for o in out])
+
+    tgt_dtypes = jax.tree.leaves(jax.tree.map(lambda a: a.dtype, params))
+    new_params = treedef.unflatten([
+        a.astype(dt) for a, dt in zip(jax.tree.leaves(new_f32), tgt_dtypes)])
+    new_state = {"mu": mu, "nu": nu, "step": step}
+    if "master" in state:
+        new_state["master"] = new_f32
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,106 @@
+"""Training loop with fault tolerance: auto-resume from the latest
+committed checkpoint, periodic async saves, preemption-signal handling
+(SIGTERM -> checkpoint + clean exit), and straggler detection (per-step
+wall-time EWMA; steps slower than `straggler_factor` x EWMA are logged —
+at fleet scale this feeds the controller that reschedules the slow host;
+here it drives the logging/abort hook).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.models.model import init_params
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "artifacts/ckpt"
+    keep_n: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    warmup: int = 20
+    straggler_factor: float = 3.0
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, data_iter, *, dtype=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = data_iter
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_n=tcfg.keep_n)
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = init_params(cfg, key, dtype=dtype)
+        self.opt_state = init_train_state(cfg, self.params, self.tcfg.opt)
+        self.step = 0
+        self.metrics_log: list = []
+        self._preempted = False
+        self._step_fn = jax.jit(
+            make_train_step(cfg, tcfg.opt, microbatches=tcfg.microbatches,
+                            warmup=tcfg.warmup, total_steps=tcfg.steps),
+            donate_argnums=(0, 1))
+
+    # ---- fault tolerance ----
+    def try_resume(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state, meta = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = meta["step"]
+        return True
+
+    def _save(self, block=False):
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state}, block=block)
+
+    def _on_preempt(self, *_):
+        self._preempted = True
+
+    # ---- loop ----
+    def run(self):
+        resumed = self.try_resume()
+        old = signal.signal(signal.SIGTERM, self._on_preempt)
+        ewma = None
+        stragglers = 0
+        try:
+            while self.step < self.tcfg.steps and not self._preempted:
+                batch = next(self.data)
+                t0 = time.time()
+                self.params, self.opt_state, m = self._step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(m["loss"])  # also blocks until step done
+                dt = time.time() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > self.tcfg.straggler_factor * ewma and self.step > 5:
+                    stragglers += 1
+                    print(f"[straggler] step {self.step}: {dt:.2f}s vs "
+                          f"EWMA {ewma:.2f}s")
+                self.step += 1
+                self.metrics_log.append(
+                    {"step": self.step, "loss": loss, "sec": dt})
+                if self.step % self.tcfg.log_every == 0:
+                    print(f"step {self.step:5d} loss {loss:.4f} "
+                          f"({dt:.2f}s/step)", flush=True)
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self._save()
+            self._save(block=True)
+        finally:
+            signal.signal(signal.SIGTERM, old)
+            self.ckpt.wait()
+        return {"resumed": resumed, "final_step": self.step,
+                "stragglers": stragglers,
+                "final_loss": self.metrics_log[-1]["loss"]
+                if self.metrics_log else float("nan")}

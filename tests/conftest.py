@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run subprocesses set
+# their own 512-device flag). Slightly bump the default test speed.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

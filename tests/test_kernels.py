@@ -1,0 +1,117 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes/bit-widths, plus packing round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
+from repro.quant.packing import pack_signs, unpack_signs
+from repro.quant.qlinear import QuantizedTensor
+
+
+def _rand_qt(rng, K, N, bits):
+    codes = jnp.asarray(rng.integers(0, 2 ** 32, (bits, -(-K // 32), N),
+                                     dtype=np.uint32))
+    alphas = jnp.asarray(rng.random((1, N, bits), dtype=np.float32) * 0.2)
+    betas = jnp.asarray((rng.standard_normal((1, N)) * 0.05).astype(np.float32))
+    return codes, alphas, betas
+
+
+SHAPES = [
+    (16, 64, 64, 2), (64, 128, 128, 3), (8, 256, 96, 4),
+    (128, 384, 256, 3), (33, 160, 130, 3),   # ragged M/K/N
+    (1, 512, 512, 2),                        # gemv-shaped
+]
+
+
+@pytest.mark.parametrize("M,K,N,bits", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bcq_matmul_matches_ref(M, K, N, bits, dtype):
+    rng = np.random.default_rng(hash((M, K, N, bits)) % 2 ** 31)
+    Kp = -(-K // 32) * 32
+    codes, alphas, betas = _rand_qt(rng, Kp, N, bits)
+    x = jnp.asarray(rng.standard_normal((M, Kp)).astype(np.float32)).astype(dtype)
+    want = ref.bcq_matmul_ref(x.astype(jnp.float32), codes, alphas, betas, Kp)
+    got = bcq_matmul(x, codes, alphas, betas, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    scale = float(jnp.abs(want).max()) + 1e-9
+    assert float(jnp.abs(got.astype(jnp.float32) - want).max()) / scale < tol
+
+
+def test_bcq_gemv_matches_matmul():
+    rng = np.random.default_rng(0)
+    codes, alphas, betas = _rand_qt(rng, 256, 320, 3)
+    x = jnp.asarray(rng.standard_normal((2, 256)).astype(np.float32))
+    a = bcq_gemv(x, codes, alphas, betas, interpret=True)
+    b = bcq_matmul(x, codes, alphas, betas, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_bitplane_reassociation_equivalent():
+    """GPU-LUT-GEMM-style per-bitplane formulation == dequant-fused (the
+    DESIGN.md §2 equivalence that justifies the TPU adaptation)."""
+    rng = np.random.default_rng(1)
+    codes, alphas, betas = _rand_qt(rng, 128, 96, 3)
+    x = jnp.asarray(rng.standard_normal((24, 128)).astype(np.float32))
+    a = ref.bcq_matmul_ref(x, codes, alphas, betas, 128)
+    b = ref.bcq_matmul_bitplane_ref(x, codes, alphas, betas, 128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# packing properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(1, 80), st.integers(1, 9),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(bits, K, N, seed):
+    rng = np.random.default_rng(seed)
+    signs = rng.integers(0, 2, (bits, K, N)).astype(bool)
+    packed = pack_signs(jnp.asarray(signs))
+    assert packed.shape == (bits, -(-K // 32), N)
+    un = np.asarray(unpack_signs(packed, K))
+    np.testing.assert_array_equal(un > 0, signs)
+
+
+def test_quantized_tensor_pytree_and_scan():
+    """QT must survive tree ops and lax.scan slicing (stacked groups)."""
+    rng = np.random.default_rng(2)
+    G, K, N, bits = 3, 64, 32, 2
+    codes = jnp.asarray(rng.integers(0, 2 ** 32, (G, bits, K // 32, N),
+                                     dtype=np.uint32))
+    alphas = jnp.asarray(rng.random((G, 1, N, bits), dtype=np.float32))
+    betas = jnp.zeros((G, 1, N), jnp.float32)
+    qt = QuantizedTensor(codes, alphas, betas, k_in=K, orig_dtype="float32")
+    leaves, treedef = jax.tree.flatten(qt)
+    assert len(leaves) == 3
+    qt2 = jax.tree.unflatten(treedef, leaves)
+    assert qt2.k_in == K
+
+    x = jnp.asarray(rng.standard_normal((5, K)).astype(np.float32))
+
+    def body(acc, qt_g):
+        return acc + qt_g.quantized_matmul(x), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((5, N)), qt)
+    want = sum(np.asarray(ref.bcq_matmul_ref(
+        x, codes[g], alphas[g], betas[g], K)) for g in range(G))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_m,block_n,block_k",
+                         [(8, 128, 128), (32, 256, 128), (128, 128, 256)])
+def test_kernel_block_shape_sweep(block_m, block_n, block_k):
+    rng = np.random.default_rng(3)
+    codes, alphas, betas = _rand_qt(rng, 256, 256, 3)
+    x = jnp.asarray(rng.standard_normal((64, 256)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, 256)
+    got = bcq_matmul(x, codes, alphas, betas, block_m=block_m,
+                     block_n=block_n, block_k=block_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

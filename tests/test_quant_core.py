@@ -1,0 +1,196 @@
+"""Unit + property tests for the GPTQT quantization core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bcq_alternating, bcq_greedy, enumerate_bc_choices,
+                        gptq_solve, hessian_from_inputs, linear_levels,
+                        minmse_grid, output_error, quantize_rtn, row_grid)
+from repro.core.binary_coding import choice_levels_int, sign_combos
+from repro.core.gptqt import gptqt_quantize
+
+
+def _data(n=64, k=64, t=256, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((k, k)) / np.sqrt(k)
+    X = rng.standard_normal((t, k)) @ (np.eye(k) + 1.5 * A)
+    W = rng.standard_normal((k, n))
+    H, _ = hessian_from_inputs([jnp.asarray(X, jnp.float32)])
+    return jnp.asarray(W.T, jnp.float32), H
+
+
+# ---------------------------------------------------------------------------
+# grids / RTN
+# ---------------------------------------------------------------------------
+
+def test_rtn_levels_cover_range():
+    Wt, _ = _data()
+    wq, q = quantize_rtn(Wt, 3)
+    assert q.min() >= 0 and q.max() <= 7
+    # reconstruction error bounded by half a step per element
+    S, _ = row_grid(Wt, 3)
+    assert float(jnp.max(jnp.abs(wq - Wt) / S[:, None])) <= 0.5 + 1e-5
+
+
+def test_linear_levels_match_rtn():
+    """RTN == nearest-level quantization against the linear grid."""
+    Wt, _ = _data()
+    S, c = row_grid(Wt, 3)
+    levels = linear_levels(S, c, 3)
+    wq, _ = quantize_rtn(Wt, 3)
+    idx = jnp.argmin(jnp.abs(Wt[:, :, None] - levels[:, None, :]), -1)
+    wq2 = jnp.take_along_axis(levels, idx.reshape(Wt.shape[0], -1), 1)
+    np.testing.assert_allclose(wq, wq2.reshape(Wt.shape), rtol=1e-6)
+
+
+def test_minmse_never_worse_than_plain_mse():
+    Wt, _ = _data(seed=3)
+    S0, c0 = row_grid(Wt, 3)
+    lv0 = linear_levels(S0, c0, 3)
+    S1, c1 = minmse_grid(Wt, 3)
+    lv1 = linear_levels(S1, c1, 3)
+
+    def mse(lv):
+        d = jnp.min(jnp.abs(Wt[:, :, None] - lv[:, None, :]), -1)
+        return float(jnp.sum(d * d))
+    assert mse(lv1) <= mse(lv0) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# BCQ
+# ---------------------------------------------------------------------------
+
+def test_bcq_greedy_monotone_residual():
+    Wt, _ = _data()
+    a1, _ = bcq_greedy(Wt, 1)
+    for bits in (2, 3, 4):
+        wq, alphas, signs = bcq_alternating(Wt, bits, iters=5)
+        err = float(jnp.sum((wq - Wt) ** 2))
+        if bits > 2:
+            assert err <= prev + 1e-4, f"bits={bits} err up"
+        prev = err
+
+
+def test_bcq_alternating_improves_over_greedy():
+    Wt, _ = _data(seed=1)
+    alphas, signs = bcq_greedy(Wt, 3)
+    wq_g = jnp.einsum("ink,ni->nk", signs, alphas)
+    wq_a, _, _ = bcq_alternating(Wt, 3, iters=10)
+    assert float(jnp.sum((wq_a - Wt) ** 2)) <= float(jnp.sum((wq_g - Wt) ** 2)) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# BCchoice enumeration (paper Fig. 3 structure)
+# ---------------------------------------------------------------------------
+
+def test_paper_example_choice_is_enumerated():
+    """[0,1,6,7] (paper's 3-bit -> 2-bit example) must appear."""
+    E, J = enumerate_bc_choices(3, 2)
+    levels = np.asarray(choice_levels_int(E, J, 2))
+    found = any(sorted(lv.tolist()) == [0., 1., 6., 7.] for lv in levels)
+    assert found
+
+
+@given(st.integers(3, 5), st.integers(2, 3))
+@settings(max_examples=10, deadline=None)
+def test_choices_are_valid_binary_codings(n, k):
+    E, J = enumerate_bc_choices(n, k, max_candidates=512)
+    levels = np.asarray(choice_levels_int(E, J, k))
+    # all integer levels within [0, 2^n - 1]
+    assert np.allclose(levels, np.round(levels))
+    assert levels.min() >= 0 and levels.max() <= 2 ** n - 1
+
+
+# ---------------------------------------------------------------------------
+# GPTQ solver
+# ---------------------------------------------------------------------------
+
+def test_gptq_beats_rtn_on_correlated_data():
+    Wt, H = _data(seed=2)
+    S, c = row_grid(Wt, 3)
+    levels = linear_levels(S, c, 3)
+    wq_rtn, _ = quantize_rtn(Wt, 3)
+    wq_gptq, _ = gptq_solve(Wt, H, levels)
+    assert output_error(Wt, wq_gptq, H) < output_error(Wt, wq_rtn, H)
+
+
+def test_gptq_identity_hessian_equals_rtn():
+    """With H = I (uncorrelated inputs) and no actorder, compensation is
+    zero-mean and GPTQ reduces to nearest-level per column."""
+    Wt, _ = _data()
+    H = jnp.eye(Wt.shape[1])
+    S, c = row_grid(Wt, 3)
+    levels = linear_levels(S, c, 3)
+    wq, _ = gptq_solve(Wt, H, levels, actorder=False, percdamp=0.0)
+    wq_rtn, _ = quantize_rtn(Wt, 3)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(wq_rtn), atol=1e-4)
+
+
+def test_gptq_output_on_levels():
+    Wt, H = _data()
+    S, c = row_grid(Wt, 3)
+    levels = linear_levels(S, c, 3)
+    wq, idx = gptq_solve(Wt, H, levels)
+    picked = jnp.take_along_axis(levels, idx.reshape(Wt.shape[0], -1), 1)
+    np.testing.assert_allclose(np.asarray(wq),
+                               np.asarray(picked.reshape(Wt.shape)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# GPTQT end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,ibits", [(2, 4), (3, 5)])
+def test_gptqt_beats_plain_bcq(bits, ibits):
+    Wt, H = _data(seed=4)
+    res = gptqt_quantize(Wt, H, bits=bits, intermediate_bits=ibits)
+    wq_bcq, _, _ = bcq_alternating(Wt, bits)
+    assert output_error(Wt, res.wq_t, H) < output_error(Wt, wq_bcq, H)
+
+
+def test_gptqt_fusion_is_exact():
+    """Eq. 11: fused binary coding reproduces the solver output exactly."""
+    Wt, H = _data(seed=5)
+    res = gptqt_quantize(Wt, H, bits=3, intermediate_bits=5)
+    dq = res.qt.dequant(jnp.float32)        # (K, N)
+    np.testing.assert_array_equal(np.asarray(dq.T), np.asarray(res.wq_t))
+
+
+def test_gptqt_levels_are_binary_coding_trees():
+    """Every row's final level set must be {beta ± alpha_1 ± ... ± alpha_k}."""
+    Wt, H = _data(seed=6)
+    res = gptqt_quantize(Wt, H, bits=3, intermediate_bits=5)
+    combos = jnp.asarray(sign_combos(3))
+    alphas = res.qt.alphas[0]                # (N, k)
+    betas = res.qt.betas[0]                  # (N,)
+    want = betas[:, None] + alphas @ combos.T
+    np.testing.assert_allclose(np.asarray(res.levels), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_gptqt_hist_matches_exact_search_quality():
+    """Histogram-accelerated search should be within a few percent of the
+    exact scorer on output error."""
+    Wt, H = _data(n=32, k=48, seed=7)
+    r_exact = gptqt_quantize(Wt, H, bits=3, intermediate_bits=4, exact=True)
+    r_hist = gptqt_quantize(Wt, H, bits=3, intermediate_bits=4, exact=False)
+    e1 = output_error(Wt, r_exact.wq_t, H)
+    e2 = output_error(Wt, r_hist.wq_t, H)
+    assert e2 <= e1 * 1.10 + 1e-6
+
+
+@given(st.integers(0, 2))
+@settings(max_examples=3, deadline=None)
+def test_reexplore_scale_within_eq7_bounds(rng_range):
+    Wt, H = _data(n=16, k=32, seed=8)
+    n = 4
+    res = gptqt_quantize(Wt, H, bits=2, intermediate_bits=n,
+                         reexplore_range=rng_range, reexplore_points=9)
+    S0, _ = row_grid(Wt, n)
+    mult = np.asarray(res.scale / S0)
+    top = 2.0 ** n - 1
+    lo = top / (2.0 ** (n + rng_range) - 1) - 1e-5
+    hi = top / (2.0 ** (max(n - rng_range, 1)) - 1) + 1e-5 if rng_range else 1.0 + 1e-5
+    assert (mult >= lo).all() and (mult <= hi + 1.0).all()

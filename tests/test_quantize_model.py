@@ -1,0 +1,115 @@
+"""Model-level quantization integration: calibration taps, all methods,
+fake vs packed equivalence, Pallas dispatch, quantized serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import quantize_model
+from repro.kernels import ops
+from repro.models import decode_step, forward, init_params, prefill
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2)
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(jax.random.fold_in(KEY, i), (2, 48), 0,
+                                cfg.vocab_size) for i in range(2)]
+    test = jax.random.randint(jax.random.fold_in(KEY, 99), (2, 48), 0,
+                              cfg.vocab_size)
+    base, _ = forward(cfg, p, test)
+    return cfg, p, calib, test, base
+
+
+ALL_METHODS = ["rtn", "gptq", "gptq_minmse", "gptq_bcq", "bcq", "gptqt"]
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_all_methods_produce_finite_models(tiny_setup, method):
+    cfg, p, calib, test, base = tiny_setup
+    qp, rep = quantize_model(cfg, p, calib, method=method)
+    logits, _ = forward(cfg, qp, test)
+    assert jnp.isfinite(logits).all()
+    assert len(rep) > 0
+    for st in rep.values():
+        assert np.isfinite(st["err"])
+
+
+def test_fake_equals_packed(tiny_setup):
+    cfg, p, calib, test, _ = tiny_setup
+    qf, _ = quantize_model(cfg, p, calib, method="gptqt", mode="fake")
+    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    lf, _ = forward(cfg, qf, test)
+    lp, _ = forward(cfg, qp, test)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lp), atol=1e-5)
+
+
+def test_packed_pallas_interpret_matches_ref(tiny_setup):
+    cfg, p, calib, test, _ = tiny_setup
+    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    l_ref, _ = forward(cfg, qp, test)
+    ops.FORCE_PALLAS = True
+    try:
+        l_pal, _ = forward(cfg, qp, test)
+    finally:
+        ops.FORCE_PALLAS = None
+    np.testing.assert_allclose(np.asarray(l_pal), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_decode_matches_quantized_forward(tiny_setup):
+    cfg, p, calib, _, _ = tiny_setup
+    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
+    full, _ = forward(cfg, qp, toks)
+    last, cache = prefill(cfg, qp, toks[:, :20], 32)
+    errs = [float(jnp.abs(last - full[:, 19]).max())]
+    for t in range(20, 24):
+        last, cache = decode_step(cfg, qp, cache, toks[:, t:t + 1],
+                                  jnp.full((2,), t, jnp.int32))
+        errs.append(float(jnp.abs(last - full[:, t]).max()))
+    assert max(errs) < 2e-4
+
+
+def test_moe_expert_quantization():
+    cfg = smoke_config("mixtral-8x7b").replace(dtype="float32")
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
+    qp, rep = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    logits, _ = forward(cfg, qp, calib[0])
+    assert jnp.isfinite(logits).all()
+    # expert leaves became QuantizedTensor stacks
+    from repro.quant import QuantizedTensor
+    moe_wg = qp["blocks"]["L0"]["moe"]["wg"]
+    assert isinstance(moe_wg, QuantizedTensor)
+    assert moe_wg.shape == p["blocks"]["L0"]["moe"]["wg"].shape
+
+
+def test_mamba_arch_quantization():
+    cfg = smoke_config("falcon-mamba-7b").replace(dtype="float32")
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
+    qp, rep = quantize_model(cfg, p, calib, method="gptqt")
+    logits, _ = forward(cfg, qp, calib[0])
+    assert jnp.isfinite(logits).all()
+    # excluded projections stayed dense (cfg.quant.exclude)
+    assert isinstance(qp["blocks"]["L0"]["mamba"]["x_proj"], jax.Array)
+
+
+def test_quantized_bytes_ratio():
+    """Packed 3-bit weights must be ~5x smaller than f32 (or ~2.7x vs
+    bf16) including alpha/beta overhead."""
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2)
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
+    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    from repro.quant import QuantizedTensor
+    w = p["blocks"]["L0"]["attn"]["wq"]
+    qw = qp["blocks"]["L0"]["attn"]["wq"]
+    assert isinstance(qw, QuantizedTensor)
+    dense_bytes = w.size * 4
+    assert qw.packed_bytes() < dense_bytes * 0.30

@@ -1,0 +1,66 @@
+"""Roofline machinery units: wire-factor math, extrapolation, hlo profile."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.launch import dryrun as dr
+from repro.roofline.analysis import (CollectiveStats, parse_collectives,
+                                     roofline_terms)
+from repro.roofline.hlo_profile import profile_hlo
+
+
+def test_extrapolate_linear_recovery():
+    """If cost is exactly base + g*delta, the 2/3-probe recovers it."""
+    base, delta, G = 7.0, 3.0, 40
+    c2 = {"flops": base + 2 * delta, "bytes": 10 + 2 * 2.0,
+          "wire_bytes": 1 + 2 * 0.5, "coll_count": 8}
+    c3 = {"flops": base + 3 * delta, "bytes": 10 + 3 * 2.0,
+          "wire_bytes": 1 + 3 * 0.5, "coll_count": 11}
+    out = dr._extrapolate(c2, c3, G)
+    assert abs(out["flops"] - (base + G * delta)) < 1e-9
+    assert abs(out["bytes"] - (10 + G * 2.0)) < 1e-9
+    assert abs(out["wire_bytes"] - (1 + G * 0.5)) < 1e-9
+    assert out["coll_count_per_group"] == 3
+
+
+@given(st.floats(0, 1e15), st.floats(0, 1e15), st.floats(0, 1e15))
+@settings(max_examples=30, deadline=None)
+def test_roofline_bound_is_max_term(f, b, w):
+    st_ = CollectiveStats(total_wire_bytes=w)
+    r = roofline_terms({"flops": f, "bytes accessed": b}, st_)
+    assert r["t_bound_s"] >= r["t_compute_s"] - 1e-12
+    assert r["t_bound_s"] >= r["t_memory_s"] - 1e-12
+    assert r["t_bound_s"] >= r["t_collective_s"] - 1e-12
+    assert 0.0 <= r["roofline_mfu"] <= 1.0 + 1e-9
+
+
+def test_parse_collectives_async_pairs_counted_once():
+    hlo = """
+  %ag0 = bf16[64,64]{1,0} all-gather-start(%x), replica_groups=[4,2]<=[8]
+  %ag1 = bf16[64,64]{1,0} all-gather-done(%ag0)
+"""
+    st_ = parse_collectives(hlo)
+    # -start matches, -done does not
+    assert st_.count == 1
+    assert abs(st_.total_wire_bytes - 64 * 64 * 2 * 0.5) < 1e-6
+
+
+def test_profile_hlo_groups_by_kind():
+    hlo = """
+  %d = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+  %c = f32[128,128]{1,0} convert(%d)
+  ROOT %t = (f32[128,128]{1,0}) tuple(%c)
+"""
+    p = profile_hlo(hlo)
+    kinds = dict(p["by_kind"])
+    assert kinds["dot"]["bytes"] == 128 * 128 * 4
+    assert kinds["convert"]["count"] == 1
+
+
+def test_wire_factors_ordering():
+    """all-reduce must cost 2x all-gather for the same payload/group."""
+    base = "replica_groups=[8,32]<=[256]"
+    h1 = f"%a = f32[1024]{{0}} all-gather(%x), {base}"
+    h2 = f"%a = f32[1024]{{0}} all-reduce(%x), {base}"
+    ag = parse_collectives(h1).total_wire_bytes
+    ar = parse_collectives(h2).total_wire_bytes
+    assert abs(ar / ag - 2.0) < 1e-9
