@@ -7,9 +7,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig4_intermediate_bit, table1_ppl,
-                            table3_ppl_shifted, table4_speed, table5_overfit,
-                            table6_reexplore)
+    from benchmarks import (fig4_intermediate_bit, serve_throughput,
+                            table1_ppl, table3_ppl_shifted, table4_speed,
+                            table5_overfit, table6_reexplore)
     print("name,us_per_call,derived")
     suites = [
         ("table4_speed", table4_speed.main),
@@ -18,6 +18,7 @@ def main() -> None:
         ("table5_overfit", table5_overfit.main),
         ("table6_reexplore", table6_reexplore.main),
         ("fig4_intermediate_bit", fig4_intermediate_bit.main),
+        ("serve_throughput", serve_throughput.main),
     ]
     failures = []
     for name, fn in suites:

@@ -2,7 +2,7 @@
 coding and serve batched requests through the continuous-batching engine
 (the paper's deployment mode — weight-only quantized decode).
 
-  PYTHONPATH=src python examples/serve_quantized.py
+  PYTHONPATH=src:. python examples/serve_quantized.py
 """
 from __future__ import annotations
 
@@ -41,9 +41,12 @@ def main():
     reqs = [Request(prompt=tok.encode(p), max_new_tokens=24)
             for p in prompts]
 
-    for label, ps in (("dense", params), ("gptqt-w3", qparams)):
+    for label, ps, kw in (("dense", params, {}),
+                          ("gptqt-w3", qparams, {}),
+                          ("gptqt-w3+paged", qparams,
+                           dict(cache_kind="paged", page_size=32))):
         eng = ServeEngine(cfg, ps, batch_size=3, max_len=128,
-                          dtype="float32")
+                          dtype="float32", **kw)
         t0 = time.time()
         done = eng.run([Request(prompt=r.prompt.copy(),
                                 max_new_tokens=r.max_new_tokens)
@@ -51,7 +54,8 @@ def main():
         dt = time.time() - t0
         tput = eng.stats["tokens"] / max(eng.stats["decode_s"], 1e-9)
         print(f"\n[{label}] {eng.stats['tokens']} tokens in {dt:.2f}s "
-              f"(decode throughput {tput:.1f} tok/s on CPU)")
+              f"(decode throughput {tput:.1f} tok/s on CPU, "
+              f"ttft {eng.stats['ttft_avg_s']:.3f}s)")
         for r, p in list(zip(done, prompts))[:3]:
             print(f"  '{p}' -> '{tok.decode(r.out)}'")
 

@@ -1,0 +1,12 @@
+from repro.dist.context import constrain_batch, current_mesh, mesh_context
+from repro.dist.sharding import (batch_pspec, cache_pspec, cache_shardings,
+                                 inputs_shardings, last_logits_sharding,
+                                 opt_state_shardings, param_pspec,
+                                 params_shardings)
+
+__all__ = [
+    "constrain_batch", "current_mesh", "mesh_context",
+    "batch_pspec", "cache_pspec", "cache_shardings", "inputs_shardings",
+    "last_logits_sharding", "opt_state_shardings", "param_pspec",
+    "params_shardings",
+]

@@ -1,6 +1,8 @@
-"""Pallas TPU kernels for the perf-critical hot spot: binary-coded GEMM
-(bcq_matmul / bcq_gemv) with ops.py dispatch and ref.py oracles."""
+"""Pallas TPU kernels for the perf-critical hot spots: binary-coded GEMM
+(bcq_matmul / bcq_gemv) with ops.py dispatch, paged-attention decode
+(paged_attention), and ref.py oracles."""
 from repro.kernels import ops, ref
 from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
+from repro.kernels.paged_attention import paged_attention
 
-__all__ = ["ops", "ref", "bcq_matmul", "bcq_gemv"]
+__all__ = ["ops", "ref", "bcq_matmul", "bcq_gemv", "paged_attention"]

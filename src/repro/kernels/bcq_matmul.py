@@ -28,6 +28,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 WORD = 32
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
             bits: int, nk: int):
@@ -72,7 +76,9 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
     assert alphas.shape == (1, N, bits), alphas.shape
     assert betas.shape == (1, N), betas.shape
 
-    bm = min(block_m, max(8, M))
+    # block height must stay a multiple of the 8-sublane tile: round the
+    # small-M shortcut up (e.g. M=100 -> bm=104, not 100)
+    bm = min(block_m, -(-max(8, M) // 8) * 8)
     Mp = -(-M // bm) * bm
     Np = -(-N // block_n) * block_n
     Kp = -(-K // block_k) * block_k
@@ -99,7 +105,7 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
         out_specs=pl.BlockSpec((bm, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, codes, alphas, betas)

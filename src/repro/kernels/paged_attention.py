@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: batched single-token paged-attention decode.
+
+K/V live in a global page pool `(n_pages, page_size, Hkv, hd)` shared by
+every sequence; each sequence owns a row of a block table `(B, T)` of
+page ids (see serve/kv_cache.py). The grid is (batch, pages-per-seq):
+for each sequence the kernel streams its pages HBM->VMEM one per grid
+step — the page id comes from the *scalar-prefetched* block table, so
+the DMA address is known before the body runs — and folds each page
+into an online-softmax (flash) accumulator held in VMEM scratch. One
+grid row therefore reads exactly ctx_len tokens of K/V instead of a
+dense max_len slab, which is what makes decode bandwidth scale with the
+*live* tokens (the same argument as the BCQ weight kernel: decode is
+bandwidth-bound, so bytes moved == time).
+
+Unused block-table slots MUST hold a valid page id (the allocator keeps
+them 0 and reserves page 0 as a never-allocated null page); the kernel
+masks their contribution by token index, not by page id.
+
+Off-TPU the public entry runs `interpret=True` (CPU CI); `ref.py` holds
+the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page_size: int, pages_per_seq: int, scale: float,
+            window, cap):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = cl_ref[b]
+
+    @pl.when(t * page_size < ctx)
+    def _fold_page():
+        q = q_ref[0].astype(jnp.float32)                  # (Hkv, rep, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (page, Hkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jnp.einsum("hrd,phd->hrp", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            logits = cap * jnp.tanh(logits / cap)
+        j = t * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page_size), 2)
+        ok = j < ctx
+        if window is not None:
+            ok &= (ctx - 1 - j) < window
+        logits = jnp.where(ok, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        r = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * r[..., None] + jnp.einsum(
+            "hrp,phd->hrd", p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == pages_per_seq - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "cap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    window=None, cap=None, interpret=False):
+    """q (B, Hkv, rep, hd); k_pages/v_pages (P, page_size, Hkv, hd);
+    block_tables (B, T) int32 page ids; ctx_lens (B,) int32 live tokens
+    per sequence (including the token just written). Returns
+    (B, Hkv, rep, hd) in q.dtype."""
+    B, Hkv, rep, hd = q.shape
+    _, page_size, _, _ = k_pages.shape
+    T = block_tables.shape[1]
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, Hkv, rep, hd),
+                         lambda b, t, bt, cl: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, t, bt, cl: (bt[b, t], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, t, bt, cl: (bt[b, t], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hkv, rep, hd),
+                               lambda b, t, bt, cl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, rep), jnp.float32),       # running max
+            pltpu.VMEM((Hkv, rep), jnp.float32),       # running denom
+            pltpu.VMEM((Hkv, rep, hd), jnp.float32),   # weighted acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, pages_per_seq=T,
+                          scale=scale, window=window, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, ctx_lens, q, k_pages, v_pages)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for the binary-coded GEMM kernels.
+"""Pure-jnp oracles for the Pallas kernels.
 
 `bcq_matmul_ref` is the correctness reference (dequantize, then matmul).
 `bcq_matmul_bitplane_ref` is the GPU-LUT-GEMM-style reassociation
@@ -6,12 +6,20 @@
 — mathematically identical, but it costs `bits` MXU passes instead of
 one; we keep it to *demonstrate* why the TPU adaptation fuses dequant
 into a single GEMM instead (see DESIGN.md §2 and benchmarks/table4).
+
+`paged_attention_ref` is the oracle for kernels/paged_attention.py and
+also the non-TPU execution path for paged decode: it gathers each
+sequence's pages through the block table and runs the same masked
+softmax the dense `attn_decode` uses, so CPU tests can compare paged vs
+dense decode token-for-token.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.quant.packing import unpack_signs
+
+NEG_INF = -1e30
 
 
 def dequant_ref(codes, alphas, betas, k_in: int, dtype=jnp.float32):
@@ -30,6 +38,33 @@ def bcq_matmul_ref(x, codes, alphas, betas, k_in: int):
     """x (..., k_in) -> (..., N)."""
     w = dequant_ref(codes, alphas, betas, k_in, dtype=jnp.float32)
     return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        window=None, cap=None):
+    """q (B, Hkv, rep, hd); k_pages/v_pages (P, page, Hkv, hd);
+    block_tables (B, T); ctx_lens (B,). Returns (B, Hkv, rep, hd)."""
+    B, Hkv, rep, hd = q.shape
+    page = k_pages.shape[1]
+    T = block_tables.shape[1]
+    # gather: (B, T, page, Hkv, hd) -> (B, Hkv, T*page, hd)
+    k = k_pages[block_tables].reshape(B, T * page, Hkv, hd)
+    v = v_pages[block_tables].reshape(B, T * page, Hkv, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    j = jnp.arange(T * page)[None, :]
+    ok = j < ctx_lens[:, None]
+    if window is not None:
+        ok &= (ctx_lens[:, None] - 1 - j) < window
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhrk,bhkd->bhrd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
 
 
 def bcq_matmul_bitplane_ref(x, codes, alphas, betas, k_in: int):

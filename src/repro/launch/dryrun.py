@@ -42,6 +42,15 @@ from repro.train.train_step import init_train_state, make_train_step
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
 
+def _cost_dict(compiled):
+    """compiled.cost_analysis() returns a per-computation list on older
+    jax (<=0.4.x) and a flat dict on newer; normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 class CollStub:
     """CollectiveStats-shaped container for extrapolated probe results."""
 
@@ -178,7 +187,7 @@ def _probe_costs(cfg, shape_spec, mesh, groups, **kw):
     finally:
         _attn.KV_CHUNK, _attn.FORCE_UNROLL = old_kv, old_au
         _mam.FORCE_UNROLL = old_mu
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -228,7 +237,7 @@ def run_cell(arch, shape_name, *, multi_pod=False, quant_bits=None,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled)
             coll = parse_collectives(compiled.as_text())
             # (b, c) unrolled probes for trip-count-correct costs
             if probe:

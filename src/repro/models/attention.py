@@ -169,6 +169,121 @@ def init_kv_cache(cfg, spec, batch, max_len, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv(cfg, n_pages, page_size, dtype):
+    """Global page pool for one attention layer: every sequence's K/V
+    pages live here; ownership is the block table's concern
+    (serve/kv_cache.py). Page 0 is the allocator's null page."""
+    hd = cfg.resolved_head_dim
+    shape = (n_pages, page_size, cfg.n_kv_heads, hd)
+    return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
+
+
+# None = auto (Pallas kernel iff backend is TPU; the pure-jnp gather
+# otherwise). Tests may force the kernel in interpret mode.
+FORCE_PAGED_KERNEL: bool | None = None
+
+
+def _use_paged_kernel() -> bool:
+    if FORCE_PAGED_KERNEL is not None:
+        return FORCE_PAGED_KERNEL
+    return jax.default_backend() == "tpu"
+
+
+def attn_decode_paged(cfg, spec, p, x, cache, block_tables, pos):
+    """Single-token decode against a paged KV pool.
+
+    x: (B, 1, D); cache: {"k_pages","v_pages"} (P, page, Hkv, hd);
+    block_tables: (B, T) int32 page ids; pos: (B,) absolute positions.
+    Writes the new K/V into page block_tables[b, pos//page] at offset
+    pos%page, then attends over the sequence's gathered pages. Window
+    layers mask by absolute position (no rolling buffer — pages beyond
+    the window stay allocated; the scheduler may reclaim them later).
+    Returns (y, cache)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(cfg, p, x)          # (B,1,H,hd)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    page = kp.shape[1]
+    b_idx = jnp.arange(B)
+    pid = block_tables[b_idx, pos // page]
+    off = pos % page
+    kp = kp.at[pid, off].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[pid, off].set(v[:, 0].astype(vp.dtype))
+
+    qg = q[:, 0].reshape(B, cfg.n_kv_heads,
+                         cfg.n_heads // cfg.n_kv_heads, hd)
+    ctx = pos + 1
+    if _use_paged_kernel():
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(qg, kp, vp, block_tables, ctx,
+                              window=spec.window, cap=cfg.attn_softcap,
+                              interpret=jax.default_backend() != "tpu")
+    else:
+        # gather path: the kernel's oracle doubles as the non-TPU
+        # execution path (same fp32 masked softmax the dense attn_decode
+        # computes, so paged and dense engines agree token-for-token on
+        # the fp32 CPU tests)
+        from repro.kernels.ref import paged_attention_ref
+        out = paged_attention_ref(qg, kp, vp, block_tables, ctx,
+                                  window=spec.window, cap=cfg.attn_softcap)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    y = linear(out, p["wo"])
+    return y, {"k_pages": kp, "v_pages": vp}
+
+
+def attn_extend_paged(cfg, spec, p, h, cache, block_tables, start_pos,
+                      chunk_mask):
+    """Chunked-prefill step: C prompt tokens at absolute positions
+    start_pos + [0..C) attend causally over everything already in the
+    sequence's pages plus themselves. h: (B, C, D); chunk_mask: (B, C)
+    bool — False marks padding tokens whose K/V must not land in pages.
+    Returns (y, cache)."""
+    B, C, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(cfg, p, h)          # (B,C,H,hd)
+    positions = start_pos[:, None] + jnp.arange(C)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    page = kp.shape[1]
+    pid = jnp.take_along_axis(block_tables, positions // page, axis=1)
+    off = positions % page
+    # masked scatter: padding tokens write to the null page (id 0) slot 0,
+    # re-writing its current content (a no-op by construction)
+    pid = jnp.where(chunk_mask, pid, 0)
+    off = jnp.where(chunk_mask, off, 0)
+    m4 = chunk_mask[:, :, None, None]
+    kw = jnp.where(m4, k.astype(kp.dtype), kp[0, 0][None, None])
+    vw = jnp.where(m4, v.astype(vp.dtype), vp[0, 0][None, None])
+    kp = kp.at[pid, off].set(kw)
+    vp = vp.at[pid, off].set(vw)
+
+    T = block_tables.shape[1]
+    ck = kp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
+    cv = vp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
+    ck = ck.transpose(0, 2, 1, 3)
+    cv = cv.transpose(0, 2, 1, 3)
+    qg = q.reshape(B, C, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, hd)
+    logits = jnp.einsum("bqhrd,bhkd->bhrqk", qg,
+                        ck.astype(q.dtype)).astype(jnp.float32) * hd ** -0.5
+    logits = softcap(logits, cfg.attn_softcap)
+    j = jnp.arange(T * page)[None, None, :]
+    qi = positions[:, :, None]                  # (B, C, 1)
+    ok = j <= qi
+    if spec.window is not None:
+        ok &= (qi - j) < spec.window
+    logits = jnp.where(ok[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bhkd->bqhrd", w, cv.astype(q.dtype))
+    out = out.reshape(B, C, cfg.n_heads * hd)
+    y = linear(out, p["wo"])
+    return y, {"k_pages": kp, "v_pages": vp}
+
+
 def attn_decode(cfg, spec, p, x, cache, pos):
     """x: (B, 1, D); pos: (B,) int32 absolute positions. Returns (y, cache).
     Sliding-window layers use a rolling buffer of size `window` indexed by

@@ -241,8 +241,43 @@ def init_cache(cfg, batch, max_len, dtype=None):
     return cache
 
 
-def prefill(cfg, params, tokens, max_len, *, remat="none"):
-    """Run the prompt, return (last-position logits, filled cache)."""
+def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None):
+    """Paged cache pytree: attention layers get a global K/V page pool
+    (n_pages, page_size, Hkv, hd) shared by all sequences; mamba layers
+    keep per-slot constant-size state (max_seqs rows — recurrent state
+    doesn't page). Same (n_groups,)-stacked layout as init_cache."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            "paged KV for the MLA latent cache is not implemented yet; "
+            "use cache_kind='dense'")
+    cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            one = attn.init_paged_kv(cfg, n_pages, page_size, dtype)
+        else:
+            one = mam.init_mamba_cache(cfg, max_seqs, dtype)
+        cache[f"L{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one)
+    return cache
+
+
+def _last_positions(x, last_pos):
+    """x (B, S, D) -> (B, 1, D) at per-row index `last_pos` ((B,) int32),
+    or the final position when last_pos is None (exact prompts)."""
+    if last_pos is None:
+        return x[:, -1:]
+    idx = jnp.broadcast_to(last_pos[:, None, None],
+                           (x.shape[0], 1, x.shape[2]))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def prefill(cfg, params, tokens, max_len, *, remat="none", last_pos=None):
+    """Run the prompt, return (last-position logits, filled cache).
+    `last_pos` ((B,) int32) selects the logits row for bucket-padded
+    prompts (the engine pads prompt length to a power of two so the jit
+    cache stays small; padding K/V slots are overwritten by later decode
+    steps before they become visible to the causal mask)."""
     x = embed_inputs(cfg, params, tokens)
     S = x.shape[1]
     positions = jnp.arange(S)
@@ -259,16 +294,14 @@ def prefill(cfg, params, tokens, max_len, *, remat="none"):
     body = _remat(body, remat)
     (x, _), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                  params["blocks"], unroll=cfg.scan_unroll)
-    x = rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    x = rmsnorm(_last_positions(x, last_pos), params["final_ln"],
+                cfg.norm_eps)
     return unembed(cfg, params, x)[:, 0], cache
 
 
-def decode_step(cfg, params, cache, tokens, pos):
-    """One decode step. tokens: (B, 1) int32; pos: (B,) absolute positions.
-    Returns (logits (B, V), new cache). Cache buffers are functionally
-    updated; callers should donate them."""
-    x = embed_inputs(cfg, params, tokens)
-
+def _decode_scan(cfg, params, cache, x, attn_step):
+    """Shared single-step decode machinery: scan the group stack, with
+    the attention flavour injected (dense cache / paged pool / MLA)."""
     def body(x, inp):
         gp, gc = inp
         new_gc = {}
@@ -276,12 +309,8 @@ def decode_step(cfg, params, cache, tokens, pos):
             lp = gp[f"L{i}"]
             h = rmsnorm(x, lp["ln"], cfg.norm_eps)
             if spec.kind == "attn":
-                if cfg.mla is not None:
-                    y, new_gc[f"L{i}"] = mla_mod.mla_decode(
-                        cfg, spec, lp["attn"], h, gc[f"L{i}"], pos)
-                else:
-                    y, new_gc[f"L{i}"] = attn.attn_decode(
-                        cfg, spec, lp["attn"], h, gc[f"L{i}"], pos)
+                y, new_gc[f"L{i}"] = attn_step(spec, lp["attn"], h,
+                                               gc[f"L{i}"])
             else:
                 y, new_gc[f"L{i}"] = mam.mamba_decode(
                     cfg, lp["mamba"], h, gc[f"L{i}"])
@@ -307,4 +336,90 @@ def decode_step(cfg, params, cache, tokens, pos):
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
                                 unroll=cfg.scan_unroll)
     x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
-    return unembed(cfg, params, x)[:, 0], new_cache
+    return unembed(cfg, params, x), new_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: (B,) absolute positions.
+    Returns (logits (B, V), new cache). Cache buffers are functionally
+    updated; callers should donate them."""
+    x = embed_inputs(cfg, params, tokens)
+    if cfg.mla is not None:
+        step = lambda spec, p, h, c: mla_mod.mla_decode(cfg, spec, p, h,
+                                                        c, pos)
+    else:
+        step = lambda spec, p, h, c: attn.attn_decode(cfg, spec, p, h,
+                                                      c, pos)
+    logits, new_cache = _decode_scan(cfg, params, cache, x, step)
+    return logits[:, 0], new_cache
+
+
+def decode_step_paged(cfg, params, cache, tokens, pos, block_tables):
+    """One decode step against a paged cache (init_paged_cache layout).
+    block_tables: (B, T) int32 page ids, row b = sequence in slot b.
+    Same contract as decode_step otherwise."""
+    x = embed_inputs(cfg, params, tokens)
+    step = lambda spec, p, h, c: attn.attn_decode_paged(
+        cfg, spec, p, h, c, block_tables, pos)
+    logits, new_cache = _decode_scan(cfg, params, cache, x, step)
+    return logits[:, 0], new_cache
+
+
+def extend_paged(cfg, params, cache, tokens, start_pos, block_tables,
+                 n_valid):
+    """Chunked prefill: run C prompt tokens (tokens (B, C) int32, padded;
+    n_valid (B,) counts the real ones) at absolute positions start_pos +
+    [0..C), writing their K/V into the sequences' pages and attending
+    over pages + chunk causally. Returns (logits of the last valid chunk
+    position (B, V), cache). Only attention patterns support chunked
+    prefill (recurrent mamba state needs sequential threading)."""
+    if any(spec.kind != "attn" for spec in cfg.pattern) or cfg.mla is not None:
+        raise NotImplementedError(
+            "chunked paged prefill requires an attention-only pattern")
+    B, C = tokens.shape
+    chunk_mask = jnp.arange(C)[None, :] < n_valid[:, None]
+    x = embed_inputs(cfg, params, tokens)
+    step = lambda spec, p, h, c: attn.attn_extend_paged(
+        cfg, spec, p, h, c, block_tables, start_pos, chunk_mask)
+    logits, new_cache = _decode_scan(cfg, params, cache, x, step)
+    idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(
+        logits, jnp.broadcast_to(idx, (B, 1, logits.shape[-1])), axis=1)
+    return last[:, 0], new_cache
+
+
+def scatter_prefill_cache(cfg, paged_cache, row_cache, slot, page_ids,
+                          n_valid):
+    """Merge one sequence's dense prefill cache (prefill() on a single
+    padded row: attn leaves (G, 1, Hkv, S_pad, hd)) into the paged cache.
+    page_ids: (S_pad // page_size,) int32 pages owned by the sequence;
+    n_valid: true prompt length (padding K/V is masked out — pages only
+    ever hold live tokens). Mamba state rows land at `slot`."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        key = f"L{i}"
+        pooled, row = paged_cache[key], row_cache[key]
+        if spec.kind != "attn":
+            out[key] = jax.tree.map(
+                lambda pool, one: pool.at[:, slot].set(one[:, 0]),
+                pooled, row)
+            continue
+        page = pooled["k_pages"].shape[2]
+        npg = page_ids.shape[0]
+
+        def put(pool, one):
+            # one (G, 1, Hkv, S_pad, hd) -> (G, npg, page, Hkv, hd)
+            G, _, Hkv, S_pad, hd = one.shape
+            r = one[:, 0].transpose(0, 2, 1, 3)            # (G,S_pad,Hkv,hd)
+            pad = npg * page - S_pad
+            if pad:
+                r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r = r.reshape(G, npg, page, Hkv, hd)
+            keep = (jnp.arange(npg * page) < n_valid).reshape(npg, page)
+            cur = pool[:, page_ids]
+            return pool.at[:, page_ids].set(
+                jnp.where(keep[None, :, :, None, None], r, cur))
+
+        out[key] = {"k_pages": put(pooled["k_pages"], row["k"]),
+                    "v_pages": put(pooled["v_pages"], row["v"])}
+    return out

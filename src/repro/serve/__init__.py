@@ -1,3 +1,6 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import DenseSlotPool, Request, ServeEngine
+from repro.serve.kv_cache import OutOfPages, PagedKVCache
+from repro.serve.scheduler import RequestMetrics, Scheduler
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "PagedKVCache", "OutOfPages",
+           "Scheduler", "RequestMetrics", "DenseSlotPool"]

@@ -1,13 +1,22 @@
-"""Batched serving engine: fixed-slot continuous batching over the
-prefill/decode steps. Works with plain bf16/fp32 weights or GPTQT-packed
-QuantizedTensor params (the paper's deployment mode) — the model code
-dispatches per leaf, so the engine is representation-agnostic.
+"""Batched serving engine: continuous batching over prefill/decode with
+two cache backends behind one switch.
 
-Slot model: `batch_size` concurrent sequences. A request is prefilled
-into a free slot (per-request prefill, padded to the slot's max_len) and
-then advanced one token per engine tick together with every other active
-slot — the standard decode-batched regime the paper's Tab. IV measures
-(batch 1, 128 new tokens => single-slot latency test).
+  cache_kind="dense"  — the classic fixed-slot regime: `batch_size`
+    sequences, each owning a dense max_len KV slab (the paper's Tab. IV
+    measurement setup). Memory = B * max_len regardless of live tokens.
+  cache_kind="paged"  — block-table paged KV (serve/kv_cache.py): all
+    sequences share a global page pool; admission is gated on free pages
+    (not slots), so short/finished sequences return their memory and the
+    engine sustains more concurrency under the same byte budget.
+
+Both run on the same FCFS Scheduler (serve/scheduler.py) for queueing,
+admission, preemption and TTFT/TPOT metrics. Works with plain bf16/fp32
+weights or GPTQT-packed QuantizedTensor params — the model dispatches
+per leaf, so the engine is representation-agnostic.
+
+Prompt lengths are padded to power-of-two buckets before the jitted
+prefill (attention-only, no-window configs), so admission compiles once
+per bucket instead of once per distinct prompt length.
 """
 from __future__ import annotations
 
@@ -18,7 +27,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import decode_step, init_cache, prefill
+from repro.models.model import (decode_step, decode_step_paged, extend_paged,
+                                init_cache, prefill, scatter_prefill_cache)
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.scheduler import Scheduler
+
+MIN_BUCKET = 8
+
+
+def bucket_len(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n (floor MIN_BUCKET), clamped to cap."""
+    b = MIN_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 @dataclass
@@ -30,81 +52,315 @@ class Request:
     done: bool = False
 
 
+class DenseSlotPool:
+    """Slot accounting shim so the Scheduler drives the dense engine
+    too: one fixed max_len 'page' per sequence."""
+
+    def __init__(self, n_slots: int, max_len: int):
+        self.max_seqs = n_slots
+        self.max_len = max_len
+        self._active = np.zeros((n_slots,), bool)
+        self.high_water = 0
+        self.usable_pages = n_slots
+
+    def pages_for(self, n_tokens: int) -> int:
+        return 1
+
+    @property
+    def free_page_count(self) -> int:
+        return int((~self._active).sum())
+
+    @property
+    def used_pages(self) -> int:
+        return int(self._active.sum())
+
+    def alloc_slot(self):
+        for i in range(self.max_seqs):
+            if not self._active[i]:
+                self._active[i] = True
+                self.high_water = max(self.high_water, self.used_pages)
+                return i
+        return None
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        assert n_tokens <= self.max_len, (n_tokens, self.max_len)
+
+    def owned_pages(self, slot: int):
+        return [slot] if self._active[slot] else []
+
+    def release(self, slot: int) -> None:
+        self._active[slot] = False
+
+
 class ServeEngine:
     def __init__(self, cfg, params, *, batch_size=4, max_len=512,
-                 dtype=None, greedy=True):
+                 dtype=None, greedy=True, cache_kind="dense",
+                 page_size=64, n_pages=None, prefill_chunk=None,
+                 bucket_prompts=True, watermark=1):
+        assert cache_kind in ("dense", "paged"), cache_kind
         self.cfg = cfg
         self.params = params
         self.B = batch_size
         self.max_len = max_len
         self.greedy = greedy
+        self.cache_kind = cache_kind
         dtype = dtype or cfg.dtype
-        self.cache = init_cache(cfg, batch_size, max_len, dtype)
+
+        attn_only = (cfg.mla is None
+                     and all(s.kind == "attn" for s in cfg.pattern))
+        no_window = all(s.window is None for s in cfg.pattern)
+        # bucketed prefill needs padding tokens to be harmless: causal
+        # attention masks them and decode overwrites their cache slots,
+        # but rolling window buffers and recurrent mamba state both mix
+        # pad tokens in — keep those configs on exact-length prefill.
+        self._bucket = bool(bucket_prompts and attn_only and no_window)
+
+        # window layers: prefill()'s rolling buffer cannot be scattered
+        # into absolute page slots, so the paged engine prefills them
+        # through the extend path (which is attention-only)
+        self._extend_prefill = cache_kind == "paged" and \
+            (bool(prefill_chunk) or not no_window)
+        if cache_kind == "paged":
+            if self._extend_prefill and not attn_only:
+                raise NotImplementedError(
+                    "paged prefill via extend (chunked or sliding-window) "
+                    "needs an attention-only pattern")
+            pages_per_seq = -(-max_len // page_size)
+            if n_pages is None:
+                # parity with the dense engine's byte budget, + null page
+                n_pages = batch_size * pages_per_seq + 1
+            self.kv = PagedKVCache(cfg, n_pages=n_pages,
+                                   page_size=page_size,
+                                   max_seqs=batch_size,
+                                   max_pages_per_seq=pages_per_seq,
+                                   dtype=dtype)
+            self.page_size = page_size
+            self.cache = self.kv.take_pool()
+            self._decode = jax.jit(
+                lambda p, c, t, s, bt: decode_step_paged(cfg, p, c, t, s, bt),
+                donate_argnums=(1,))
+            self._scatter = jax.jit(
+                lambda c, r, sl, pi, nv: scatter_prefill_cache(
+                    cfg, c, r, sl, pi, nv),
+                donate_argnums=(0,))
+            self._extend = jax.jit(
+                lambda p, c, t, sp, bt, nv: extend_paged(cfg, p, c, t, sp,
+                                                         bt, nv),
+                donate_argnums=(1,))
+        else:
+            if prefill_chunk:
+                raise NotImplementedError(
+                    "chunked prefill requires cache_kind='paged'")
+            self.kv = DenseSlotPool(batch_size, max_len)
+            self.cache = init_cache(cfg, batch_size, max_len, dtype)
+            self._decode = jax.jit(
+                lambda p, c, t, s: decode_step(cfg, p, c, t, s),
+                donate_argnums=(1,))
+
+        self.prefill_chunk = prefill_chunk
+        self.sched = Scheduler(
+            self.kv, watermark=watermark if cache_kind == "paged" else 0,
+            prefill_chunk=prefill_chunk)
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
-        self.active: list[Request | None] = [None] * batch_size
-        self._decode = jax.jit(lambda p, c, t, s: decode_step(cfg, p, c, t, s),
-                               donate_argnums=(1,))
         self._prefill = jax.jit(
-            lambda p, t: prefill(cfg, p, t, max_len),
-            static_argnums=())
+            lambda p, t, lp, ml: prefill(cfg, p, t, ml, last_pos=lp),
+            static_argnums=(3,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "ticks": 0}
+        self._entries = []
 
-    # ---------------- slot management ----------------
-    def _free_slot(self):
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+    # ---------------- admission ----------------
+    def _padded_prompt(self, prompt):
+        L = len(prompt)
+        S = bucket_len(L, self.max_len) if self._bucket else L
+        padded = np.zeros((S,), np.int32)
+        padded[:L] = prompt
+        return padded, L
 
-    def _admit(self, req: Request, slot: int):
+    def _admit(self, e):
         t0 = time.time()
-        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-        last_logits, cache1 = self._prefill(self.params, prompt)
-        # merge the single-row cache into the batch cache at `slot`
-        def merge(batch_leaf, one_leaf):
-            # leaves: (G, B, ...) vs (G, 1, ...)
-            return batch_leaf.at[:, slot].set(one_leaf[:, 0])
-        self.cache = jax.tree.map(merge, self.cache, cache1)
-        tok = int(jnp.argmax(last_logits[0]))
-        req.out.append(tok)
-        self.active[slot] = req
-        self.pos[slot] = len(req.prompt)
-        self.cur[slot] = tok
+        if self.prefill_chunk:
+            # chunked mode: admission only reserves the slot; prompt
+            # tokens flow through _prefill_tick one chunk per engine tick
+            self.pos[e.slot] = 0
+            self.stats["prefill_s"] += time.time() - t0
+            return
+        padded, L = self._padded_prompt(e.prompt)
+        tokens = jnp.asarray(padded[None, :], jnp.int32)
+        last = jnp.asarray([L - 1], jnp.int32)
+        if self._extend_prefill:
+            # sliding-window layers: write the prompt at absolute page
+            # slots via one whole-prompt extend step
+            self.kv.ensure(e.slot, L)
+            bt = self._bt_slice(e.slot, L)
+            logits, self.cache = self._extend(
+                self.params, self.cache, tokens,
+                jnp.asarray([0], jnp.int32), bt,
+                jnp.asarray([L], jnp.int32))
+            self._emit_first_token(e, logits, L)
+            self.stats["prefill_s"] += time.time() - t0
+            return
+        if self.cache_kind == "paged":
+            self.kv.ensure(e.slot, L)
+            last_logits, row_cache = self._prefill(self.params, tokens,
+                                                   last, len(padded))
+            npg = -(-len(padded) // self.page_size)
+            ids = self.kv.owned_pages(e.slot)
+            ids = (ids + [0] * npg)[:npg]       # null-page pad: masked out
+            self.cache = self._scatter(self.cache, row_cache,
+                                       jnp.int32(e.slot),
+                                       jnp.asarray(ids, jnp.int32),
+                                       jnp.int32(L))
+        else:
+            last_logits, cache1 = self._prefill(self.params, tokens, last,
+                                                self.max_len)
+            slot = e.slot
+
+            def merge(batch_leaf, one_leaf):
+                # leaves: (G, B, ...) vs (G, 1, ...)
+                return batch_leaf.at[:, slot].set(one_leaf[:, 0])
+            self.cache = jax.tree.map(merge, self.cache, cache1)
+        self._emit_first_token(e, last_logits, L)
         self.stats["prefill_s"] += time.time() - t0
 
-    # ---------------- engine ----------------
-    def run(self, requests: list[Request]):
-        pending = list(requests)
-        while pending or any(r is not None for r in self.active):
-            # admit
-            while pending:
-                slot = self._free_slot()
-                if slot is None:
-                    break
-                self._admit(pending.pop(0), slot)
-            # decode tick
-            t0 = time.time()
-            toks = jnp.asarray(self.cur[:, None], jnp.int32)
-            pos = jnp.asarray(self.pos, jnp.int32)
+    def _emit_first_token(self, e, last_logits, prompt_len):
+        tok = int(jnp.argmax(last_logits[0]))
+        e.req.out.append(tok)
+        if not e.metrics.t_first_token:
+            e.metrics.t_first_token = time.time()
+        self.pos[e.slot] = prompt_len
+        self.cur[e.slot] = tok
+        e.prefilled = prompt_len
+        # the prefill-produced token can already satisfy the request
+        if (len(e.req.out) >= e.req.max_new_tokens
+                or (e.req.eos is not None and tok == e.req.eos)):
+            self.sched.finish(e.slot)
+
+    def _bt_slice(self, slot, n_tokens):
+        """Block-table row cut to the pages covering n_tokens, so the
+        extend gather is O(live tokens) — not O(max_len) — per chunk.
+        The jit retraces per distinct page count (bounded by
+        max_pages_per_seq)."""
+        npg = self.kv.pages_for(n_tokens)
+        return jnp.asarray(self.kv.block_tables[slot:slot + 1, :npg])
+
+    # ---------------- chunked prefill ----------------
+    def _prefill_tick(self):
+        """Advance the oldest admitted-but-unprefilled sequence by one
+        chunk; long prompts therefore never stall decode ticks."""
+        pending = [e for e in self.sched.running.values()
+                   if e.prefilled < len(e.prompt)]
+        if not pending:
+            return
+        e = min(pending, key=lambda x: x.metrics.t_admit)
+        t0 = time.time()
+        C = self.prefill_chunk
+        s = e.prefilled
+        chunk = e.prompt[s:s + C]
+        nv = len(chunk)
+        padded = np.zeros((C,), np.int32)
+        padded[:nv] = chunk
+        if not self.sched.ensure_decode_capacity(e.slot, s + nv):
+            return    # evicted while growing; it will be re-admitted
+        bt = self._bt_slice(e.slot, s + nv)
+        logits, self.cache = self._extend(
+            self.params, self.cache, jnp.asarray(padded[None], jnp.int32),
+            jnp.asarray([s], jnp.int32), bt,
+            jnp.asarray([nv], jnp.int32))
+        e.prefilled = s + nv
+        if e.prefilled >= len(e.prompt):
+            self._emit_first_token(e, logits, len(e.prompt))
+        self.stats["prefill_s"] += time.time() - t0
+
+    # ---------------- decode ----------------
+    def _decode_ready(self):
+        return [s for s, e in self.sched.running.items()
+                if e.prefilled >= len(e.prompt)]
+
+    def _decode_tick(self):
+        ready = self._decode_ready()
+        if not ready:
+            return
+        if self.cache_kind == "paged":
+            grown = []
+            for slot in ready:
+                if slot not in self.sched.running:
+                    continue    # evicted while growing an earlier slot
+                # the new token lands at pos -> need pos+1 capacity
+                if self.sched.ensure_decode_capacity(
+                        slot, int(self.pos[slot]) + 1):
+                    grown.append(slot)
+            # a later growth may have evicted an earlier grown slot
+            ready = [s for s in grown if s in self.sched.running]
+            if not ready:
+                return
+        t0 = time.time()
+        toks = jnp.asarray(self.cur[:, None], jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        if self.cache_kind == "paged":
+            bt = self.kv.block_tables.copy()
+            not_ready = [s for s in range(self.B) if s not in ready]
+            bt[not_ready, :] = 0    # route their writes to the null page
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              toks, pos, jnp.asarray(bt))
+        else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos)
-            logits.block_until_ready()
-            self.stats["decode_s"] += time.time() - t0
-            self.stats["ticks"] += 1
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, req in enumerate(self.active):
-                if req is None:
-                    continue
-                self.stats["tokens"] += 1
-                tok = int(nxt[i])
-                req.out.append(tok)
-                self.pos[i] += 1
-                self.cur[i] = tok
-                hit_eos = req.eos is not None and tok == req.eos
-                if (len(req.out) >= req.max_new_tokens or hit_eos
-                        or self.pos[i] >= self.max_len - 1):
-                    req.done = True
-                    self.active[i] = None
+        logits.block_until_ready()
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["ticks"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in ready:
+            e = self.sched.running[slot]
+            self.stats["tokens"] += 1
+            tok = int(nxt[slot])
+            e.req.out.append(tok)
+            self.pos[slot] += 1
+            self.cur[slot] = tok
+            hit_eos = e.req.eos is not None and tok == e.req.eos
+            if (len(e.req.out) >= e.req.max_new_tokens or hit_eos
+                    or self.pos[slot] >= self._seq_cap() - 1):
+                self.sched.finish(slot)
+
+    # ---------------- engine ----------------
+    def _seq_cap(self) -> int:
+        """Per-sequence token capacity: max_len, further bounded by what
+        the page pool can ever hold for one sequence — sequences truncate
+        here (like dense at max_len) instead of outgrowing the pool."""
+        if self.cache_kind == "dense":
+            return self.max_len
+        return min(self.max_len, self.kv.usable_pages * self.page_size)
+
+    def run(self, requests: list[Request]):
+        cap = self._seq_cap()
+        # validate the whole batch BEFORE submitting anything: a rejected
+        # request must not leave earlier ones queued in the scheduler
+        for r in requests:
+            if len(r.prompt) >= cap:
+                raise ValueError(
+                    f"prompt of {len(r.prompt)} tokens cannot fit the "
+                    f"engine capacity of {cap} tokens")
+            if self.cache_kind == "paged":
+                # same arithmetic as the admission gate, so an unservable
+                # request is rejected here instead of crashing mid-run
+                need = self.sched.admission_need(len(r.prompt))
+                if need > self.kv.usable_pages:
+                    raise ValueError(
+                        f"prompt of {len(r.prompt)} tokens needs {need} "
+                        f"pages (incl. watermark) but the pool only has "
+                        f"{self.kv.usable_pages}")
+        for r in requests:
+            self.sched.submit(r)
+        self._entries = list(self.sched.waiting)
+        while self.sched.has_work():
+            while True:
+                e = self.sched.try_admit()
+                if e is None:
+                    break
+                self._admit(e)
+            if self.cache_kind == "paged" and self.prefill_chunk:
+                self._prefill_tick()
+            self._decode_tick()
+        self.stats.update(self.sched.metrics_summary(self._entries))
         return requests

@@ -1,0 +1,159 @@
+"""Block-table paged KV cache: host-side page allocator over the device
+page pool built by models.model.init_paged_cache.
+
+Layout:
+  - device pool, per attention layer: k/v pages (G, n_pages, page_size,
+    Hkv, hd). Page 0 is the *null page* — never allocated; inactive
+    batch rows and masked prefill padding write there so the scatter in
+    the decode step needs no branch.
+  - block table: (max_seqs, max_pages_per_seq) int32, row = sequence
+    slot, entry = page id (0 for unused slots, which is always a valid
+    DMA target for the Pallas kernel).
+
+The allocator is plain numpy/python — allocation decisions are host-side
+scheduler work (microseconds) while the pool itself stays on device and
+is functionally updated (donated) by decode/prefill steps.
+
+Invariants (asserted in tests/test_paged_kv.py):
+  - a page is owned by at most one sequence;
+  - free_pages + sum(owned) == n_pages - 1 (null page excluded);
+  - block-table entries beyond a sequence's page count are 0.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.model import init_paged_cache
+
+
+class OutOfPages(Exception):
+    """Raised when an allocation cannot be satisfied; the scheduler
+    responds by preempting a sequence (eviction) and retrying."""
+
+
+class PagedKVCache:
+    def __init__(self, cfg, *, n_pages, page_size, max_seqs,
+                 max_pages_per_seq=None, dtype=None):
+        assert n_pages >= 2, "need at least the null page + one real page"
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.n_pages = int(n_pages)
+        self.max_seqs = int(max_seqs)
+        self.max_pages_per_seq = (int(max_pages_per_seq)
+                                  if max_pages_per_seq else n_pages - 1)
+        self.pool = init_paged_cache(cfg, n_pages, page_size, max_seqs,
+                                     dtype)
+        self._pool_taken = False
+        self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
+                                     np.int32)
+        # page 0 reserved as the null page
+        self._free = list(range(n_pages - 1, 0, -1))
+        self._owned: list[list[int]] = [[] for _ in range(max_seqs)]
+        self._active = np.zeros((max_seqs,), bool)
+        self.high_water = 0
+
+    def take_pool(self):
+        """Hand the device pool to the caller (the engine functionally
+        updates + donates it; keeping a reference here would defeat
+        donation). compact() then takes the pool as an argument."""
+        pool, self.pool = self.pool, None
+        self._pool_taken = True
+        return pool
+
+    # ---------------- accounting ----------------
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(self.usable_pages, 1)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def active_slots(self):
+        return [i for i in range(self.max_seqs) if self._active[i]]
+
+    # ---------------- slot lifecycle ----------------
+    def alloc_slot(self) -> int | None:
+        for i in range(self.max_seqs):
+            if not self._active[i]:
+                self._active[i] = True
+                return i
+        return None
+
+    def ensure(self, slot: int, n_tokens: int) -> None:
+        """Grow slot's page list to cover n_tokens; raises OutOfPages
+        (allocating nothing) when the pool can't satisfy the growth."""
+        assert self._active[slot], slot
+        need = self.pages_for(n_tokens) - len(self._owned[slot])
+        if need <= 0:
+            return
+        if self.pages_for(n_tokens) > self.max_pages_per_seq:
+            raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
+                             f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need > len(self._free):
+            raise OutOfPages(f"slot {slot}: need {need} pages, "
+                             f"{len(self._free)} free")
+        for _ in range(need):
+            pid = self._free.pop()
+            idx = len(self._owned[slot])
+            self._owned[slot].append(pid)
+            self.block_tables[slot, idx] = pid
+        self.high_water = max(self.high_water, self.used_pages)
+
+    def release(self, slot: int) -> None:
+        """Free a sequence's pages (completion or preemption). The pool
+        contents are left as-is — pages are reused by overwrite."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.block_tables[slot, :] = 0
+        self._active[slot] = False
+
+    def owned_pages(self, slot: int):
+        return list(self._owned[slot])
+
+    # ---------------- defrag ----------------
+    def compact(self, pool=None):
+        """Remap live pages onto the lowest page ids (gather on device,
+        rewrite block tables) and return the compacted pool. Paging has
+        no *internal* fragmentation to fix — this exists so long-lived
+        engines can shrink the pool's high-water footprint (e.g. before
+        snapshotting a pool slice). Pass the pool explicitly when the
+        engine took ownership via take_pool()."""
+        import jax
+        import jax.numpy as jnp
+
+        if pool is None:
+            assert not self._pool_taken, "pool was taken; pass it in"
+            pool = self.pool
+
+        src = np.arange(self.n_pages, dtype=np.int32)
+        nxt = 1
+        for slot in range(self.max_seqs):
+            for j, pid in enumerate(self._owned[slot]):
+                src[nxt] = pid
+                self._owned[slot][j] = nxt
+                self.block_tables[slot, j] = nxt
+                nxt += 1
+
+        def move(leaf):
+            # page pools have the page axis at dim 1 (after the group
+            # stack); per-slot state (mamba) is left alone
+            if leaf.ndim == 5 and leaf.shape[1] == self.n_pages:
+                return leaf[:, jnp.asarray(src)]
+            return leaf
+
+        pool = jax.tree.map(move, pool)
+        self._free = list(range(self.n_pages - 1, nxt - 1, -1))
+        if not self._pool_taken:
+            self.pool = pool
+        return pool

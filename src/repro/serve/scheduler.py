@@ -1,0 +1,182 @@
+"""Continuous-batching scheduler: FCFS admission gated on free KV pages,
+chunked prefill, preemption-by-eviction, and per-request metrics.
+
+The scheduler owns the queue/lifecycle policy and the page accounting;
+the engine owns the model calls. Separation matters: every later scaling
+PR (sharded serving, multi-host routing) swaps the engine's model calls
+while reusing this policy layer unchanged.
+
+Policies (see docs/SERVING.md):
+  - admission: FCFS. A request is admitted when a sequence slot is free
+    AND the pool can hold its prompt pages plus `watermark` spare pages
+    (the spare keeps one decode tick's growth from immediately starving).
+  - prefill: optionally chunked — at most one chunk of one admitted
+    request is processed per engine tick, so a long prompt cannot stall
+    the decode ticks of already-running sequences.
+  - preemption: when decode growth runs out of pages, the *youngest*
+    active sequence (LIFO) is evicted — its pages are freed and the
+    request re-queued at the queue front with prompt := prompt + tokens
+    generated so far (recompute-on-resume, the classic vLLM recovery).
+    Greedy decoding makes the recomputation exact.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.kv_cache import OutOfPages, PagedKVCache
+
+
+@dataclass
+class RequestMetrics:
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    n_prompt: int = 0
+    n_generated: int = 0
+    n_preemptions: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        return (self.t_first_token - self.t_submit) if self.t_first_token else 0.0
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first."""
+        if self.n_generated <= 1 or not self.t_done:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (self.n_generated - 1)
+
+
+@dataclass
+class _Entry:
+    req: object                       # engine Request
+    prompt: np.ndarray                # current (possibly extended) prompt
+    metrics: RequestMetrics = field(default_factory=RequestMetrics)
+    slot: int = -1
+    prefilled: int = 0                # prompt tokens already in pages
+
+
+class Scheduler:
+    """FCFS continuous batching over a PagedKVCache."""
+
+    def __init__(self, kv: PagedKVCache, *, watermark: int = 1,
+                 prefill_chunk: int | None = None):
+        self.kv = kv
+        self.watermark = int(watermark)
+        self.prefill_chunk = prefill_chunk
+        self.waiting: deque[_Entry] = deque()
+        self.running: dict[int, _Entry] = {}   # slot -> entry
+        self.preemptions = 0
+
+    # ---------------- queue ----------------
+    def submit(self, req) -> None:
+        e = _Entry(req=req, prompt=np.asarray(req.prompt, np.int32))
+        e.metrics.t_submit = time.time()
+        e.metrics.n_prompt = len(e.prompt)
+        self.waiting.append(e)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ---------------- admission ----------------
+    def admission_need(self, prompt_len: int, *, resumed: bool = False) -> int:
+        """Pages required to admit a prompt: its pages + one decode
+        token + the watermark. Resumed (preempted) entries skip the
+        watermark: their grown prompt is already bounded by the engine's
+        capacity truncation, and they must get back in to finish. The
+        engine's run()-time validation uses the same arithmetic."""
+        wm = 0 if resumed else self.watermark
+        return self.kv.pages_for(prompt_len + 1) + wm
+
+    def try_admit(self) -> _Entry | None:
+        """Admit the queue head if a slot + its prompt pages fit."""
+        if not self.waiting:
+            return None
+        e = self.waiting[0]
+        need = self.admission_need(len(e.prompt),
+                                   resumed=e.metrics.n_preemptions > 0)
+        if need > self.kv.usable_pages:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.kv.usable_pages}; it can never be admitted")
+        if need > self.kv.free_page_count:
+            return None
+        slot = self.kv.alloc_slot()
+        if slot is None:
+            return None
+        self.waiting.popleft()
+        e.slot = slot
+        e.prefilled = 0
+        e.metrics.t_admit = time.time()
+        self.running[slot] = e
+        return e
+
+    # ---------------- preemption ----------------
+    def _preempt_slot(self, slot: int) -> _Entry:
+        """Evict one running sequence: free its pages, requeue it at the
+        queue front with prompt := prompt + generated-so-far (recompute
+        on resume; exact under greedy decoding)."""
+        e = self.running.pop(slot)
+        self.kv.release(slot)
+        if e.req.out:
+            gen = np.asarray(e.req.out, np.int32)
+            e.prompt = np.concatenate([np.asarray(e.req.prompt, np.int32),
+                                       gen])
+        e.slot = -1
+        e.prefilled = 0
+        e.metrics.n_preemptions += 1
+        self.preemptions += 1
+        self.waiting.appendleft(e)
+        return e
+
+    def preempt_one(self) -> _Entry | None:
+        """Evict the youngest running sequence (LIFO victim policy) that
+        actually owns pages — evicting a freshly admitted zero-page entry
+        (chunked mode reserves the slot before any pages) frees nothing."""
+        if not self.running:
+            return None
+        owners = [s for s in self.running if self.kv.owned_pages(s)]
+        slot = max(owners or self.running,
+                   key=lambda s: self.running[s].metrics.t_admit)
+        return self._preempt_slot(slot)
+
+    def ensure_decode_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Grow `slot` to hold n_tokens, evicting other sequences while
+        the pool is dry. Returns False if `slot` itself got evicted
+        (it was the youngest, or nothing else was left to take from)."""
+        while True:
+            try:
+                self.kv.ensure(slot, n_tokens)
+                return True
+            except OutOfPages:
+                if len(self.running) > 1:
+                    self.preempt_one()
+                else:
+                    self._preempt_slot(slot)
+                if slot not in self.running:
+                    return False
+
+    # ---------------- completion ----------------
+    def finish(self, slot: int) -> None:
+        e = self.running.pop(slot)
+        self.kv.release(slot)
+        e.metrics.t_done = time.time()
+        e.metrics.n_generated = len(e.req.out)
+        e.req.done = True
+
+    def metrics_summary(self, entries) -> dict:
+        ms = [e.metrics for e in entries]
+        done = [m for m in ms if m.t_done]
+        return {
+            "n_done": len(done),
+            "preemptions": self.preemptions,
+            "ttft_avg_s": float(np.mean([m.ttft_s for m in done])) if done else 0.0,
+            "tpot_avg_s": float(np.mean([m.tpot_s for m in done])) if done else 0.0,
+            "kv_high_water_pages": self.kv.high_water,
+            "kv_usable_pages": self.kv.usable_pages,
+        }

@@ -1,0 +1,61 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed (the CPU CI
+image): runs each property test on `max_examples` deterministic
+pseudo-random draws from the strategy space, seeded by the test name so
+failures reproduce. Only the tiny API surface the suite uses.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+
+def settings(**kw):
+    def deco(fn):
+        fn._fallback_settings = kw
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-arg
+        # signature, not the strategy parameters (it would treat them
+        # as fixtures)
+        def run():
+            # @settings may sit above OR below @given — check both
+            cfg = (getattr(run, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", {}))
+            n = cfg.get("max_examples", 10)
+            rng = random.Random(fn.__name__)
+            for _ in range(n):
+                fn(*[s.example(rng) for s in strats])
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco

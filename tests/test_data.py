@@ -1,7 +1,10 @@
 """Data pipeline + corpus + evaluation tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CPU CI image without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data import (ByteTokenizer, batches, calibration_slices,
                         eval_batches, generate_corpus, token_stream)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CPU CI image without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
@@ -102,6 +105,19 @@ def test_quantized_tensor_pytree_and_scan():
     want = sum(np.asarray(ref.bcq_matmul_ref(
         x, codes[g], alphas[g], betas[g], K)) for g in range(G))
     np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("M", [12, 100, 104])
+def test_bcq_matmul_odd_m_rounds_block_to_sublanes(M):
+    """Regression: the small-M shortcut used to pick bm=M directly, which
+    for e.g. M=100 is not a multiple of the 8-sublane tile."""
+    rng = np.random.default_rng(M)
+    codes, alphas, betas = _rand_qt(rng, 128, 96, 3)
+    x = jnp.asarray(rng.standard_normal((M, 128)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, 128)
+    got = bcq_matmul(x, codes, alphas, betas, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("block_m,block_n,block_k",

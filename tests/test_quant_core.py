@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CPU CI image without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (bcq_alternating, bcq_greedy, enumerate_bc_choices,
                         gptq_solve, hessian_from_inputs, linear_levels,

@@ -1,6 +1,9 @@
 """Roofline machinery units: wire-factor math, extrapolation, hlo profile."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CPU CI image without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.launch import dryrun as dr
 from repro.roofline.analysis import (CollectiveStats, parse_collectives,

@@ -49,6 +49,41 @@ def test_engine_handles_more_requests_than_slots():
     assert eng.stats["tokens"] >= 5 * 3
 
 
+def test_bucketed_prefill_outputs_identical():
+    """Power-of-two prompt bucketing (admission retrace fix) must not
+    change outputs: padding K/V is causally masked during prefill and
+    overwritten by decode before the mask ever exposes it."""
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+
+    def serve(bucket):
+        outs = []
+        for L in (9, 10, 12, 13):
+            eng = ServeEngine(cfg, p, batch_size=2, max_len=64,
+                              dtype="float32", bucket_prompts=bucket)
+            req = Request(prompt=(np.arange(L) * 5 + L).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=5)
+            eng.run([req])
+            outs.append((req.out, eng))
+        return outs
+
+    bucketed = serve(True)
+    exact = serve(False)
+    assert [o for o, _ in bucketed] == [o for o, _ in exact]
+
+
+def test_bucketed_prefill_amortizes_traces():
+    """Distinct prompt lengths inside one bucket share one prefill trace."""
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32")
+    reqs = [Request(prompt=(np.arange(L) + 3).astype(np.int32) % 200,
+                    max_new_tokens=2) for L in (9, 10, 11, 12, 14, 16)]
+    eng.run(reqs)
+    # lengths 9..16 all pad to the 16 bucket -> exactly one compilation
+    assert eng._prefill._cache_size() == 1
+
+
 @pytest.mark.slow
 def test_system_end_to_end_train_quantize_serve(tmp_path):
     """The whole story: train a tiny LM, GPTQT-quantize (packed), serve,
