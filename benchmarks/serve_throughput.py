@@ -1,4 +1,5 @@
-"""Serving throughput: dense-slot vs paged engine on the tiny config.
+"""Serving throughput: dense-slot vs paged engine on the tiny config,
+plus the shared-system-prompt scenario for the radix prefix cache.
 
 Sweeps request concurrency and reports decode throughput (tokens/s),
 time-to-first-token and time-per-output-token for both cache backends,
@@ -6,6 +7,12 @@ plus the paged pool's page high-water — the number that explains WHY
 paged sustains load: with c concurrent requests the dense engine pins
 c * max_len KV slots while the paged pool's footprint tracks live
 tokens.
+
+The shared-prefix scenario mirrors multi-user traffic behind one system
+prompt: every request is `system prompt (SHARED_PREFIX tokens) + short
+user turn`. With prefix sharing the engine prefills the system prompt
+once and serves every later request from the radix index, so TTFT and
+prefill token counts drop against the no-sharing paged baseline.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput
 """
@@ -20,6 +27,10 @@ MAX_LEN = 128
 PAGE = 32
 MAX_NEW = 24
 PROMPT_LEN = 16
+
+SHARED_PREFIX = 64      # system-prompt tokens shared by every request
+SHARED_TAIL = 8         # per-user suffix tokens
+SHARED_MAX_NEW = 12
 
 
 def _requests(vocab, n):
@@ -51,6 +62,56 @@ def _serve(cfg, params, kind, concurrency):
     }
 
 
+def _shared_prefix_requests(vocab, n, wave=0):
+    from repro.serve import Request
+    prefix = (np.arange(SHARED_PREFIX) * 13 + 3).astype(np.int32) % vocab
+    out = []
+    for i in range(n):
+        uid = 100 * wave + i
+        tail = (np.arange(SHARED_TAIL) * 7 + 11 * uid + 1).astype(np.int32) % vocab
+        out.append(Request(prompt=np.concatenate([prefix, tail]),
+                           max_new_tokens=SHARED_MAX_NEW))
+    return out
+
+
+def _serve_shared(cfg, params, sharing, concurrency):
+    """Shared-system-prompt workload on the paged engine, with the radix
+    prefix cache on or off. One long-lived engine serves a first wave of
+    users (jit warmup + index population), then the measured wave — new
+    user suffixes behind the same system prompt, the steady state the
+    radix cache targets."""
+    from repro.serve import ServeEngine
+
+    eng = ServeEngine(cfg, params, batch_size=concurrency,
+                      max_len=MAX_LEN, dtype="float32",
+                      cache_kind="paged", page_size=PAGE,
+                      prefix_sharing=sharing)
+    eng.run(_shared_prefix_requests(cfg.vocab_size, concurrency, wave=0))
+    for k in ("prefill_tokens", "tokens"):
+        eng.stats[k] = 0
+    base = {k: eng.stats.get(k, 0)
+            for k in ("prefix_hits", "cow_forks", "prefix_tokens_saved")}
+    eng.stats["decode_s"] = 0.0
+    reqs = _shared_prefix_requests(cfg.vocab_size, concurrency, wave=1)
+    t0 = time.time()
+    eng.run(reqs)
+    wall = time.time() - t0
+    s = dict(eng.stats)
+    for k, v in base.items():
+        s[k] = s.get(k, 0) - v
+    return {
+        "wall_s": wall,
+        "tok_s": s["tokens"] / max(s["decode_s"], 1e-9),
+        "ttft_s": s["ttft_avg_s"],
+        "prefill_tokens": s["prefill_tokens"],
+        "saved_tokens": s["prefix_tokens_saved"],
+        "prefix_hits": s["prefix_hits"],
+        "cow_forks": s["cow_forks"],
+        "pages_hw": s["kv_high_water_pages"],
+        "us_per_tok": 1e6 * s["decode_s"] / max(s["tokens"], 1),
+    }
+
+
 def main() -> None:
     from benchmarks.common import emit
     from repro.configs import get_config
@@ -68,6 +129,20 @@ def main() -> None:
                  f"tok_s={r['tok_s']:.1f};ttft_s={r['ttft_s']:.3f};"
                  f"tpot_s={r['tpot_s']:.4f};pages={r['pages_hw']}/"
                  f"{r['pages_total']}")
+
+    # shared-system-prompt scenario: prefix sharing vs no-sharing
+    for c in (4, 8):
+        base = _serve_shared(cfg, params, False, c)
+        shared = _serve_shared(cfg, params, True, c)
+        speedup = base["ttft_s"] / max(shared["ttft_s"], 1e-9)
+        emit(f"serve_shared_prefix_c{c}", shared["us_per_tok"],
+             f"ttft_s={shared['ttft_s']:.3f};ttft_base_s="
+             f"{base['ttft_s']:.3f};ttft_speedup={speedup:.2f}x;"
+             f"tok_s={shared['tok_s']:.1f};tok_s_base={base['tok_s']:.1f};"
+             f"prefill_toks={shared['prefill_tokens']}/"
+             f"{base['prefill_tokens']};hits={shared['prefix_hits']};"
+             f"cow={shared['cow_forks']};pages_hw={shared['pages_hw']}/"
+             f"{base['pages_hw']}")
 
 
 if __name__ == "__main__":

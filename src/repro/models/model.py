@@ -262,6 +262,19 @@ def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None):
     return cache
 
 
+def copy_pages(cache, src, dst, n_pages):
+    """Copy-on-write fork: duplicate page src[i] -> dst[i] in every
+    attention layer's K/V pool (paged-cache layout, page axis at dim 1
+    after the group stack; mamba per-slot state is left alone). src/dst
+    are (n,) int32 page ids; (0, 0) pairs are harmless null-page no-ops,
+    used by the engine to pad the copy list to a fixed trace shape."""
+    def move(leaf):
+        if leaf.ndim == 5 and leaf.shape[1] == n_pages:
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+    return jax.tree.map(move, cache)
+
+
 def _last_positions(x, last_pos):
     """x (B, S, D) -> (B, 1, D) at per-row index `last_pos` ((B,) int32),
     or the final position when last_pos is None (exact prompts)."""

@@ -7,7 +7,12 @@ two cache backends behind one switch.
   cache_kind="paged"  — block-table paged KV (serve/kv_cache.py): all
     sequences share a global page pool; admission is gated on free pages
     (not slots), so short/finished sequences return their memory and the
-    engine sustains more concurrency under the same byte budget.
+    engine sustains more concurrency under the same byte budget. With
+    prefix sharing (default on for attention-only configs) a radix index
+    (serve/prefix_cache.py) maps completed prefill pages to token
+    prefixes: a request with an N-token cached prefix attaches those
+    pages by reference, skips N tokens of prefill, and allocates only
+    its suffix pages — shared pages fork copy-on-write before any write.
 
 Both run on the same FCFS Scheduler (serve/scheduler.py) for queueing,
 admission, preemption and TTFT/TPOT metrics. Works with plain bf16/fp32
@@ -27,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import (decode_step, decode_step_paged, extend_paged,
-                                init_cache, prefill, scatter_prefill_cache)
+from repro.models.model import (copy_pages, decode_step, decode_step_paged,
+                                extend_paged, init_cache, prefill,
+                                scatter_prefill_cache)
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.scheduler import Scheduler
 
@@ -85,6 +91,9 @@ class DenseSlotPool:
     def ensure(self, slot: int, n_tokens: int) -> None:
         assert n_tokens <= self.max_len, (n_tokens, self.max_len)
 
+    def cow_for_write(self, slot: int, start_tok: int, end_tok: int):
+        return []
+
     def owned_pages(self, slot: int):
         return [slot] if self._active[slot] else []
 
@@ -96,8 +105,13 @@ class ServeEngine:
     def __init__(self, cfg, params, *, batch_size=4, max_len=512,
                  dtype=None, greedy=True, cache_kind="dense",
                  page_size=64, n_pages=None, prefill_chunk=None,
-                 bucket_prompts=True, watermark=1):
+                 bucket_prompts=True, watermark=1, prefix_sharing=True):
         assert cache_kind in ("dense", "paged"), cache_kind
+        if cache_kind == "paged" and cfg.mla is not None:
+            raise NotImplementedError(
+                "cache_kind='paged' does not support MLA latent caches "
+                "yet (ROADMAP: 'page the MLA latent cache'); use "
+                "cache_kind='dense'")
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -120,6 +134,7 @@ class ServeEngine:
         # through the extend path (which is attention-only)
         self._extend_prefill = cache_kind == "paged" and \
             (bool(prefill_chunk) or not no_window)
+        self._prefix = None
         if cache_kind == "paged":
             if self._extend_prefill and not attn_only:
                 raise NotImplementedError(
@@ -135,6 +150,11 @@ class ServeEngine:
                                    max_pages_per_seq=pages_per_seq,
                                    dtype=dtype)
             self.page_size = page_size
+            # prefix sharing skips matched prefill via the extend path,
+            # so it has the same attention-only requirement
+            if prefix_sharing and attn_only:
+                from repro.serve.prefix_cache import RadixPrefixCache
+                self._prefix = RadixPrefixCache(self.kv)
             self.cache = self.kv.take_pool()
             self._decode = jax.jit(
                 lambda p, c, t, s, bt: decode_step_paged(cfg, p, c, t, s, bt),
@@ -147,6 +167,9 @@ class ServeEngine:
                 lambda p, c, t, sp, bt, nv: extend_paged(cfg, p, c, t, sp,
                                                          bt, nv),
                 donate_argnums=(1,))
+            self._copy = jax.jit(
+                lambda c, s, d: copy_pages(c, s, d, n_pages),
+                donate_argnums=(0,))
         else:
             if prefill_chunk:
                 raise NotImplementedError(
@@ -160,15 +183,31 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self.sched = Scheduler(
             self.kv, watermark=watermark if cache_kind == "paged" else 0,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, prefix=self._prefix)
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
         self._prefill = jax.jit(
             lambda p, t, lp, ml: prefill(cfg, p, t, ml, last_pos=lp),
             static_argnums=(3,))
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
-                      "ticks": 0}
+                      "ticks": 0, "prefill_tokens": 0}
         self._entries = []
+
+    # ---------------- COW fork application ----------------
+    def _apply_copies(self, copies) -> None:
+        """Apply allocator COW forks to the device pool. The copy list
+        is padded with (0, 0) null-page no-ops to a power-of-two length
+        so the jit compiles once per bucket, not once per fork count."""
+        if not copies:
+            return
+        n = 1
+        while n < len(copies):
+            n *= 2
+        src = [s for s, _ in copies] + [0] * (n - len(copies))
+        dst = [d for _, d in copies] + [0] * (n - len(copies))
+        self.cache = self._copy(self.cache,
+                                jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))
 
     # ---------------- admission ----------------
     def _padded_prompt(self, prompt):
@@ -180,15 +219,46 @@ class ServeEngine:
 
     def _admit(self, e):
         t0 = time.time()
+        if e.shared_tokens:
+            # attach the matched prefix pages by reference BEFORE any
+            # allocation: the attach pins them (refcount >= 2) against
+            # the allocator's index reclaim
+            self.kv.share(e.slot, e.shared_pages)
+            e.prefilled = e.shared_tokens
         if self.prefill_chunk:
-            # chunked mode: admission only reserves the slot; prompt
-            # tokens flow through _prefill_tick one chunk per engine tick
+            # chunked mode: admission only reserves the slot (plus any
+            # shared prefix); prompt tokens flow through _prefill_tick
+            # one chunk per engine tick
             self.pos[e.slot] = 0
+            self.stats["prefill_s"] += time.time() - t0
+            return
+        L = len(e.prompt)
+        if e.shared_tokens:
+            # prefix hit: prefill only the unshared suffix through the
+            # extend path; the COW fork (if the match ends mid-page)
+            # happens before the suffix K/V lands in pages
+            N = e.shared_tokens
+            suffix = e.prompt[N:]
+            nv = len(suffix)
+            C = bucket_len(nv, self.max_len) if self._bucket else nv
+            padded = np.zeros((C,), np.int32)
+            padded[:nv] = suffix
+            self.kv.ensure(e.slot, L)
+            self._apply_copies(self.kv.cow_for_write(e.slot, N, L))
+            bt = self._bt_slice(e.slot, L)
+            logits, self.cache = self._extend(
+                self.params, self.cache,
+                jnp.asarray(padded[None], jnp.int32),
+                jnp.asarray([N], jnp.int32), bt,
+                jnp.asarray([nv], jnp.int32))
+            self.stats["prefill_tokens"] += nv
+            self._emit_first_token(e, logits, L)
             self.stats["prefill_s"] += time.time() - t0
             return
         padded, L = self._padded_prompt(e.prompt)
         tokens = jnp.asarray(padded[None, :], jnp.int32)
         last = jnp.asarray([L - 1], jnp.int32)
+        self.stats["prefill_tokens"] += L
         if self._extend_prefill:
             # sliding-window layers: write the prompt at absolute page
             # slots via one whole-prompt extend step
@@ -232,10 +302,36 @@ class ServeEngine:
         self.pos[e.slot] = prompt_len
         self.cur[e.slot] = tok
         e.prefilled = prompt_len
+        if self._prefix is not None:
+            # index the prompt's full pages right away so concurrent
+            # same-prefix requests share them; these pages are never
+            # written again (decode lands at positions >= prompt_len).
+            # The partial tail page is indexed at finish() instead —
+            # indexing it now would force a COW fork on the very next
+            # decode token.
+            nfull = prompt_len // self.page_size
+            if nfull:
+                self._prefix.insert(
+                    np.asarray(e.prompt[:nfull * self.page_size]),
+                    self.kv.owned_pages(e.slot)[:nfull])
         # the prefill-produced token can already satisfy the request
         if (len(e.req.out) >= e.req.max_new_tokens
                 or (e.req.eos is not None and tok == e.req.eos)):
-            self.sched.finish(e.slot)
+            self._finish(e)
+
+    def _finish(self, e):
+        """Complete a request, handing the tokens whose KV its pages
+        hold (prompt + generated-minus-last) to the scheduler so the
+        radix index can retain them for future prefix hits."""
+        slot = e.slot
+        if self._prefix is None:
+            self.sched.finish(slot)
+            return
+        n_cached = int(self.pos[slot])
+        folded = len(e.prompt) - e.metrics.n_prompt   # resumed prompts
+        toks = np.concatenate([
+            e.prompt, np.asarray(e.req.out[folded:], np.int32)])[:n_cached]
+        self.sched.finish(slot, cached_tokens=toks)
 
     def _bt_slice(self, slot, n_tokens):
         """Block-table row cut to the pages covering n_tokens, so the
@@ -248,7 +344,9 @@ class ServeEngine:
     # ---------------- chunked prefill ----------------
     def _prefill_tick(self):
         """Advance the oldest admitted-but-unprefilled sequence by one
-        chunk; long prompts therefore never stall decode ticks."""
+        chunk; long prompts therefore never stall decode ticks. With a
+        prefix hit, chunking starts at the matched offset (prefilled
+        was set to shared_tokens at admission)."""
         pending = [e for e in self.sched.running.values()
                    if e.prefilled < len(e.prompt)]
         if not pending:
@@ -261,14 +359,17 @@ class ServeEngine:
         nv = len(chunk)
         padded = np.zeros((C,), np.int32)
         padded[:nv] = chunk
-        if not self.sched.ensure_decode_capacity(e.slot, s + nv):
+        ok, copies = self.sched.ensure_write_capacity(e.slot, s, s + nv)
+        if not ok:
             return    # evicted while growing; it will be re-admitted
+        self._apply_copies(copies)
         bt = self._bt_slice(e.slot, s + nv)
         logits, self.cache = self._extend(
             self.params, self.cache, jnp.asarray(padded[None], jnp.int32),
             jnp.asarray([s], jnp.int32), bt,
             jnp.asarray([nv], jnp.int32))
         e.prefilled = s + nv
+        self.stats["prefill_tokens"] += nv
         if e.prefilled >= len(e.prompt):
             self._emit_first_token(e, logits, len(e.prompt))
         self.stats["prefill_s"] += time.time() - t0
@@ -287,9 +388,14 @@ class ServeEngine:
             for slot in ready:
                 if slot not in self.sched.running:
                     continue    # evicted while growing an earlier slot
-                # the new token lands at pos -> need pos+1 capacity
-                if self.sched.ensure_decode_capacity(
-                        slot, int(self.pos[slot]) + 1):
+                # the new token lands at pos -> need pos+1 capacity, and
+                # a COW fork if that page is shared (its forks must hit
+                # the device pool before this slot is marked ready)
+                p = int(self.pos[slot])
+                ok, copies = self.sched.ensure_write_capacity(slot, p,
+                                                              p + 1)
+                if ok:
+                    self._apply_copies(copies)
                     grown.append(slot)
             # a later growth may have evicted an earlier grown slot
             ready = [s for s in grown if s in self.sched.running]
@@ -321,7 +427,7 @@ class ServeEngine:
             hit_eos = e.req.eos is not None and tok == e.req.eos
             if (len(e.req.out) >= e.req.max_new_tokens or hit_eos
                     or self.pos[slot] >= self._seq_cap() - 1):
-                self.sched.finish(slot)
+                self._finish(e)
 
     # ---------------- engine ----------------
     def _seq_cap(self) -> int:
@@ -342,7 +448,8 @@ class ServeEngine:
                     f"prompt of {len(r.prompt)} tokens cannot fit the "
                     f"engine capacity of {cap} tokens")
             if self.cache_kind == "paged":
-                # same arithmetic as the admission gate, so an unservable
+                # same arithmetic as the admission gate (with sharing
+                # counted as zero — it is best-effort), so an unservable
                 # request is rejected here instead of crashing mid-run
                 need = self.sched.admission_need(len(r.prompt))
                 if need > self.kv.usable_pages:

@@ -10,13 +10,28 @@ Layout:
     slot, entry = page id (0 for unused slots, which is always a valid
     DMA target for the Pallas kernel).
 
+Pages are *refcounted* so completed prefill pages can be shared between
+sequences through the radix prefix index (serve/prefix_cache.py): a page
+may appear in several block-table rows and/or be retained by the index.
+A shared page is immutable — any writer must fork it first
+(`cow_for_write`, copy-on-write), which preserves the invariant that a
+page is only ever written while its refcount is exactly 1.
+
 The allocator is plain numpy/python — allocation decisions are host-side
 scheduler work (microseconds) while the pool itself stays on device and
-is functionally updated (donated) by decode/prefill steps.
+is functionally updated (donated) by decode/prefill steps. COW forks
+return (src, dst) page-id pairs; the engine applies them on device via
+models.model.copy_pages before the write lands.
 
-Invariants (asserted in tests/test_paged_kv.py):
-  - a page is owned by at most one sequence;
-  - free_pages + sum(owned) == n_pages - 1 (null page excluded);
+Invariants (asserted in tests/test_paged_kv.py and the property suite
+tests/test_alloc_property.py):
+  - refcount conservation: free_pages + live_pages == n_pages - 1, where
+    a live page (refcount > 0) counts once no matter how many rows or
+    index nodes reference it;
+  - refcount[p] == (# slots whose block table holds p) + (1 if the
+    prefix index retains p else 0);
+  - no page is written while refcount > 1 (cow_for_write forks first);
+  - the null page 0 is never allocated, shared, or forked;
   - block-table entries beyond a sequence's page count are 0.
 """
 from __future__ import annotations
@@ -28,12 +43,13 @@ from repro.models.model import init_paged_cache
 
 class OutOfPages(Exception):
     """Raised when an allocation cannot be satisfied; the scheduler
-    responds by preempting a sequence (eviction) and retrying."""
+    responds by preempting a sequence (eviction) and retrying. The
+    allocator first tries to reclaim unreferenced prefix-index pages."""
 
 
 class PagedKVCache:
     def __init__(self, cfg, *, n_pages, page_size, max_seqs,
-                 max_pages_per_seq=None, dtype=None):
+                 max_pages_per_seq=None, dtype=None, create_pool=True):
         assert n_pages >= 2, "need at least the null page + one real page"
         self.cfg = cfg
         self.page_size = int(page_size)
@@ -41,8 +57,11 @@ class PagedKVCache:
         self.max_seqs = int(max_seqs)
         self.max_pages_per_seq = (int(max_pages_per_seq)
                                   if max_pages_per_seq else n_pages - 1)
-        self.pool = init_paged_cache(cfg, n_pages, page_size, max_seqs,
-                                     dtype)
+        # the property-based allocator tests exercise the accounting
+        # without paying for a device pool
+        self.pool = (init_paged_cache(cfg, n_pages, page_size, max_seqs,
+                                      dtype) if create_pool else None)
+        self._created_pool = bool(create_pool)
         self._pool_taken = False
         self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
                                      np.int32)
@@ -50,7 +69,11 @@ class PagedKVCache:
         self._free = list(range(n_pages - 1, 0, -1))
         self._owned: list[list[int]] = [[] for _ in range(max_seqs)]
         self._active = np.zeros((max_seqs,), bool)
+        self._refcount = np.zeros((n_pages,), np.int32)
+        self.prefix_index = None          # set by RadixPrefixCache
         self.high_water = 0
+        self.cow_forks = 0
+        self.pages_allocated = 0
 
     def take_pool(self):
         """Hand the device pool to the caller (the engine functionally
@@ -73,6 +96,14 @@ class PagedKVCache:
     def used_pages(self) -> int:
         return self.usable_pages - len(self._free)
 
+    @property
+    def live_pages(self) -> int:
+        """Distinct pages with refcount > 0 (each counted once)."""
+        return int((self._refcount > 0).sum())
+
+    def refcount(self, pid: int) -> int:
+        return int(self._refcount[pid])
+
     def utilization(self) -> float:
         return self.used_pages / max(self.usable_pages, 1)
 
@@ -90,9 +121,17 @@ class PagedKVCache:
                 return i
         return None
 
+    def _reclaim(self, shortfall: int) -> int:
+        """Ask the prefix index to drop its least-recently-used
+        unreferenced pages. Returns how many pages were freed."""
+        if shortfall <= 0 or self.prefix_index is None:
+            return 0
+        return self.prefix_index.evict(shortfall)
+
     def ensure(self, slot: int, n_tokens: int) -> None:
         """Grow slot's page list to cover n_tokens; raises OutOfPages
-        (allocating nothing) when the pool can't satisfy the growth."""
+        (allocating nothing) when the pool can't satisfy the growth,
+        after reclaiming unreferenced prefix-index pages."""
         assert self._active[slot], slot
         need = self.pages_for(n_tokens) - len(self._owned[slot])
         if need <= 0:
@@ -101,6 +140,8 @@ class PagedKVCache:
             raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
                              f"max_pages_per_seq={self.max_pages_per_seq}")
         if need > len(self._free):
+            self._reclaim(need - len(self._free))
+        if need > len(self._free):
             raise OutOfPages(f"slot {slot}: need {need} pages, "
                              f"{len(self._free)} free")
         for _ in range(need):
@@ -108,12 +149,80 @@ class PagedKVCache:
             idx = len(self._owned[slot])
             self._owned[slot].append(pid)
             self.block_tables[slot, idx] = pid
+            self._refcount[pid] = 1
+        self.pages_allocated += need
         self.high_water = max(self.high_water, self.used_pages)
 
+    def share(self, slot: int, page_ids) -> None:
+        """Attach already-live pages (a matched prefix) to a fresh slot:
+        the pages become the slot's leading block-table entries and gain
+        one reference each. Must precede any ensure() growth so page
+        index i keeps covering tokens [i*page_size, (i+1)*page_size)."""
+        assert self._active[slot], slot
+        assert not self._owned[slot], "share() must precede suffix alloc"
+        assert len(page_ids) <= self.max_pages_per_seq
+        for idx, pid in enumerate(page_ids):
+            assert pid != 0 and self._refcount[pid] > 0, pid
+            self._owned[slot].append(int(pid))
+            self.block_tables[slot, idx] = pid
+            self._refcount[pid] += 1
+
+    def cow_for_write(self, slot: int, start_tok: int, end_tok: int):
+        """Copy-on-write: the slot is about to write token positions
+        [start_tok, end_tok). Any of its pages in that range with
+        refcount > 1 is forked onto a fresh page (the shared original
+        keeps its other references). Returns the [(src, dst), ...]
+        page copies the caller must apply to the device pool BEFORE the
+        write. Raises OutOfPages (forking nothing) when the pool cannot
+        supply the fork pages."""
+        if end_tok <= start_tok:
+            return []
+        owned = self._owned[slot]
+        p0, p1 = start_tok // self.page_size, (end_tok - 1) // self.page_size
+        assert p1 < len(owned), (slot, start_tok, end_tok, len(owned))
+        shared = [i for i in range(p0, p1 + 1)
+                  if self._refcount[owned[i]] > 1]
+        if not shared:
+            return []
+        if len(shared) > len(self._free):
+            self._reclaim(len(shared) - len(self._free))
+        if len(shared) > len(self._free):
+            raise OutOfPages(f"slot {slot}: {len(shared)} COW forks, "
+                             f"{len(self._free)} free")
+        copies = []
+        for i in shared:
+            old = owned[i]
+            new = self._free.pop()
+            self._refcount[old] -= 1          # was > 1, never hits 0
+            self._refcount[new] = 1
+            owned[i] = new
+            self.block_tables[slot, i] = new
+            copies.append((old, new))
+        self.cow_forks += len(copies)
+        self.pages_allocated += len(copies)
+        self.high_water = max(self.high_water, self.used_pages)
+        return copies
+
+    # ---------------- prefix-index references ----------------
+    def ref(self, pid: int) -> None:
+        """Take a prefix-index reference on a live page."""
+        assert pid != 0 and self._refcount[pid] > 0, pid
+        self._refcount[pid] += 1
+
+    def unref(self, pid: int) -> None:
+        """Drop a reference; a page reaching refcount 0 returns to the
+        free list (contents are reused by overwrite)."""
+        assert self._refcount[pid] > 0, pid
+        self._refcount[pid] -= 1
+        if self._refcount[pid] == 0:
+            self._free.append(pid)
+
     def release(self, slot: int) -> None:
-        """Free a sequence's pages (completion or preemption). The pool
-        contents are left as-is — pages are reused by overwrite."""
-        self._free.extend(reversed(self._owned[slot]))
+        """Drop a sequence's references (completion or preemption).
+        Pages still referenced elsewhere (shared prefixes, the radix
+        index) stay live; the rest return to the free list."""
+        for pid in self._owned[slot]:
+            self.unref(pid)
         self._owned[slot] = []
         self.block_tables[slot, :] = 0
         self._active[slot] = False
@@ -124,35 +233,55 @@ class PagedKVCache:
     # ---------------- defrag ----------------
     def compact(self, pool=None):
         """Remap live pages onto the lowest page ids (gather on device,
-        rewrite block tables) and return the compacted pool. Paging has
-        no *internal* fragmentation to fix — this exists so long-lived
-        engines can shrink the pool's high-water footprint (e.g. before
-        snapshotting a pool slice). Pass the pool explicitly when the
-        engine took ownership via take_pool()."""
+        rewrite block tables + prefix index) and return the compacted
+        pool. Paging has no *internal* fragmentation to fix — this
+        exists so long-lived engines can shrink the pool's high-water
+        footprint (e.g. before snapshotting a pool slice). Pass the pool
+        explicitly when the engine took ownership via take_pool()."""
         import jax
         import jax.numpy as jnp
 
         if pool is None:
-            assert not self._pool_taken, "pool was taken; pass it in"
+            assert not (self._created_pool and self._pool_taken), \
+                "pool was taken; pass it in"
             pool = self.pool
 
-        src = np.arange(self.n_pages, dtype=np.int32)
-        nxt = 1
+        mapping: dict[int, int] = {}
+
+        def remap(pid: int) -> int:
+            if pid not in mapping:
+                mapping[pid] = len(mapping) + 1
+            return mapping[pid]
+
         for slot in range(self.max_seqs):
             for j, pid in enumerate(self._owned[slot]):
-                src[nxt] = pid
-                self._owned[slot][j] = nxt
-                self.block_tables[slot, j] = nxt
-                nxt += 1
+                new = remap(pid)
+                self._owned[slot][j] = new
+                self.block_tables[slot, j] = new
+        if self.prefix_index is not None:
+            self.prefix_index.remap(remap)
+        # any remaining live page (shouldn't exist outside slots/index,
+        # but keep the permutation total over live pages regardless)
+        for pid in np.flatnonzero(self._refcount[1:] > 0) + 1:
+            remap(int(pid))
 
-        def move(leaf):
-            # page pools have the page axis at dim 1 (after the group
-            # stack); per-slot state (mamba) is left alone
-            if leaf.ndim == 5 and leaf.shape[1] == self.n_pages:
-                return leaf[:, jnp.asarray(src)]
-            return leaf
+        src = np.arange(self.n_pages, dtype=np.int32)
+        new_rc = np.zeros_like(self._refcount)
+        for old, new in mapping.items():
+            src[new] = old
+            new_rc[new] = self._refcount[old]
+        self._refcount = new_rc
+        nxt = len(mapping) + 1
 
-        pool = jax.tree.map(move, pool)
+        if pool is not None:
+            def move(leaf):
+                # page pools have the page axis at dim 1 (after the group
+                # stack); per-slot state (mamba) is left alone
+                if leaf.ndim == 5 and leaf.shape[1] == self.n_pages:
+                    return leaf[:, jnp.asarray(src)]
+                return leaf
+
+            pool = jax.tree.map(move, pool)
         self._free = list(range(self.n_pages - 1, nxt - 1, -1))
         if not self._pool_taken:
             self.pool = pool

@@ -1,0 +1,225 @@
+"""Radix prefix index: maps token prefixes to completed, immutable KV
+pages so a request whose prompt shares an N-token prefix with earlier
+traffic skips N tokens of prefill and allocates only its suffix pages.
+
+Structure
+  The tree is page-granular: every node covers the tokens of exactly one
+  physical page. Full nodes (page_size tokens) are keyed by their token
+  tuple in the parent's `children` dict — lookup of a full page is one
+  hash probe. Partial *tail* nodes (< page_size tokens, the unaligned
+  end of an inserted sequence) live in the parent's `tails` list; only
+  full nodes may have descendants, so every root-to-node path spells a
+  page-aligned token prefix.
+
+Sharing & COW
+  A lookup may end inside a node: the longest common prefix of the
+  remaining prompt and a child's key is still shareable, because the
+  borrowing sequence forks that page (copy-on-write, kv_cache.py)
+  before its own suffix tokens are written into it. Whole-page matches
+  are shared with no copy at all.
+
+Refcounts & eviction
+  Every node holds exactly one reference on its page (PagedKVCache.ref),
+  taken at insert and dropped at evict. Eviction is leaf-first LRU over
+  nodes whose page has refcount 1 (index-only — no running sequence is
+  using them); a node whose page is referenced by any sequence is
+  pinned, and so are its ancestors, because sequences attach matched
+  chains from the root. The allocator calls `evict` automatically when
+  an allocation would otherwise fail, so cached prefixes are always
+  sacrificed before any running sequence is preempted.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# cap on distinct partial tails cached under one parent: tails are
+# matched by linear scan, and a hot parent (e.g. a system prompt) could
+# otherwise accumulate one tail per distinct first-suffix-page
+MAX_TAILS = 8
+
+
+class _Node:
+    __slots__ = ("key", "page", "n_tokens", "children", "tails", "parent",
+                 "last_used")
+
+    def __init__(self, key, page, n_tokens, parent):
+        self.key = key                  # tuple of tokens this page holds
+        self.page = page                # physical page id
+        self.n_tokens = n_tokens        # valid tokens in the page
+        self.children = {}              # full-page nodes, key -> _Node
+        self.tails = []                 # partial-page nodes
+        self.parent = parent
+        self.last_used = 0
+
+    def is_leaf(self):
+        return not self.children and not self.tails
+
+
+def _lcp(key, toks) -> int:
+    n = 0
+    for a, b in zip(key, toks):
+        if a != b:
+            break
+        n += 1
+    return n
+
+
+class RadixPrefixCache:
+    """Token-prefix -> page-chain index over a PagedKVCache."""
+
+    def __init__(self, kv):
+        self.kv = kv
+        self.page = kv.page_size
+        self.root = _Node((), 0, 0, None)
+        self._tick = 0
+        self.hits = 0
+        self.tokens_saved = 0
+        self.evictions = 0
+        kv.prefix_index = self
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.last_used = self._tick
+
+    # ---------------- lookup ----------------
+    def lookup(self, tokens, *, max_tokens=None):
+        """Longest cached prefix of `tokens`, capped at max_tokens.
+        Returns (n_matched, [page_ids]) where the pages cover tokens
+        [0, n_matched) in order; the last page is partially matched when
+        n_matched isn't page-aligned (the borrower must COW-fork it
+        before writing). Touches matched nodes (LRU)."""
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        limit = len(toks) if max_tokens is None else min(max_tokens,
+                                                        len(toks))
+        node, matched, pages = self.root, 0, []
+        while limit - matched > 0:
+            rem = limit - matched
+            if rem >= self.page:
+                child = node.children.get(tuple(toks[matched:matched
+                                                     + self.page]))
+                if child is not None:
+                    pages.append(child.page)
+                    matched += self.page
+                    self._touch(child)
+                    node = child
+                    continue
+            # no whole-page step: take the best partial match among this
+            # node's children (full or tail) and stop
+            best, best_lcp = None, 0
+            for cand in list(node.children.values()) + node.tails:
+                lcp = min(_lcp(cand.key, toks[matched:]), rem,
+                          cand.n_tokens)
+                if lcp > best_lcp:
+                    best, best_lcp = cand, lcp
+            if best is not None:
+                pages.append(best.page)
+                matched += best_lcp
+                self._touch(best)
+            break
+        return matched, pages
+
+    # ---------------- insert ----------------
+    def insert(self, tokens, page_ids) -> None:
+        """Index `tokens` (whose KV the caller's pages hold, in order:
+        page_ids[i] covers tokens [i*page, (i+1)*page)). Existing nodes
+        are reused (no duplicate refs); new nodes take one reference per
+        page so the pages outlive the inserting sequence."""
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        n = len(toks)
+        nfull = n // self.page
+        assert len(page_ids) >= self.kv.pages_for(n) if n else True
+        node = self.root
+        for i in range(nfull):
+            chunk = tuple(toks[i * self.page:(i + 1) * self.page])
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, int(page_ids[i]), self.page, node)
+                node.children[chunk] = child
+                self.kv.ref(child.page)
+            self._touch(child)
+            node = child
+        rem = n - nfull * self.page
+        if not rem:
+            return
+        key = tuple(toks[nfull * self.page:])
+        for t in node.tails:
+            if t.key == key:
+                self._touch(t)
+                return
+        tail = _Node(key, int(page_ids[nfull]), rem, node)
+        node.tails.append(tail)
+        self.kv.ref(tail.page)
+        self._touch(tail)
+        if len(node.tails) > MAX_TAILS:
+            victim = min(node.tails,
+                         key=lambda t: (self.kv.refcount(t.page) > 1,
+                                        t.last_used))
+            if self.kv.refcount(victim.page) == 1:
+                node.tails.remove(victim)
+                self.kv.unref(victim.page)
+                self.evictions += 1
+
+    # ---------------- eviction ----------------
+    def _evictable(self, node: _Node) -> bool:
+        return (node is not self.root and node.is_leaf()
+                and self.kv.refcount(node.page) == 1)
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to n_pages index-only pages, least-recently-used
+        leaves first. One tree walk seeds a heap of evictable leaves;
+        evicting a leaf pushes its parent if that just exposed it, so
+        reclaim is O(tree + freed*log) — it sits on the allocation
+        pressure path. Returns the number of pages actually freed."""
+        import heapq
+
+        heap, stack = [], [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            stack.extend(node.tails)
+            if self._evictable(node):
+                heapq.heappush(heap, (node.last_used, id(node), node))
+        freed = 0
+        while freed < n_pages and heap:
+            tick, _, victim = heapq.heappop(heap)
+            if tick != victim.last_used or not self._evictable(victim):
+                continue              # stale entry (touched since seeded)
+            parent = victim.parent
+            if victim in parent.tails:
+                parent.tails.remove(victim)
+            else:
+                del parent.children[victim.key]
+            self.kv.unref(victim.page)
+            self.evictions += 1
+            freed += 1
+            if self._evictable(parent):
+                heapq.heappush(heap, (parent.last_used, id(parent), parent))
+        return freed
+
+    def clear(self) -> int:
+        """Drop every cached page (e.g. tests draining the pool)."""
+        n = self.cached_pages()
+        while self.evict(self.kv.n_pages):
+            pass
+        return n
+
+    # ---------------- maintenance / stats ----------------
+    def remap(self, fn) -> None:
+        """Apply a page-id remapping (PagedKVCache.compact)."""
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            stack.extend(node.tails)
+            if node is not self.root:
+                node.page = fn(node.page)
+
+    def cached_pages(self) -> int:
+        n, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            stack.extend(node.tails)
+            if node is not self.root:
+                n += 1
+        return n

@@ -1,5 +1,6 @@
 """Continuous-batching scheduler: FCFS admission gated on free KV pages,
-chunked prefill, preemption-by-eviction, and per-request metrics.
+prefix-sharing-aware accounting, chunked prefill, preemption-by-eviction,
+and per-request metrics.
 
 The scheduler owns the queue/lifecycle policy and the page accounting;
 the engine owns the model calls. Separation matters: every later scaling
@@ -10,14 +11,20 @@ Policies (see docs/SERVING.md):
   - admission: FCFS. A request is admitted when a sequence slot is free
     AND the pool can hold its prompt pages plus `watermark` spare pages
     (the spare keeps one decode tick's growth from immediately starving).
+    With a prefix index attached, admission charges only the *unshared*
+    suffix of the prompt: matched pages are attached by reference, plus
+    one fork page when the match ends mid-page (copy-on-write).
   - prefill: optionally chunked — at most one chunk of one admitted
     request is processed per engine tick, so a long prompt cannot stall
     the decode ticks of already-running sequences.
-  - preemption: when decode growth runs out of pages, the *youngest*
-    active sequence (LIFO) is evicted — its pages are freed and the
-    request re-queued at the queue front with prompt := prompt + tokens
-    generated so far (recompute-on-resume, the classic vLLM recovery).
-    Greedy decoding makes the recomputation exact.
+  - preemption: when decode growth runs out of pages, the allocator
+    first reclaims unreferenced prefix-index pages; only then is the
+    *youngest* active sequence (LIFO) evicted — its references are
+    dropped and the request re-queued at the queue front with prompt :=
+    prompt + tokens generated so far (recompute-on-resume, the classic
+    vLLM recovery). Greedy decoding makes the recomputation exact, and
+    index-retained prefix pages make it cheap: the resumed prompt
+    usually re-matches its own pages.
 """
 from __future__ import annotations
 
@@ -39,6 +46,7 @@ class RequestMetrics:
     n_prompt: int = 0
     n_generated: int = 0
     n_preemptions: int = 0
+    n_prefix_tokens: int = 0          # prompt tokens served from the index
 
     @property
     def ttft_s(self) -> float:
@@ -59,16 +67,19 @@ class _Entry:
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
     slot: int = -1
     prefilled: int = 0                # prompt tokens already in pages
+    shared_tokens: int = 0            # prefix tokens matched at admission
+    shared_pages: list = field(default_factory=list)
 
 
 class Scheduler:
     """FCFS continuous batching over a PagedKVCache."""
 
     def __init__(self, kv: PagedKVCache, *, watermark: int = 1,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None, prefix=None):
         self.kv = kv
         self.watermark = int(watermark)
         self.prefill_chunk = prefill_chunk
+        self.prefix = prefix              # RadixPrefixCache or None
         self.waiting: deque[_Entry] = deque()
         self.running: dict[int, _Entry] = {}   # slot -> entry
         self.preemptions = 0
@@ -84,43 +95,76 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     # ---------------- admission ----------------
-    def admission_need(self, prompt_len: int, *, resumed: bool = False) -> int:
-        """Pages required to admit a prompt: its pages + one decode
-        token + the watermark. Resumed (preempted) entries skip the
-        watermark: their grown prompt is already bounded by the engine's
-        capacity truncation, and they must get back in to finish. The
-        engine's run()-time validation uses the same arithmetic."""
+    def admission_need(self, prompt_len: int, *, resumed: bool = False,
+                       shared_tokens: int = 0) -> int:
+        """Free pages required to admit a prompt: its pages + one decode
+        token + the watermark, minus pages covering the shared prefix
+        (attached by reference, not allocated), plus one fork page when
+        the match ends mid-page (the borrower COW-forks that page before
+        writing its suffix into it). Resumed (preempted) entries skip
+        the watermark: their grown prompt is already bounded by the
+        engine's capacity truncation, and they must get back in to
+        finish. The engine's run()-time validation uses the same
+        arithmetic with shared_tokens=0 (sharing is best-effort)."""
         wm = 0 if resumed else self.watermark
-        return self.kv.pages_for(prompt_len + 1) + wm
+        need = self.kv.pages_for(prompt_len + 1) + wm
+        if shared_tokens:
+            need -= self.kv.pages_for(shared_tokens)
+            if shared_tokens % self.kv.page_size:
+                need += 1
+        return need
 
     def try_admit(self) -> _Entry | None:
-        """Admit the queue head if a slot + its prompt pages fit."""
+        """Admit the queue head if a slot + its unshared prompt pages
+        fit, reclaiming index-only pages when that is what stands in the
+        way. The prefix match is re-run after every reclaim round: an
+        eviction may have dropped pages the previous lookup matched."""
         if not self.waiting:
             return None
-        e = self.waiting[0]
-        need = self.admission_need(len(e.prompt),
-                                   resumed=e.metrics.n_preemptions > 0)
-        if need > self.kv.usable_pages:
-            raise ValueError(
-                f"request needs {need} pages but the pool only has "
-                f"{self.kv.usable_pages}; it can never be admitted")
-        if need > self.kv.free_page_count:
+        # no free sequence slot -> nothing to admit; bail before the
+        # reclaim loop below so a full batch doesn't drain cached
+        # prefixes that couldn't have helped anyway
+        if len(self.running) >= self.kv.max_seqs:
             return None
+        e = self.waiting[0]
+        resumed = e.metrics.n_preemptions > 0
+        while True:
+            shared_tokens, shared_pages = 0, []
+            if self.prefix is not None and len(e.prompt) > 1:
+                shared_tokens, shared_pages = self.prefix.lookup(
+                    e.prompt, max_tokens=len(e.prompt) - 1)
+            need = self.admission_need(len(e.prompt), resumed=resumed,
+                                       shared_tokens=shared_tokens)
+            if need > self.kv.usable_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.kv.usable_pages}; it can never be admitted")
+            if need <= self.kv.free_page_count:
+                break
+            shortfall = need - self.kv.free_page_count
+            if self.prefix is None or self.prefix.evict(shortfall) == 0:
+                return None
         slot = self.kv.alloc_slot()
         if slot is None:
             return None
         self.waiting.popleft()
         e.slot = slot
         e.prefilled = 0
+        e.shared_tokens = shared_tokens
+        e.shared_pages = list(shared_pages)
+        if shared_tokens and self.prefix is not None:
+            self.prefix.hits += 1
+            self.prefix.tokens_saved += shared_tokens
+            e.metrics.n_prefix_tokens += shared_tokens
         e.metrics.t_admit = time.time()
         self.running[slot] = e
         return e
 
     # ---------------- preemption ----------------
     def _preempt_slot(self, slot: int) -> _Entry:
-        """Evict one running sequence: free its pages, requeue it at the
-        queue front with prompt := prompt + generated-so-far (recompute
-        on resume; exact under greedy decoding)."""
+        """Evict one running sequence: drop its page references, requeue
+        it at the queue front with prompt := prompt + generated-so-far
+        (recompute on resume; exact under greedy decoding)."""
         e = self.running.pop(slot)
         self.kv.release(slot)
         if e.req.out:
@@ -129,6 +173,8 @@ class Scheduler:
                                        gen])
         e.slot = -1
         e.prefilled = 0
+        e.shared_tokens = 0
+        e.shared_pages = []
         e.metrics.n_preemptions += 1
         self.preemptions += 1
         self.waiting.appendleft(e)
@@ -145,25 +191,41 @@ class Scheduler:
                    key=lambda s: self.running[s].metrics.t_admit)
         return self._preempt_slot(slot)
 
-    def ensure_decode_capacity(self, slot: int, n_tokens: int) -> bool:
-        """Grow `slot` to hold n_tokens, evicting other sequences while
-        the pool is dry. Returns False if `slot` itself got evicted
-        (it was the youngest, or nothing else was left to take from)."""
+    def ensure_write_capacity(self, slot: int, start_tok: int,
+                              end_tok: int):
+        """Grow `slot` to hold end_tok tokens AND fork any shared page
+        in the write range [start_tok, end_tok) (copy-on-write), evicting
+        other sequences while the pool is dry (the allocator reclaims
+        index-only pages first). Returns (ok, copies): ok is False if
+        `slot` itself got evicted; copies are (src, dst) page pairs the
+        engine must apply to the device pool before the write."""
         while True:
             try:
-                self.kv.ensure(slot, n_tokens)
-                return True
+                self.kv.ensure(slot, end_tok)
+                return True, self.kv.cow_for_write(slot, start_tok,
+                                                   end_tok)
             except OutOfPages:
                 if len(self.running) > 1:
                     self.preempt_one()
                 else:
                     self._preempt_slot(slot)
                 if slot not in self.running:
-                    return False
+                    return False, []
 
     # ---------------- completion ----------------
-    def finish(self, slot: int) -> None:
+    def finish(self, slot: int, cached_tokens=None) -> None:
+        """Complete a request. `cached_tokens` (engine-provided when a
+        prefix index is attached) is the token sequence whose KV the
+        slot's pages actually hold — prompt + generated-minus-last; it
+        is inserted into the radix index *before* the slot's references
+        are dropped, so the pages outlive the request and seed future
+        prefix hits."""
         e = self.running.pop(slot)
+        if (self.prefix is not None and cached_tokens is not None
+                and len(cached_tokens)):
+            n = self.kv.pages_for(len(cached_tokens))
+            self.prefix.insert(cached_tokens,
+                               self.kv.owned_pages(slot)[:n])
         self.kv.release(slot)
         e.metrics.t_done = time.time()
         e.metrics.n_generated = len(e.req.out)
@@ -172,11 +234,20 @@ class Scheduler:
     def metrics_summary(self, entries) -> dict:
         ms = [e.metrics for e in entries]
         done = [m for m in ms if m.t_done]
-        return {
+        out = {
             "n_done": len(done),
             "preemptions": self.preemptions,
             "ttft_avg_s": float(np.mean([m.ttft_s for m in done])) if done else 0.0,
             "tpot_avg_s": float(np.mean([m.tpot_s for m in done])) if done else 0.0,
             "kv_high_water_pages": self.kv.high_water,
             "kv_usable_pages": self.kv.usable_pages,
+            "cow_forks": getattr(self.kv, "cow_forks", 0),
+            "prefix_hits": 0,
+            "prefix_tokens_saved": 0,
+            "prefix_cached_pages": 0,
         }
+        if self.prefix is not None:
+            out["prefix_hits"] = self.prefix.hits
+            out["prefix_tokens_saved"] = self.prefix.tokens_saved
+            out["prefix_cached_pages"] = self.prefix.cached_pages()
+        return out

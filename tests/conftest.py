@@ -7,3 +7,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+# Hypothesis example budgets: PR/tier-1 runs stay fast on the "ci"
+# profile; the nightly workflow passes --hypothesis-profile=nightly
+# (or HYPOTHESIS_PROFILE=nightly) to crank the property suites up.
+# Images without hypothesis fall back to tests/_hypothesis_fallback.py,
+# which runs a small fixed number of deterministic examples.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", max_examples=50, deadline=None)
+    _hyp_settings.register_profile("nightly", max_examples=400,
+                                   deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:
+    pass

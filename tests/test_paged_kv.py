@@ -54,6 +54,26 @@ def test_paged_attention_kernel_matches_ref(window, cap):
     assert float(jnp.abs(got - want).max()) < 1e-5
 
 
+@pytest.mark.parametrize("page", [8, 16, 32])
+def test_paged_attention_kernel_parity_page_size_sweep(page):
+    """Kernel vs oracle across page sizes and ragged context lengths,
+    including lengths straddling a page boundary by one token in either
+    direction (the kernel's per-page masking edge)."""
+    rng = np.random.default_rng(page)
+    Hkv, rep, hd, T = 2, 2, 64, 4
+    P = T + 3
+    ctx = [1, page - 1, page, page + 1, 2 * page + 1, T * page]
+    B = len(ctx)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, rep, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.standard_normal((P, page, Hkv, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.standard_normal((P, page, Hkv, hd)).astype(np.float32))
+    bt = jnp.asarray(rng.integers(1, P, (B, T)).astype(np.int32))
+    ctx = jnp.asarray(ctx, jnp.int32)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    got = paged_attention(q, kp, vp, bt, ctx, interpret=True)
+    assert float(jnp.abs(got - want).max()) < 1e-5
+
+
 # ---------------------------------------------------------------------------
 # allocator invariants
 # ---------------------------------------------------------------------------
@@ -61,12 +81,16 @@ def test_paged_attention_kernel_matches_ref(window, cap):
 def _check_invariants(kv):
     owned = [p for s in range(kv.max_seqs) for p in kv.owned_pages(s)]
     assert 0 not in owned, "null page must never be allocated"
-    assert len(owned) == len(set(owned)), "page owned twice"
-    assert len(owned) + kv.free_page_count == kv.usable_pages
+    # refcount conservation: live pages (counted once, however many
+    # rows/index nodes reference them) + free == usable
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+    assert set(owned).issubset({p for p in range(kv.n_pages)
+                                if kv.refcount(p) > 0})
     for s in range(kv.max_seqs):
-        n = len(kv.owned_pages(s))
-        assert (kv.block_tables[s, :n] == kv.owned_pages(s)).all()
-        assert (kv.block_tables[s, n:] == 0).all()
+        mine = kv.owned_pages(s)
+        assert len(mine) == len(set(mine)), "page twice in one row"
+        assert (kv.block_tables[s, :len(mine)] == mine).all()
+        assert (kv.block_tables[s, len(mine):] == 0).all()
 
 
 def test_allocator_alloc_free_invariants():
@@ -136,6 +160,11 @@ def test_paged_matches_dense_greedy():
     got, eng = _run(cfg, p, _reqs(cfg, 4), batch_size=2, max_len=64,
                     cache_kind="paged", page_size=16)
     assert got == want
+    # after the run only the radix prefix index retains pages; dropping
+    # it returns every page to the free list
+    _check_invariants(eng.kv)
+    assert eng.kv.live_pages == eng.stats["prefix_cached_pages"]
+    eng._prefix.clear()
     assert eng.kv.free_page_count == eng.kv.usable_pages  # all released
 
 

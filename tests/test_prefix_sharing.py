@@ -1,0 +1,274 @@
+"""Shared-prefix paged KV: radix prefix index + copy-on-write pages.
+
+Acceptance criterion (ISSUE 2): with two requests sharing a 256-token
+prefix, the second request's prefill processes only suffix tokens,
+allocates only suffix pages, and its greedy output is token-identical
+to the no-sharing path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.models import init_params
+from repro.serve import (PagedKVCache, RadixPrefixCache, Request,
+                         ServeEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg():
+    return get_config("tiny-lm").replace(dtype="float32", n_layers=2,
+                                         d_model=64, d_ff=128, remat="none")
+
+
+def _prompt(prefix, i, n=8):
+    tail = (np.arange(n, dtype=np.int32) * 7 + i + 1) % 199
+    return np.concatenate([prefix, tail]).astype(np.int32)
+
+
+def _outs(reqs):
+    return [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 256-token shared prefix
+# ---------------------------------------------------------------------------
+
+def test_256_token_shared_prefix_skips_prefill_and_pages():
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    page = 32
+    prefix = (np.arange(256, dtype=np.int32) * 3 + 5) % cfg.vocab_size
+    mk = lambda: [Request(prompt=_prompt(prefix, i), max_new_tokens=6)
+                  for i in range(2)]
+
+    base = ServeEngine(cfg, p, batch_size=2, max_len=512, dtype="float32",
+                       cache_kind="paged", page_size=page,
+                       prefix_sharing=False)
+    want = mk()
+    base.run(want)
+
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=512, dtype="float32",
+                      cache_kind="paged", page_size=page,
+                      prefix_sharing=True)
+    got = mk()
+    eng.run(got)
+
+    # token-identical to the no-sharing path
+    assert _outs(got) == _outs(want)
+    # the second request prefilled only its 8 suffix tokens: total
+    # prefill work is one full prompt + one suffix
+    L = 256 + 8
+    assert base.stats["prefill_tokens"] == 2 * L
+    assert eng.stats["prefill_tokens"] == L + 8
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_tokens_saved"] == 256
+    # and allocated only suffix pages: the 256/32 = 8 prefix pages were
+    # attached by reference, not taken from the free list
+    assert base.kv.pages_allocated - eng.kv.pages_allocated == 256 // page
+    # aligned prefix -> pure sharing, no copy-on-write needed
+    assert eng.stats["cow_forks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write fork on mid-page matches
+# ---------------------------------------------------------------------------
+
+def test_partial_page_match_forks_copy_on_write():
+    """A finished request's last (partial) page is retained by the
+    index; a second request matching into it must fork it before its
+    own suffix tokens land there — outputs stay exact."""
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    prefix = (np.arange(40, dtype=np.int32) * 3 + 5) % cfg.vocab_size
+    mk = lambda i: [Request(prompt=_prompt(prefix, i), max_new_tokens=5)]
+
+    def serve(sharing):
+        eng = ServeEngine(cfg, p, batch_size=1, max_len=128,
+                          dtype="float32", cache_kind="paged",
+                          page_size=16, prefix_sharing=sharing)
+        a, b = mk(0), mk(1)
+        eng.run(a)          # A finishes -> its pages (incl. the partial
+        eng.run(b)          # tail) seed the index for B
+        return _outs(a) + _outs(b), eng
+
+    want, _ = serve(False)
+    got, eng = serve(True)
+    assert got == want
+    assert eng.stats["prefix_hits"] >= 1
+    # B matched 40 tokens = 2 full pages + 8 tokens into a shared page
+    assert eng.stats["prefix_tokens_saved"] >= 40
+    assert eng.stats["cow_forks"] >= 1
+    # no page is writable while shared: after the run every live page
+    # is referenced only by the index
+    kv = eng.kv
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+    assert kv.live_pages == eng.stats["prefix_cached_pages"]
+
+
+def test_identical_prompt_rerun_is_a_full_cache_hit():
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, p, batch_size=1, max_len=128, dtype="float32",
+                      cache_kind="paged", page_size=16)
+    prompt = (np.arange(40, dtype=np.int32) * 5 + 2) % cfg.vocab_size
+    a = [Request(prompt=prompt.copy(), max_new_tokens=5)]
+    eng.run(a)
+    t0 = eng.stats["prefill_tokens"]
+    b = [Request(prompt=prompt.copy(), max_new_tokens=5)]
+    eng.run(b)
+    assert _outs(a) == _outs(b)
+    # all but the last prompt token come from the index (the last one
+    # must run to produce the first-token logits)
+    assert eng.stats["prefill_tokens"] - t0 == 1
+    assert eng.stats["prefix_tokens_saved"] >= 39
+
+
+# ---------------------------------------------------------------------------
+# scheduler interactions
+# ---------------------------------------------------------------------------
+
+def test_preemption_resume_rematches_own_prefix():
+    """Preemption drops a sequence's page references but the index
+    keeps its full prompt pages alive — the resumed request re-matches
+    them, making recompute-on-resume cheaper AND staying exact."""
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    mk = lambda: [Request(prompt=(np.arange(10) * 3 + i).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=14)
+                  for i in range(2)]
+    want = mk()
+    ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32").run(want)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32",
+                      cache_kind="paged", page_size=8, n_pages=6)
+    got = mk()
+    eng.run(got)
+    assert eng.sched.preemptions > 0
+    assert _outs(got) == _outs(want)
+
+
+def test_index_pages_are_reclaimed_under_pressure():
+    """Index-retained pages must never wedge admission: when the pool
+    is dominated by cached prefixes, admission reclaims them (LRU)
+    instead of stalling."""
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=48, dtype="float32",
+                      cache_kind="paged", page_size=8, n_pages=7)
+    # distinct prompts: each finished request parks pages in the index,
+    # so later admissions must evict cached pages to proceed
+    reqs = [Request(prompt=(np.arange(10) + 17 * i).astype(np.int32)
+                    % cfg.vocab_size, max_new_tokens=4) for i in range(5)]
+    eng.run(reqs)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    assert eng._prefix.evictions > 0
+    kv = eng.kv
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+
+
+def test_dense_engine_unaffected_by_prefix_flag():
+    cfg = _tiny_cfg()
+    p = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=48, dtype="float32",
+                      prefix_sharing=True)
+    assert eng._prefix is None      # dense has no pages to share
+    r = [Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=3)]
+    eng.run(r)
+    assert len(r[0].out) == 3
+
+
+# ---------------------------------------------------------------------------
+# clear-error guard: paged + MLA
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_on_mla_config_raises_clear_error():
+    cfg = smoke_config("minicpm3-4b")
+    assert cfg.mla is not None
+    with pytest.raises(NotImplementedError,
+                       match="page the MLA latent cache"):
+        ServeEngine(cfg, None, cache_kind="paged")
+
+
+# ---------------------------------------------------------------------------
+# radix index unit behaviour (no engine, no device pool)
+# ---------------------------------------------------------------------------
+
+def _bare_kv(n_pages=17, page=4, seqs=4):
+    return PagedKVCache(None, n_pages=n_pages, page_size=page,
+                        max_seqs=seqs, create_pool=False)
+
+
+def test_radix_lookup_and_partial_match():
+    kv = _bare_kv()
+    idx = RadixPrefixCache(kv)
+    s = kv.alloc_slot()
+    toks = list(range(100, 111))            # 11 tokens, page=4
+    kv.ensure(s, len(toks))                 # 3 pages
+    pages = kv.owned_pages(s)
+    idx.insert(np.asarray(toks), pages)
+    # full match through the chain incl. the partial tail
+    n, got = idx.lookup(np.asarray(toks))
+    assert n == 11 and got == pages
+    # mid-page divergence: 6 matching tokens -> 1 full page + 2 into
+    # the second (the borrower would COW-fork it)
+    n, got = idx.lookup(np.asarray(toks[:6] + [999, 998]))
+    assert n == 6 and got == pages[:2]
+    # divergence at token 0 -> no match
+    n, got = idx.lookup(np.asarray([7, 8, 9]))
+    assert n == 0 and got == []
+    # max_tokens cap (the engine always leaves >= 1 token to prefill)
+    n, got = idx.lookup(np.asarray(toks), max_tokens=8)
+    assert n == 8 and got == pages[:2]
+
+
+def test_radix_eviction_is_leaf_first_lru_and_respects_refcounts():
+    kv = _bare_kv()
+    idx = RadixPrefixCache(kv)
+    s = kv.alloc_slot()
+    kv.ensure(s, 8)
+    a = kv.owned_pages(s)
+    idx.insert(np.arange(8), a)             # chain of 2 full nodes
+    kv.release(s)                           # index-only now
+    s2 = kv.alloc_slot()
+    kv.ensure(s2, 4)
+    b = kv.owned_pages(s2)
+    idx.insert(np.asarray([50, 51, 52, 53]), b)
+    kv.release(s2)
+    idx.lookup(np.arange(8))                # chain `a` is now MRU
+    assert idx.cached_pages() == 3
+    freed = idx.evict(1)
+    assert freed == 1
+    # LRU branch (b) went first; the hot chain survives
+    assert idx.lookup(np.arange(8))[0] == 8
+    assert idx.lookup(np.asarray([50, 51, 52, 53]))[0] == 0
+    # leaf-first: evicting the deep chain frees the leaf before the root
+    assert idx.evict(10) == 2
+    assert idx.cached_pages() == 0
+    assert kv.free_page_count == kv.usable_pages
+
+
+def test_radix_survives_compact_remap():
+    cfg = _tiny_cfg()
+    kv = PagedKVCache(cfg, n_pages=9, page_size=4, max_seqs=2,
+                      max_pages_per_seq=4, dtype="float32")
+    idx = RadixPrefixCache(kv)
+    s0, s1 = kv.alloc_slot(), kv.alloc_slot()
+    kv.ensure(s0, 4)
+    kv.ensure(s1, 8)
+    idx.insert(np.asarray([1, 2, 3, 4]), kv.owned_pages(s0))
+    kv.release(s0)                          # hole at page id 1
+    kv.compact()
+    # the index's page ids were remapped with the pool move
+    n, pages = idx.lookup(np.asarray([1, 2, 3, 4, 9]))
+    assert n == 4
+    assert pages[0] in {p for sl in (s1,) for p in kv.owned_pages(sl)} \
+        or kv.refcount(pages[0]) == 1
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+    # a fresh slot can attach the remapped page and fork it on write
+    s2 = kv.alloc_slot()
+    kv.share(s2, pages)
+    kv.ensure(s2, 6)
+    copies = kv.cow_for_write(s2, 2, 6)
+    assert len(copies) == 1 and copies[0][0] == pages[0]
+    assert kv.refcount(kv.owned_pages(s2)[0]) == 1
