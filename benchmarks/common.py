@@ -12,6 +12,7 @@ from repro.core import quantize_model
 from repro.data.corpus import calibration_slices, eval_batches
 from repro.data.evaluate import perplexity
 from repro.data.pretrained import corpus_tokens, get_trained_lm
+from repro.quant import QuantSpec
 
 # scaled-down analog of the paper's 128 slices x 2048 tokens
 N_CALIB, CALIB_LEN = 24, 192
@@ -33,12 +34,12 @@ def eval_ppl(cfg, params, corpus: str) -> float:
 
 
 def quantized_ppl(cfg, params, corpus, method, bits, **kw) -> tuple:
-    """Returns (ppl, seconds)."""
-    qcfg = cfg.quant.__class__(bits=bits, **kw) if kw else \
-        cfg.quant.__class__(bits=bits)
+    """Returns (ppl, seconds). kw feeds the QuantSpec (the method x bits
+    sweep axis: intermediate_bits=, reexplore_range=, overrides=, ...)."""
+    spec = QuantSpec.from_config(cfg.quant, method=method, bits=bits, **kw)
     t0 = time.time()
     qp, _ = quantize_model(cfg, params, calib_batches_for(corpus),
-                           method=method, qcfg=qcfg)
+                           spec=spec)
     dt = time.time() - t0
     return eval_ppl(cfg, qp, corpus), dt
 

@@ -17,6 +17,7 @@ def main():
     from benchmarks.common import calib_batches_for, eval_ppl
     from repro.core import quantize_model
     from repro.data.pretrained import get_trained_lm
+    from repro.quant import QuantSpec
 
     cfg, params = get_trained_lm("tiny-lm", steps=args.steps)
     base = eval_ppl(cfg, params, "wiki")
@@ -25,8 +26,9 @@ def main():
 
     print(f"{'method':12s} {'w-bits':>6s} {'ppl':>10s}")
     for method in ("rtn", "bcq", "gptq", "gptqt"):
-        qp, rep = quantize_model(cfg, params, calib, method=method,
-                                 qcfg=cfg.quant.__class__(bits=args.bits))
+        spec = QuantSpec.from_config(cfg.quant, method=method,
+                                     bits=args.bits)
+        qp, rep = quantize_model(cfg, params, calib, spec=spec)
         ppl = eval_ppl(cfg, qp, "wiki")
         print(f"{method:12s} {args.bits:6d} {ppl:10.3f}")
     print("\nGPTQT should track GPTQ or better; BCQ/RTN degrade most "

@@ -17,15 +17,16 @@ def main():
     from repro.core import quantize_model
     from repro.data import ByteTokenizer
     from repro.data.pretrained import get_trained_lm
-    from repro.quant import QuantizedTensor
+    from repro.quant import QuantSpec, QuantizedTensor
     from repro.serve import Request, ServeEngine
 
     cfg, params = get_trained_lm("tiny-lm")
     tok = ByteTokenizer()
 
     print("quantizing to packed 3-bit GPTQT binary coding ...")
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
     qparams, _ = quantize_model(cfg, params, calib_batches_for("wiki"),
-                                method="gptqt", mode="packed")
+                                spec=spec)
 
     def tree_bytes(t):
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))

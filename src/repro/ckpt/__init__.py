@@ -1,3 +1,4 @@
 from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.packed import load_packed, save_packed
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "save_packed", "load_packed"]

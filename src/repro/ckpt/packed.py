@@ -1,0 +1,115 @@
+"""Packed-quantized model artifacts: save/load a param tree whose leaves
+are plain arrays and/or QuantizedTensors, plus the QuantSpec that
+produced it — so serving boots a quantized model without re-running
+calibration or the GPTQ solves.
+
+Layout:  <dir>/arrays.npz + manifest.json + COMMITTED
+
+The manifest mirrors the (nested-dict) param tree; each leaf entry is
+either {"kind": "array", "key", "dtype"} or {"kind": "qt", codes/alphas/
+betas keys + k_in + orig_dtype}, where keys index arrays.npz. Arrays are
+stored verbatim (codes are uint32 bitplanes, alphas/betas fp32, dense
+leaves at their own dtype), so a save -> load round trip is bit-exact —
+the round-trip test serves both trees and checks token-identical output.
+
+Crash-safety follows repro.ckpt.checkpoint: everything is written into
+<dir>.tmp, atomically renamed, and a fsynced COMMITTED marker lands
+last, so a crash mid-save never leaves a half-written artifact that
+load_packed would accept.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qlinear import QuantizedTensor
+from repro.quant.spec import QuantSpec
+
+FORMAT_VERSION = 1
+
+
+def _encode(tree, arrays: dict):
+    """Nested dict tree -> manifest node; arrays collected by key."""
+    if isinstance(tree, dict):
+        return {k: _encode(v, arrays) for k, v in tree.items()}
+    if isinstance(tree, QuantizedTensor):
+        ent = {"kind": "qt", "k_in": tree.k_in,
+               "orig_dtype": tree.orig_dtype}
+        for field in ("codes", "alphas", "betas"):
+            key = f"a{len(arrays)}"
+            arrays[key] = np.asarray(getattr(tree, field))
+            ent[field] = key
+        return ent
+    key = f"a{len(arrays)}"
+    arr = np.asarray(tree)
+    dt = str(arr.dtype)
+    # npz has no bfloat16: store the raw bits, restore via view on load
+    arrays[key] = arr.view(np.uint16) if dt == "bfloat16" else arr
+    return {"kind": "array", "key": key, "dtype": dt}
+
+
+def _decode(node, arrays):
+    if "kind" not in node or not isinstance(node.get("kind"), str):
+        return {k: _decode(v, arrays) for k, v in node.items()}
+    if node["kind"] == "qt":
+        return QuantizedTensor(
+            codes=jnp.asarray(arrays[node["codes"]]),
+            alphas=jnp.asarray(arrays[node["alphas"]]),
+            betas=jnp.asarray(arrays[node["betas"]]),
+            k_in=node["k_in"], orig_dtype=node["orig_dtype"])
+    arr = jnp.asarray(arrays[node["key"]])
+    if node["dtype"] == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    return arr
+
+
+def save_packed(directory, params, *, spec: QuantSpec | None = None,
+                meta: dict | None = None) -> Path:
+    """Write a packed model artifact; returns the final directory."""
+    final = Path(directory)
+    tmp = final.with_name(final.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays: dict = {}
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "spec": spec.to_dict() if spec is not None else None,
+        "meta": meta or {},
+        "tree": _encode(params, arrays),
+    }
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    commit = final / "COMMITTED"
+    with open(commit, "w") as f:
+        f.write(str(FORMAT_VERSION))
+        f.flush()
+        os.fsync(f.fileno())
+    return final
+
+
+def load_packed(directory):
+    """-> (params tree, QuantSpec or None, meta dict). Bit-exact inverse
+    of save_packed; refuses uncommitted (crashed mid-save) artifacts."""
+    d = Path(directory)
+    if not (d / "COMMITTED").exists():
+        raise FileNotFoundError(
+            f"{d} is not a committed packed artifact (missing COMMITTED)")
+    manifest = json.loads((d / "manifest.json").read_text())
+    if manifest["format_version"] > FORMAT_VERSION:
+        raise ValueError(
+            f"packed artifact format {manifest['format_version']} is newer "
+            f"than this code ({FORMAT_VERSION})")
+    arrays = dict(np.load(d / "arrays.npz"))
+    params = _decode(manifest["tree"], arrays)
+    spec = (QuantSpec.from_dict(manifest["spec"])
+            if manifest.get("spec") else None)
+    return params, spec, manifest.get("meta", {})

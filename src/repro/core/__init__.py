@@ -6,13 +6,14 @@ from repro.core.binary_coding import (bcq_alternating, bcq_greedy,
                                       bcq_levels, enumerate_bc_choices)
 from repro.core.gptq import gptq_solve, output_error
 from repro.core.gptqt import gptqt_quantize
-from repro.core.hessian import damp, hessian_from_inputs
+from repro.core.hessian import (HessianAccumulator, damp,
+                                hessian_from_inputs)
 from repro.core.rtn import linear_levels, minmse_grid, quantize_rtn, row_grid
 
 __all__ = [
     "quantize_model", "quantize_matrix", "collect_hessians",
     "eligible_paths", "gptqt_quantize", "gptq_solve", "output_error",
     "bcq_greedy", "bcq_alternating", "bcq_levels", "enumerate_bc_choices",
-    "hessian_from_inputs", "damp", "quantize_rtn", "row_grid",
-    "linear_levels", "minmse_grid",
+    "HessianAccumulator", "hessian_from_inputs", "damp", "quantize_rtn",
+    "row_grid", "linear_levels", "minmse_grid",
 ]

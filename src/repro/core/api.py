@@ -1,63 +1,62 @@
 """quantize_model(): walk a param tree, calibrate per-layer Hessians by
 tapping linear() inputs on an unrolled forward, and quantize every
-eligible weight with the requested method.
+eligible weight through the quantizer registry.
 
-Methods (paper Tab. I/V grid):
-  rtn          round-to-nearest linear grid
-  gptq         GPTQ with linear grid
-  gptq_minmse  GPTQ with per-row MSE-optimal clipped grid   (Tab. V)
-  gptq_bcq     GPTQ with BCQ-fit binary-coding grid         (Tab. V)
-  bcq          plain BCQ (no error compensation)
-  gptqt        the paper's method (two-step + re-explore + fuse)
+The surface is declarative: a `repro.quant.QuantSpec` names the method
+(resolved through the `@register_quantizer` registry — `rtn`, `bcq`,
+`gptq`, `gptq_minmse`, `gptq_bcq`, `gptqt`, or anything downstream
+registers), the bit-widths, the mode, and ordered per-leaf override
+rules for mixed precision (e.g. `lm_head`/`wv` at higher bits):
+
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
+                                 overrides=(OverrideRule("wv", bits=4),))
+    qparams, report = quantize_model(cfg, params, calib_batches, spec=spec)
 
 `mode="fake"` replaces weights with dequantized fp arrays (perplexity
 evals, exactly what the paper measures); `mode="packed"` installs
-QuantizedTensor leaves (fused binary coding; serving/kernels path).
-Packed mode is available for gptqt/bcq — the binary-coding methods.
+QuantizedTensor leaves (fused binary coding; serving/kernels path) and
+is available for methods whose quantizer sets `supports_packed`
+(gptqt/bcq). Packed trees persist via repro.ckpt.packed (save_packed /
+load_packed) so serving can boot without re-quantizing.
+
+Calibration streams: every captured activation batch is folded into a
+per-weight `HessianAccumulator` immediately, so peak host/device memory
+is O(K^2) per tracked weight — not O(#batches x activations).
+
+The pre-spec keyword signature (method=, qcfg=, mode=, include_head=,
+exact_search=) still works as a thin deprecation shim.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binary_coding as bc
-from repro.core import rtn as rtn_mod
-from repro.core.gptq import gptq_solve, output_error
-from repro.core.gptqt import gptqt_quantize
-from repro.core.hessian import hessian_from_inputs
+from repro.core.gptq import output_error
+from repro.core.hessian import HessianAccumulator
 from repro.models import layers as L
 from repro.models.model import (_apply_layer, embed_inputs, unembed)
-from repro.quant.packing import pack_signs
 from repro.quant.qlinear import QuantizedTensor
+from repro.quant.registry import get_quantizer
+from repro.quant.spec import (LeafPlan, QuantSpec, dotted_path,
+                              is_quantizable, leaf_name, QUANTIZABLE)
 
-# param-leaf names eligible for quantization (2D GEMM weights + 3D expert
-# stacks); everything else (norms, convs, A_log, embeddings) is left alone.
-QUANTIZABLE = {
-    "wq", "wk", "wv", "wo", "wg", "wu", "wd", "in_proj", "out_proj",
-    "x_proj", "dt_w", "wq_a", "wq_b", "wkv_a", "wkv_b", "lm_head",
-}
-
-
-def _leaf_name(path):
-    last = path[-1]
-    return getattr(last, "key", getattr(last, "name", str(last)))
+# leaf_name was private here before the spec module unified eligibility;
+# keep the old underscore alias for back-compat imports.
+_leaf_name = leaf_name
 
 
 def eligible_paths(cfg, params, include_head=False):
     """-> list of (path tuple, leaf) for quantizable weights."""
     out = []
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
-        name = _leaf_name(path)
-        if name not in QUANTIZABLE:
-            continue
-        if name == "lm_head" and not include_head:
-            continue
-        if any(sub in name for sub in cfg.quant.exclude):
-            continue
-        out.append((path, leaf))
+        name = leaf_name(path)
+        if is_quantizable(name, include_head=include_head,
+                          exclude=cfg.quant.exclude,
+                          ndim=getattr(leaf, "ndim", 0)):
+            out.append((path, leaf))
     return out
 
 
@@ -78,24 +77,49 @@ def forward_unrolled(cfg, group_trees, top, inputs):
     return unembed(cfg, top, x), aux
 
 
-def collect_hessians(cfg, params, calib_batches, include_head=False):
-    """Run calibration batches, return {path_str: (leaf, H or [H_e], n)}.
+def _fold(ent, xs):
+    """Stream captured activations into the entry's accumulator(s)."""
+    leaf = ent["leaf"]
+    if leaf.ndim == 3:                   # expert stack: per-expert H
+        E, K = leaf.shape[0], leaf.shape[1]
+        if ent["acc"] is None:
+            ent["acc"] = [HessianAccumulator(K) for _ in range(E)]
+        for x in xs:
+            for e in range(E):
+                ent["acc"][e].update(x[e])
+    else:
+        if ent["acc"] is None:
+            ent["acc"] = HessianAccumulator(leaf.shape[0])
+        for x in xs:
+            ent["acc"].update(x)
+
+
+def collect_hessians(cfg, params, calib_batches, include_head=False, *,
+                     spec=None):
+    """Run calibration batches, return {key: (path, g, leaf, H or [H_e])}.
 
     calib_batches: iterable of token (B, S) arrays (or frames).
+    Activations are folded into streaming HessianAccumulators batch by
+    batch — nothing beyond the (K, K) sums is retained. With a spec,
+    only leaves the spec resolves to a plan are tracked.
     """
+    if spec is None:
+        spec = QuantSpec.from_config(cfg.quant, include_head=include_head)
     blocks = params["blocks"]
     n_groups = cfg.n_groups
     group_trees = [jax.tree.map(lambda a: a[g], blocks) for g in range(n_groups)]
     top = {k: v for k, v in params.items() if k != "blocks"}
 
-    # id -> path map over the sliced trees
+    # id -> path map over the sliced trees (spec-eligible leaves only)
     id2path = {}
     for g, gp in enumerate(group_trees):
         for path, leaf in jax.tree_util.tree_leaves_with_path(gp):
-            name = _leaf_name(path)
-            if name in QUANTIZABLE:
+            name = leaf_name(path)
+            dotted = "blocks." + dotted_path(path)
+            if spec.resolve(dotted, name, getattr(leaf, "ndim", 0)):
                 id2path[id(leaf)] = (g, path, leaf)
-    if include_head and "lm_head" in top:
+    if "lm_head" in top and spec.resolve("lm_head", "lm_head",
+                                         getattr(top["lm_head"], "ndim", 0)):
         id2path[id(top["lm_head"])] = (-1, (jax.tree_util.DictKey("lm_head"),),
                                        top["lm_head"])
 
@@ -109,8 +133,8 @@ def collect_hessians(cfg, params, calib_batches, include_head=False):
                 g, path, leaf = id2path[wid]
                 key = (g, jax.tree_util.keystr(path))
                 ent = acc.setdefault(key, {"leaf": leaf, "g": g, "path": path,
-                                           "xs": []})
-                ent["xs"].extend(xs)
+                                           "acc": None})
+                _fold(ent, xs)
             rec.clear()
 
     if not acc:
@@ -119,78 +143,98 @@ def collect_hessians(cfg, params, calib_batches, include_head=False):
             "weight — are the param leaves jax Arrays?")
     out = {}
     for key, ent in acc.items():
-        leaf = ent["leaf"]
-        if leaf.ndim == 3:      # expert stack (E, K, N): per-expert H
-            E = leaf.shape[0]
-            hs = []
-            for e in range(E):
-                xe = [x[e] for x in ent["xs"]]
-                hs.append(hessian_from_inputs(xe)[0])
-            out[key] = (ent["path"], ent["g"], leaf, hs)
+        if isinstance(ent["acc"], list):
+            hs = [a.finalize()[0] for a in ent["acc"]]
+            out[key] = (ent["path"], ent["g"], ent["leaf"], hs)
         else:
-            H, _ = hessian_from_inputs(ent["xs"])
-            out[key] = (ent["path"], ent["g"], leaf, H)
+            out[key] = (ent["path"], ent["g"], ent["leaf"],
+                        ent["acc"].finalize()[0])
     return out
 
 
 # --------------------------------------------------------------------------
-# per-matrix dispatch
+# per-matrix dispatch (registry)
 # --------------------------------------------------------------------------
 
-def quantize_matrix(W, H, method, qcfg, mode="fake", exact_search=False):
-    """W: layer layout (K, N); H: (K, K). Returns (new leaf, stats)."""
-    Wt = W.astype(jnp.float32).T                         # (N, K)
-    bits = qcfg.bits
-    if method == "rtn":
-        wq, _ = rtn_mod.quantize_rtn(Wt, bits)
-    elif method == "bcq":
-        wq, alphas, signs = bc.bcq_alternating(Wt, bits)
-        if mode == "packed":
-            codes = pack_signs(jnp.transpose(signs, (0, 2, 1)))  # (k,K,N)
-            qt = QuantizedTensor(codes, alphas[None],            # (1,N,k)
-                                 jnp.zeros((1, Wt.shape[0]), jnp.float32),
-                                 k_in=Wt.shape[1], orig_dtype=str(W.dtype))
-            return qt, {"err": output_error(Wt, wq, H)}
-    elif method in ("gptq", "gptq_minmse", "gptq_bcq"):
-        if method == "gptq":
-            S, center = rtn_mod.row_grid(Wt, bits)
-            levels = rtn_mod.linear_levels(S, center, bits)
-        elif method == "gptq_minmse":
-            S, center = rtn_mod.minmse_grid(Wt, bits)
-            levels = rtn_mod.linear_levels(S, center, bits)
-        else:
-            levels = bc.bcq_levels(Wt, bits)
-        wq, _ = gptq_solve(Wt, H, levels)
-    elif method == "gptqt":
-        res = gptqt_quantize(
-            Wt, H, bits=bits, intermediate_bits=qcfg.intermediate_bits,
+def quantize_matrix(W, H, method=None, qcfg=None, mode="fake",
+                    exact_search=False, *, plan=None):
+    """W: layer layout (K, N); H: (K, K). Returns (new leaf, stats).
+
+    Dispatches through the quantizer registry. Pass `plan` (a resolved
+    spec.LeafPlan) directly, or the legacy (method, qcfg, mode,
+    exact_search) arguments which are folded into one.
+    """
+    if plan is None:
+        plan = LeafPlan(
+            method=method, bits=qcfg.bits, mode=mode,
+            intermediate_bits=qcfg.intermediate_bits,
+            group_size=qcfg.group_size,
             reexplore_range=qcfg.reexplore_range,
             reexplore_points=qcfg.reexplore_points,
-            exact=exact_search, orig_dtype=str(W.dtype))
-        if mode == "packed":
-            return res.qt, {"err": output_error(Wt, res.wq_t, H)}
-        wq = res.wq_t
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return wq.T.astype(W.dtype), {"err": output_error(Wt, wq, H)}
+            exact_search=exact_search)
+    q = get_quantizer(plan.method)
+    if plan.mode == "packed" and not q.supports_packed:
+        raise ValueError(
+            f"method {plan.method!r} has no packed (binary-coding) "
+            f"representation; use mode='fake' or a packable method "
+            f"(e.g. 'gptqt', 'bcq')")
+    Wt = W.astype(jnp.float32).T                         # (N, K)
+    res = q.quantize(Wt, H, plan, orig_dtype=str(W.dtype))
+    stats = {"err": output_error(Wt, res.wq_t, H),
+             "method": plan.method, "bits": plan.bits}
+    if plan.mode == "packed":
+        return res.qt, stats
+    return res.wq_t.T.astype(W.dtype), stats
 
 
-def _set_leaf(params, path, value):
-    """Functional leaf replacement by tree path."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(
-        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
-    leaves = []
-    for p, leaf in flat:
-        leaves.append(value if p == path else leaf)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+# --------------------------------------------------------------------------
+# whole-model quantization
+# --------------------------------------------------------------------------
+
+_LEGACY_SENTINEL = object()
 
 
-def quantize_model(cfg, params, calib_batches, *, method="gptqt", qcfg=None,
-                   mode="fake", include_head=False, exact_search=False,
-                   verbose=False):
-    """Returns (new params, report dict). See module docstring."""
-    qcfg = qcfg or cfg.quant
-    hs = collect_hessians(cfg, params, calib_batches, include_head)
+def _legacy_spec(cfg, method, qcfg, mode, include_head, exact_search):
+    qcfg = qcfg if qcfg is not None else cfg.quant
+    return QuantSpec.from_config(
+        qcfg,
+        method=method if method is not None else "gptqt",
+        mode=mode if mode is not None else "fake",
+        include_head=bool(include_head),
+        exact_search=bool(exact_search))
+
+
+def quantize_model(cfg, params, calib_batches, *, spec=None, method=None,
+                   qcfg=None, mode=None, include_head=None,
+                   exact_search=None, verbose=False):
+    """Returns (new params, report dict). See module docstring.
+
+    Canonical call: quantize_model(cfg, params, batches, spec=QuantSpec(...)).
+    The legacy keywords (method=, qcfg=, mode=, include_head=,
+    exact_search=) are a deprecation shim that builds the equivalent spec.
+    """
+    legacy = [v is not None
+              for v in (method, qcfg, mode, include_head, exact_search)]
+    if spec is None:
+        if any(legacy):
+            warnings.warn(
+                "quantize_model(method=/qcfg=/mode=/include_head=/"
+                "exact_search=) is deprecated; pass spec=QuantSpec(...) "
+                "instead", DeprecationWarning, stacklevel=2)
+        spec = _legacy_spec(cfg, method, qcfg, mode, include_head,
+                            exact_search)
+    elif any(legacy):
+        raise TypeError("pass either spec= or the legacy keywords, not both")
+
+    # validate every method the spec can name before any heavy work
+    for m in {spec.method} | {r.method for r in spec.overrides if r.method}:
+        q = get_quantizer(m)
+        if spec.mode == "packed" and not q.supports_packed:
+            raise ValueError(
+                f"method {m!r} has no packed representation; spec mode "
+                f"is 'packed'")
+
+    hs = collect_hessians(cfg, params, calib_batches, spec=spec)
     blocks = params["blocks"]
     report = {}
 
@@ -204,9 +248,12 @@ def quantize_model(cfg, params, calib_batches, *, method="gptqt", qcfg=None,
     for pstr, entries in sorted(by_path.items()):
         entries.sort(key=lambda e: e[0])
         g0, path0, leaf0, _ = entries[0]
+        name = leaf_name(path0)
+        dotted = ("blocks." if g0 != -1 else "") + dotted_path(path0)
+        plan = spec.resolve(dotted, name, getattr(leaf0, "ndim", 0))
+        assert plan is not None, dotted   # collect_hessians already filtered
         if g0 == -1:    # top-level (lm_head)
-            new_leaf, st = quantize_matrix(leaf0, entries[0][3], method, qcfg,
-                                           mode, exact_search)
+            new_leaf, st = quantize_matrix(leaf0, entries[0][3], plan=plan)
             new_params = {**new_params, "lm_head": new_leaf}
             report[pstr] = st
             continue
@@ -215,22 +262,23 @@ def quantize_model(cfg, params, calib_batches, *, method="gptqt", qcfg=None,
         for g, path, leaf, H in entries:
             src = stacked_src[g]
             if src.ndim == 3:                            # expert stack
-                per_e = [quantize_matrix(src[e], H[e], method, qcfg, mode,
-                                         exact_search) for e in range(src.shape[0])]
+                per_e = [quantize_matrix(src[e], H[e], plan=plan)
+                         for e in range(src.shape[0])]
                 new_e = _stack_leaves([p for p, _ in per_e])
                 errs.extend(s["err"] for _, s in per_e)
                 news.append(new_e)
             else:
-                nl, st = quantize_matrix(src, H, method, qcfg, mode,
-                                         exact_search)
+                nl, st = quantize_matrix(src, H, plan=plan)
                 errs.append(st["err"])
                 news.append(nl)
         stacked_new = _stack_leaves(news)
         new_blocks = _set_by_path(new_params["blocks"], path0, stacked_new)
         new_params = {**new_params, "blocks": new_blocks}
-        report[pstr] = {"err": float(np.mean(errs))}
+        report[pstr] = {"err": float(np.mean(errs)), "method": plan.method,
+                        "bits": plan.bits}
         if verbose:
-            print(f"  quantized {pstr}: mean tr-err {report[pstr]['err']:.4g}")
+            print(f"  quantized {pstr} [{plan.method} w{plan.bits}]: "
+                  f"mean tr-err {report[pstr]['err']:.4g}")
     return new_params, report
 
 

@@ -4,22 +4,53 @@ X is the layer *input* matrix; rows of W are quantized independently so a
 single (K, K) Hessian serves all output channels. Accumulated in fp32,
 averaged over samples (scale cancels in the solver except through the
 relative damping, matching the GPTQ reference implementation).
+
+`HessianAccumulator` is the streaming form: calibration folds each
+activation batch into the running (K, K) sum as it is captured, so peak
+memory per tracked weight is O(K^2) — independent of the number of
+calibration batches. The old list-of-activations path retained every
+(T_i, K) batch until the end of calibration; `hessian_from_inputs` is
+kept as the one-shot wrapper over the accumulator (and as the reference
+the streaming-equivalence test checks against).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+class HessianAccumulator:
+    """Streaming H = (2/n) * sum_i x_i x_i^T over activation batches.
+
+    update() folds one (..., K) activation array into the running fp32
+    (K, K) sum; finalize() returns (H, n). Constant memory: only the
+    (K, K) sum and a row count persist between batches.
+    """
+
+    def __init__(self, k: int):
+        self.k = int(k)
+        self._H = jnp.zeros((self.k, self.k), jnp.float32)
+        self.n = 0
+
+    def update(self, x) -> None:
+        x = x.reshape(-1, self.k).astype(jnp.float32)
+        self._H = self._H + 2.0 * (x.T @ x)
+        self.n += x.shape[0]
+
+    def finalize(self):
+        """-> (H (K, K) fp32 averaged over samples, n rows seen)."""
+        return self._H / max(self.n, 1), self.n
+
+
 def hessian_from_inputs(xs):
-    """xs: list of (T_i, K) activation matrices -> (H (K,K) fp32, n)."""
-    K = xs[0].shape[-1]
-    H = jnp.zeros((K, K), jnp.float32)
-    n = 0
+    """xs: iterable of (T_i, K) activation matrices -> (H (K,K) fp32, n)."""
+    acc = None
     for x in xs:
-        x = x.reshape(-1, K).astype(jnp.float32)
-        H = H + 2.0 * (x.T @ x)
-        n += x.shape[0]
-    return H / max(n, 1), n
+        if acc is None:
+            acc = HessianAccumulator(x.shape[-1])
+        acc.update(x)
+    if acc is None:
+        raise ValueError("hessian_from_inputs: no activation batches")
+    return acc.finalize()
 
 
 def damp(H, percdamp: float = 0.01):

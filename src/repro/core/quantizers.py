@@ -1,0 +1,92 @@
+"""Built-in Quantizer implementations (paper Tab. I/V grid), registered
+with the repro.quant registry:
+
+  rtn          round-to-nearest linear grid
+  bcq          plain BCQ (no error compensation); packable
+  gptq         GPTQ with linear grid
+  gptq_minmse  GPTQ with per-row MSE-optimal clipped grid   (Tab. V)
+  gptq_bcq     GPTQ with BCQ-fit binary-coding grid         (Tab. V)
+  gptqt        the paper's method (two-step + re-explore + fuse); packable
+
+Each wraps a solver from repro.core; importing this module is what
+populates the registry (repro.quant.registry lazy-imports it).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import binary_coding as bc
+from repro.core import rtn as rtn_mod
+from repro.core.gptq import gptq_solve
+from repro.core.gptqt import gptqt_quantize
+from repro.quant.packing import pack_signs
+from repro.quant.qlinear import QuantizedTensor
+from repro.quant.registry import QuantResult, Quantizer, register_quantizer
+
+
+@register_quantizer("rtn")
+class RTNQuantizer(Quantizer):
+    def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
+        wq, _ = rtn_mod.quantize_rtn(Wt, plan.bits)
+        return QuantResult(wq_t=wq)
+
+
+@register_quantizer("bcq")
+class BCQQuantizer(Quantizer):
+    supports_packed = True
+
+    def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
+        wq, alphas, signs = bc.bcq_alternating(Wt, plan.bits)
+        qt = None
+        if plan.mode == "packed":
+            codes = pack_signs(jnp.transpose(signs, (0, 2, 1)))  # (k,K,N)
+            qt = QuantizedTensor(codes, alphas[None],            # (1,N,k)
+                                 jnp.zeros((1, Wt.shape[0]), jnp.float32),
+                                 k_in=Wt.shape[1], orig_dtype=orig_dtype)
+        return QuantResult(wq_t=wq, qt=qt)
+
+
+class _GPTQBase(Quantizer):
+    """GPTQ solver against a per-row level grid; subclasses pick the grid."""
+
+    def levels(self, Wt, bits):
+        raise NotImplementedError
+
+    def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
+        wq, _ = gptq_solve(Wt, H, self.levels(Wt, plan.bits))
+        return QuantResult(wq_t=wq)
+
+
+@register_quantizer("gptq")
+class GPTQQuantizer(_GPTQBase):
+    def levels(self, Wt, bits):
+        S, center = rtn_mod.row_grid(Wt, bits)
+        return rtn_mod.linear_levels(S, center, bits)
+
+
+@register_quantizer("gptq_minmse")
+class GPTQMinMSEQuantizer(_GPTQBase):
+    def levels(self, Wt, bits):
+        S, center = rtn_mod.minmse_grid(Wt, bits)
+        return rtn_mod.linear_levels(S, center, bits)
+
+
+@register_quantizer("gptq_bcq")
+class GPTQBCQQuantizer(_GPTQBase):
+    def levels(self, Wt, bits):
+        return bc.bcq_levels(Wt, bits)
+
+
+@register_quantizer("gptqt")
+class GPTQTQuantizer(Quantizer):
+    supports_packed = True
+
+    def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
+        res = gptqt_quantize(
+            Wt, H, bits=plan.bits,
+            intermediate_bits=plan.intermediate_bits,
+            reexplore_range=plan.reexplore_range,
+            reexplore_points=plan.reexplore_points,
+            exact=plan.exact_search, orig_dtype=orig_dtype)
+        qt = res.qt if plan.mode == "packed" else None
+        return QuantResult(wq_t=res.wq_t, qt=qt)

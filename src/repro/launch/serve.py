@@ -1,8 +1,15 @@
 """Serving launcher: loads (or trains) a model, optionally GPTQT-quantizes
 it, and serves a demo request batch through the continuous-batching
-engine.
+engine. Quantized models persist as packed artifacts (repro.ckpt.packed)
+so a relaunch boots without re-running calibration or the GPTQ solves:
 
-  PYTHONPATH=src python -m repro.launch.serve --quant 3 --requests 6
+  # quantize once, save the packed artifact, serve
+  PYTHONPATH=src python -m repro.launch.serve --quant 3 \\
+      --save-quantized artifacts/packed/tiny-w3 --requests 6
+
+  # every later launch: skip calibration/GPTQ entirely
+  PYTHONPATH=src python -m repro.launch.serve \\
+      --load-quantized artifacts/packed/tiny-w3 --requests 6
 """
 from __future__ import annotations
 
@@ -15,25 +22,63 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-lm")
     ap.add_argument("--quant", type=int, default=0,
-                    help="GPTQT bits (0 = dense)")
+                    help="quantization bits (0 = dense)")
+    ap.add_argument("--method", default="gptqt",
+                    help="registered quantizer name (see docs/QUANT.md)")
+    ap.add_argument("--save-quantized", default=None, metavar="DIR",
+                    help="write the packed model artifact after quantizing")
+    ap.add_argument("--load-quantized", default=None, metavar="DIR",
+                    help="boot from a packed artifact (skips training, "
+                         "calibration and quantization)")
+    ap.add_argument("--train-steps", type=int, default=300,
+                    help="tiny-LM pretraining steps (ignored with "
+                         "--load-quantized)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--batch-size", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=24)
     args = ap.parse_args()
 
-    from benchmarks.common import calib_batches_for
-    from repro.core import quantize_model
+    from repro.configs import get_config
     from repro.data import ByteTokenizer
-    from repro.data.pretrained import get_trained_lm
     from repro.serve import Request, ServeEngine
 
-    cfg, params = get_trained_lm(args.arch)
     tok = ByteTokenizer()
-    if args.quant:
-        print(f"quantizing with GPTQT to {args.quant} bits (packed) ...")
-        params, _ = quantize_model(
-            cfg, params, calib_batches_for("wiki"), method="gptqt",
-            qcfg=cfg.quant.__class__(bits=args.quant), mode="packed")
+    if args.load_quantized:
+        if args.quant or args.save_quantized:
+            ap.error("--load-quantized boots the artifact as-is; it is "
+                     "incompatible with --quant/--save-quantized")
+        from repro.ckpt.packed import load_packed
+        params, spec, meta = load_packed(args.load_quantized)
+        arch = meta.get("arch", args.arch)
+        # mirror get_trained_lm's config construction; all weights come
+        # from the artifact, so no training or calibration happens here
+        cfg = get_config(arch).replace(dtype="float32", remat="none")
+        desc = (f"{spec.method} w{spec.bits}" if spec is not None
+                else "unknown spec")
+        print(f"loaded packed model '{arch}' ({desc}) from "
+              f"{args.load_quantized} — calibration/GPTQ skipped")
+    else:
+        from benchmarks.common import calib_batches_for
+        from repro.core import quantize_model
+        from repro.data.pretrained import get_trained_lm
+        from repro.quant import QuantSpec
+
+        cfg, params = get_trained_lm(args.arch, steps=args.train_steps)
+        if args.quant:
+            spec = QuantSpec.from_config(
+                cfg.quant, method=args.method, mode="packed",
+                bits=args.quant)
+            print(f"quantizing with {spec.method} to {spec.bits} bits "
+                  f"(packed) ...")
+            params, _ = quantize_model(cfg, params,
+                                       calib_batches_for("wiki"), spec=spec)
+            if args.save_quantized:
+                from repro.ckpt.packed import save_packed
+                out = save_packed(args.save_quantized, params, spec=spec,
+                                  meta={"arch": args.arch})
+                print(f"saved packed artifact to {out}")
+        elif args.save_quantized:
+            ap.error("--save-quantized requires --quant")
 
     eng = ServeEngine(cfg, params, batch_size=args.batch_size,
                       max_len=160, dtype="float32")

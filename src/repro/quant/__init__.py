@@ -1,4 +1,14 @@
 from repro.quant.packing import pack_signs, padded_k, unpack_signs
 from repro.quant.qlinear import QuantizedTensor
+from repro.quant.registry import (QuantResult, Quantizer,
+                                  available_quantizers, get_quantizer,
+                                  register_quantizer)
+from repro.quant.spec import (QUANTIZABLE, LeafPlan, OverrideRule,
+                              QuantSpec, is_quantizable)
 
-__all__ = ["pack_signs", "unpack_signs", "padded_k", "QuantizedTensor"]
+__all__ = [
+    "pack_signs", "unpack_signs", "padded_k", "QuantizedTensor",
+    "QuantSpec", "OverrideRule", "LeafPlan", "QUANTIZABLE",
+    "is_quantizable", "Quantizer", "QuantResult", "register_quantizer",
+    "get_quantizer", "available_quantizers",
+]

@@ -1,7 +1,13 @@
 """Abstract (ShapeDtypeStruct) QuantizedTensor construction for the
 dry-run: replaces eligible weight leaves with packed stand-ins without
 allocating anything, so the quantized serving path can be lowered and
-compiled at full scale."""
+compiled at full scale.
+
+Eligibility and per-leaf bit-widths come from the SAME QuantSpec
+resolver the real quantizer uses (repro.quant.spec), so the dry-run
+cannot drift from the concrete path — a spec with mixed-precision
+override rules sizes each abstract leaf at its resolved bits.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.quant.packing import WORD
 from repro.quant.qlinear import QuantizedTensor
+from repro.quant.spec import QuantSpec
 
 
 def quantized_leaf_abstract(leaf, bits: int):
@@ -23,24 +30,30 @@ def quantized_leaf_abstract(leaf, bits: int):
         k_in=K, orig_dtype=str(leaf.dtype))
 
 
-def quantize_params_abstract(cfg, params, bits: int, include_head=False):
-    """Replace every eligible weight leaf with an abstract QuantizedTensor.
-    Works on a ShapeDtypeStruct pytree (from jax.eval_shape)."""
-    from repro.core.api import QUANTIZABLE, _leaf_name
+def quantize_params_abstract(cfg, params, bits=None, include_head=False,
+                             spec=None):
+    """Replace every eligible weight leaf with an abstract QuantizedTensor
+    sized at its spec-resolved bit-width. Works on a ShapeDtypeStruct
+    pytree (from jax.eval_shape). Pass either `bits` (uniform, the
+    legacy dry-run call) or a full `spec`."""
+    if spec is None:
+        spec = QuantSpec.from_config(cfg.quant, mode="packed",
+                                     include_head=include_head)
+        if bits is not None:
+            spec = spec.replace(bits=bits)
 
-    def walk(tree, in_blocks=False):
+    def walk(tree, path=()):
         if isinstance(tree, dict):
             out = {}
             for k, v in tree.items():
+                sub = (*path, k)
                 if isinstance(v, dict):
-                    out[k] = walk(v, in_blocks or k == "blocks")
-                elif (k in QUANTIZABLE
-                      and (k != "lm_head" or include_head)
-                      and not any(s in k for s in cfg.quant.exclude)
-                      and getattr(v, "ndim", 0) >= 2):
-                    out[k] = quantized_leaf_abstract(v, bits)
+                    out[k] = walk(v, sub)
                 else:
-                    out[k] = v
+                    plan = spec.resolve(".".join(sub), k,
+                                        getattr(v, "ndim", 0))
+                    out[k] = (quantized_leaf_abstract(v, plan.bits)
+                              if plan else v)
             return out
         return tree
 

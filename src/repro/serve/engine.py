@@ -49,6 +49,15 @@ def bucket_len(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+def pad_pow2(seq: list, fill) -> list:
+    """Pad to the next power-of-two length with `fill` so jits keyed on
+    the list length compile once per bucket, not once per count."""
+    n = 1
+    while n < len(seq):
+        n *= 2
+    return seq + [fill] * (n - len(seq))
+
+
 @dataclass
 class Request:
     prompt: np.ndarray
@@ -105,7 +114,8 @@ class ServeEngine:
     def __init__(self, cfg, params, *, batch_size=4, max_len=512,
                  dtype=None, greedy=True, cache_kind="dense",
                  page_size=64, n_pages=None, prefill_chunk=None,
-                 bucket_prompts=True, watermark=1, prefix_sharing=True):
+                 bucket_prompts=True, watermark=1, prefix_sharing=True,
+                 prefix_max_pages=None):
         assert cache_kind in ("dense", "paged"), cache_kind
         if cache_kind == "paged" and cfg.mla is not None:
             raise NotImplementedError(
@@ -154,10 +164,22 @@ class ServeEngine:
             # so it has the same attention-only requirement
             if prefix_sharing and attn_only:
                 from repro.serve.prefix_cache import RadixPrefixCache
-                self._prefix = RadixPrefixCache(self.kv)
+                self._prefix = RadixPrefixCache(
+                    self.kv, max_cached_pages=prefix_max_pages)
             self.cache = self.kv.take_pool()
+            # device-resident block-table mirror: rows are pushed only
+            # when the allocator bumps their version (admission, growth,
+            # COW, release) instead of re-uploading the whole table per
+            # decode tick; the per-tick traffic is just the (B,) live
+            # mask that routes inactive rows to the null page
+            self._bt_dev = jnp.zeros((batch_size, pages_per_seq), jnp.int32)
+            self._bt_applied = np.full((batch_size,), -1, np.int64)
+            self._bt_update = jax.jit(
+                lambda bt, idx, rows: bt.at[idx].set(rows),
+                donate_argnums=(0,))
             self._decode = jax.jit(
-                lambda p, c, t, s, bt: decode_step_paged(cfg, p, c, t, s, bt),
+                lambda p, c, t, s, bt, live: decode_step_paged(
+                    cfg, p, c, t, s, bt * live[:, None]),
                 donate_argnums=(1,))
             self._scatter = jax.jit(
                 lambda c, r, sl, pi, nv: scatter_prefill_cache(
@@ -200,14 +222,30 @@ class ServeEngine:
         so the jit compiles once per bucket, not once per fork count."""
         if not copies:
             return
-        n = 1
-        while n < len(copies):
-            n *= 2
-        src = [s for s, _ in copies] + [0] * (n - len(copies))
-        dst = [d for _, d in copies] + [0] * (n - len(copies))
+        padded = pad_pow2(copies, (0, 0))
+        src = [s for s, _ in padded]
+        dst = [d for _, d in padded]
         self.cache = self._copy(self.cache,
                                 jnp.asarray(src, jnp.int32),
                                 jnp.asarray(dst, jnp.int32))
+
+    # ---------------- device block-table mirror ----------------
+    def _sync_block_tables(self) -> None:
+        """Push block-table rows whose allocator version moved since the
+        last sync. The row-index list is padded to a power-of-two length
+        (repeating the last row — an idempotent rewrite) so the scatter
+        jit compiles once per bucket, not once per dirty count."""
+        dirty = [s for s in range(self.B)
+                 if self._bt_applied[s] != self.kv.bt_version[s]]
+        if not dirty:
+            return
+        idx = pad_pow2(dirty, dirty[-1])
+        rows = self.kv.block_tables[idx]
+        self._bt_dev = self._bt_update(self._bt_dev,
+                                       jnp.asarray(idx, jnp.int32),
+                                       jnp.asarray(rows, jnp.int32))
+        for s in dirty:
+            self._bt_applied[s] = self.kv.bt_version[s]
 
     # ---------------- admission ----------------
     def _padded_prompt(self, prompt):
@@ -405,11 +443,12 @@ class ServeEngine:
         toks = jnp.asarray(self.cur[:, None], jnp.int32)
         pos = jnp.asarray(self.pos, jnp.int32)
         if self.cache_kind == "paged":
-            bt = self.kv.block_tables.copy()
-            not_ready = [s for s in range(self.B) if s not in ready]
-            bt[not_ready, :] = 0    # route their writes to the null page
+            self._sync_block_tables()
+            live = np.zeros((self.B,), np.int32)
+            live[ready] = 1         # masked rows write to the null page
             logits, self.cache = self._decode(self.params, self.cache,
-                                              toks, pos, jnp.asarray(bt))
+                                              toks, pos, self._bt_dev,
+                                              jnp.asarray(live))
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos)

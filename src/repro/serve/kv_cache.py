@@ -65,6 +65,10 @@ class PagedKVCache:
         self._pool_taken = False
         self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
                                      np.int32)
+        # monotone per-row versions: bumped on every block-table mutation
+        # so the engine can mirror rows to a device-resident copy
+        # incrementally instead of re-uploading the whole table per tick
+        self.bt_version = np.zeros((max_seqs,), np.int64)
         # page 0 reserved as the null page
         self._free = list(range(n_pages - 1, 0, -1))
         self._owned: list[list[int]] = [[] for _ in range(max_seqs)]
@@ -150,6 +154,7 @@ class PagedKVCache:
             self._owned[slot].append(pid)
             self.block_tables[slot, idx] = pid
             self._refcount[pid] = 1
+        self.bt_version[slot] += 1
         self.pages_allocated += need
         self.high_water = max(self.high_water, self.used_pages)
 
@@ -166,6 +171,8 @@ class PagedKVCache:
             self._owned[slot].append(int(pid))
             self.block_tables[slot, idx] = pid
             self._refcount[pid] += 1
+        if page_ids:
+            self.bt_version[slot] += 1
 
     def cow_for_write(self, slot: int, start_tok: int, end_tok: int):
         """Copy-on-write: the slot is about to write token positions
@@ -198,6 +205,7 @@ class PagedKVCache:
             owned[i] = new
             self.block_tables[slot, i] = new
             copies.append((old, new))
+        self.bt_version[slot] += 1
         self.cow_forks += len(copies)
         self.pages_allocated += len(copies)
         self.high_water = max(self.high_water, self.used_pages)
@@ -225,6 +233,7 @@ class PagedKVCache:
             self.unref(pid)
         self._owned[slot] = []
         self.block_tables[slot, :] = 0
+        self.bt_version[slot] += 1
         self._active[slot] = False
 
     def owned_pages(self, slot: int):
@@ -258,6 +267,7 @@ class PagedKVCache:
                 new = remap(pid)
                 self._owned[slot][j] = new
                 self.block_tables[slot, j] = new
+            self.bt_version[slot] += 1
         if self.prefix_index is not None:
             self.prefix_index.remap(remap)
         # any remaining live page (shouldn't exist outside slots/index,

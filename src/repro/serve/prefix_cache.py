@@ -65,12 +65,25 @@ def _lcp(key, toks) -> int:
 
 
 class RadixPrefixCache:
-    """Token-prefix -> page-chain index over a PagedKVCache."""
+    """Token-prefix -> page-chain index over a PagedKVCache.
 
-    def __init__(self, kv):
+    `max_cached_pages` caps how many pages the index may retain: a
+    long-running engine otherwise lets every finished request park its
+    pages here until the index pins the whole pool and every admission
+    pays a reclaim walk. The default leaves at least one page of
+    headroom per sequence slot. Enforcement is best-effort LRU at
+    insert time — pages also referenced by a running sequence are
+    pinned and never count against a *running* workload's correctness.
+    """
+
+    def __init__(self, kv, max_cached_pages: int | None = None):
         self.kv = kv
         self.page = kv.page_size
         self.root = _Node((), 0, 0, None)
+        self.max_cached_pages = (
+            int(max_cached_pages) if max_cached_pages is not None
+            else max(kv.usable_pages - kv.max_seqs, 1))
+        self._pages = 0           # retained-page count (== node count)
         self._tick = 0
         self.hits = 0
         self.tokens_saved = 0
@@ -136,19 +149,23 @@ class RadixPrefixCache:
                 child = _Node(chunk, int(page_ids[i]), self.page, node)
                 node.children[chunk] = child
                 self.kv.ref(child.page)
+                self._pages += 1
             self._touch(child)
             node = child
         rem = n - nfull * self.page
         if not rem:
+            self._enforce_cap()
             return
         key = tuple(toks[nfull * self.page:])
         for t in node.tails:
             if t.key == key:
                 self._touch(t)
+                self._enforce_cap()
                 return
         tail = _Node(key, int(page_ids[nfull]), rem, node)
         node.tails.append(tail)
         self.kv.ref(tail.page)
+        self._pages += 1
         self._touch(tail)
         if len(node.tails) > MAX_TAILS:
             victim = min(node.tails,
@@ -157,7 +174,17 @@ class RadixPrefixCache:
             if self.kv.refcount(victim.page) == 1:
                 node.tails.remove(victim)
                 self.kv.unref(victim.page)
+                self._pages -= 1
                 self.evictions += 1
+        self._enforce_cap()
+
+    def _enforce_cap(self) -> None:
+        """Evict LRU index-only pages down to max_cached_pages. Pages
+        still referenced by running sequences are pinned, so this can
+        undershoot; it re-runs on every insert."""
+        excess = self._pages - self.max_cached_pages
+        if excess > 0:
+            self.evict(excess)
 
     # ---------------- eviction ----------------
     def _evictable(self, node: _Node) -> bool:
@@ -190,6 +217,7 @@ class RadixPrefixCache:
             else:
                 del parent.children[victim.key]
             self.kv.unref(victim.page)
+            self._pages -= 1
             self.evictions += 1
             freed += 1
             if self._evictable(parent):
@@ -215,6 +243,11 @@ class RadixPrefixCache:
                 node.page = fn(node.page)
 
     def cached_pages(self) -> int:
+        """Pages the index currently retains (counter, O(1)); the tree
+        walk `_count_nodes` cross-checks it in tests."""
+        return self._pages
+
+    def _count_nodes(self) -> int:
         n, stack = 0, [self.root]
         while stack:
             node = stack.pop()

@@ -1,0 +1,209 @@
+"""Packed-artifact round trips (repro/ckpt/packed.py) and the serving
+follow-ups: save -> load bit-exactness, load-quantized boot producing
+token-identical output without re-quantizing, device-resident block
+tables, and the radix prefix-index page cap."""
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt.packed import load_packed, save_packed
+from repro.configs import get_config
+from repro.core import quantize_model
+from repro.models import init_params
+from repro.quant import OverrideRule, QuantSpec, QuantizedTensor
+from repro.serve import PagedKVCache, RadixPrefixCache, Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny():
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2)
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(jax.random.fold_in(KEY, i), (2, 48), 0,
+                                cfg.vocab_size) for i in range(2)]
+    return cfg, p, calib
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+
+
+# ---------------------------------------------------------------------------
+# save -> load
+# ---------------------------------------------------------------------------
+
+def test_packed_roundtrip_is_bit_exact(tmp_path):
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
+                                 overrides=(OverrideRule("wv", bits=2),))
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    save_packed(tmp_path / "m", qp, spec=spec, meta={"arch": "tiny-lm"})
+    lp, lspec, meta = load_packed(tmp_path / "m")
+    assert lspec == spec and meta["arch"] == "tiny-lm"
+    flat_q, flat_l = _leaves(qp), _leaves(lp)
+    assert len(flat_q) == len(flat_l)
+    for (path_q, leaf_q), (path_l, leaf_l) in zip(flat_q, flat_l):
+        assert path_q == path_l
+        if isinstance(leaf_q, QuantizedTensor):
+            assert isinstance(leaf_l, QuantizedTensor)
+            assert leaf_l.k_in == leaf_q.k_in
+            assert leaf_l.orig_dtype == leaf_q.orig_dtype
+            for f in ("codes", "alphas", "betas"):
+                a, b = getattr(leaf_q, f), getattr(leaf_l, f)
+                assert a.dtype == b.dtype
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            assert leaf_q.dtype == leaf_l.dtype
+            np.testing.assert_array_equal(np.asarray(leaf_q),
+                                          np.asarray(leaf_l))
+
+
+def test_bf16_leaves_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    tree = {"w": jnp.asarray(np.linspace(-2, 2, 16), jnp.bfloat16)}
+    save_packed(tmp_path / "b", tree)
+    out, spec, _ = load_packed(tmp_path / "b")
+    assert spec is None
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["w"].view(jnp.uint16)),
+        np.asarray(tree["w"].view(jnp.uint16)))
+
+
+def test_uncommitted_artifact_is_rejected(tmp_path):
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec)
+    (d / "COMMITTED").unlink()
+    with pytest.raises(FileNotFoundError, match="COMMITTED"):
+        load_packed(d)
+
+
+def test_loaded_model_serves_identically(tmp_path):
+    """--save-quantized / --load-quantized contract: the reloaded packed
+    model skips calibration/GPTQ and serves token-identical output."""
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    save_packed(tmp_path / "m", qp, spec=spec)
+    lp, _, _ = load_packed(tmp_path / "m")
+
+    mk = lambda: [Request(prompt=(np.arange(10) * 3 + i).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=8)
+                  for i in range(2)]
+    outs = []
+    for params in (qp, lp):
+        eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                          dtype="float32")
+        reqs = mk()
+        eng.run(reqs)
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# device-resident block tables
+# ---------------------------------------------------------------------------
+
+def test_device_block_tables_track_host_incrementally():
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2,
+                                        d_model=64, d_ff=128, remat="none")
+    p = init_params(cfg, KEY)
+    mk = lambda: [Request(prompt=(np.arange(12) * 3 + i).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=8)
+                  for i in range(4)]
+    dense = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32")
+    want = mk()
+    dense.run(want)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32",
+                      cache_kind="paged", page_size=8)
+    got = mk()
+    eng.run(got)
+    assert [r.out for r in got] == [r.out for r in want]
+    # the mirror converges to the host tables after a sync, and rows the
+    # allocator never touched since the last sync are not re-uploaded
+    eng._sync_block_tables()
+    np.testing.assert_array_equal(np.asarray(eng._bt_dev),
+                                  eng.kv.block_tables)
+    applied = eng._bt_applied.copy()
+    eng._sync_block_tables()            # no version moved -> no-op
+    np.testing.assert_array_equal(applied, eng._bt_applied)
+
+
+def test_bt_versions_bump_on_every_mutation():
+    kv = PagedKVCache(None, n_pages=9, page_size=4, max_seqs=2,
+                      create_pool=False)
+    s = kv.alloc_slot()
+    v0 = kv.bt_version[s]
+    kv.ensure(s, 6)
+    assert kv.bt_version[s] > v0
+    v1 = kv.bt_version[s]
+    kv.ensure(s, 6)                     # no growth -> no bump
+    assert kv.bt_version[s] == v1
+    s2 = kv.alloc_slot()
+    kv.share(s2, kv.owned_pages(s)[:1])
+    assert kv.bt_version[s2] > 0
+    v2 = kv.bt_version[s2]
+    kv.cow_for_write(s2, 0, 2)          # forks the shared page
+    assert kv.bt_version[s2] > v2
+    v3 = kv.bt_version[s]
+    kv.release(s)
+    assert kv.bt_version[s] > v3
+
+
+# ---------------------------------------------------------------------------
+# radix prefix-index page cap
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_cap_bounds_retained_pages():
+    kv = PagedKVCache(None, n_pages=33, page_size=4, max_seqs=4,
+                      create_pool=False)
+    idx = RadixPrefixCache(kv, max_cached_pages=6)
+    for i in range(10):                 # 10 distinct 8-token prefixes
+        s = kv.alloc_slot()
+        kv.ensure(s, 8)
+        idx.insert(np.arange(8) + 100 * i, kv.owned_pages(s))
+        kv.release(s)
+        assert idx.cached_pages() <= 6
+        assert idx.cached_pages() == idx._count_nodes()
+    assert idx.evictions >= 8           # 20 inserted pages, 6 kept
+    # conservation holds through cap eviction
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+    assert kv.live_pages == idx.cached_pages()
+
+
+def test_prefix_cap_never_evicts_pages_referenced_by_sequences():
+    kv = PagedKVCache(None, n_pages=9, page_size=4, max_seqs=2,
+                      create_pool=False)
+    idx = RadixPrefixCache(kv, max_cached_pages=1)
+    s = kv.alloc_slot()
+    kv.ensure(s, 8)
+    idx.insert(np.arange(8), kv.owned_pages(s))   # slot still holds refs
+    # over cap, but both pages are pinned by the running sequence
+    assert idx.cached_pages() == 2
+    assert idx.lookup(np.arange(8))[0] == 8
+    kv.release(s)                       # now index-only ...
+    s2 = kv.alloc_slot()
+    kv.ensure(s2, 4)
+    idx.insert(np.asarray([50, 51, 52, 53]), kv.owned_pages(s2))
+    kv.release(s2)
+    assert idx.cached_pages() <= 1      # ... and the next insert enforces
+
+
+def test_engine_default_cap_leaves_slot_headroom():
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2,
+                                        d_model=64, d_ff=128, remat="none")
+    p = init_params(cfg, KEY)
+    eng = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32",
+                      cache_kind="paged", page_size=8)
+    assert eng._prefix.max_cached_pages == eng.kv.usable_pages - 2
+    eng2 = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32",
+                       cache_kind="paged", page_size=8, prefix_max_pages=3)
+    assert eng2._prefix.max_cached_pages == 3
+    reqs = [Request(prompt=(np.arange(20) + 13 * i).astype(np.int32)
+                    % cfg.vocab_size, max_new_tokens=4) for i in range(5)]
+    eng2.run(reqs)
+    assert all(r.done for r in reqs)
+    assert eng2._prefix.cached_pages() <= 3

@@ -1,0 +1,202 @@
+"""QuantSpec pipeline surface: registry dispatch, per-leaf override
+resolution (mixed precision), streaming-vs-batch Hessian equivalence,
+packed-artifact round trips, the legacy-signature shim, and the serving
+follow-ups that ride along (device-resident block tables, radix index
+page cap)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import HessianAccumulator, quantize_model
+from repro.core.hessian import hessian_from_inputs
+from repro.models import forward, init_params
+from repro.quant import (OverrideRule, QuantResult, QuantSpec, Quantizer,
+                         available_quantizers, get_quantizer,
+                         register_quantizer)
+from repro.quant.registry import _REGISTRY
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny():
+    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2)
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(jax.random.fold_in(KEY, i), (2, 48), 0,
+                                cfg.vocab_size) for i in range(2)]
+    return cfg, p, calib
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_every_paper_method():
+    methods = {"rtn", "bcq", "gptq", "gptq_minmse", "gptq_bcq", "gptqt"}
+    assert methods <= set(available_quantizers())
+    for m in methods:
+        q = get_quantizer(m)
+        assert q.name == m
+    # only the binary-coding methods pack
+    assert get_quantizer("gptqt").supports_packed
+    assert get_quantizer("bcq").supports_packed
+    assert not get_quantizer("rtn").supports_packed
+
+
+def test_unknown_method_error_lists_registered():
+    with pytest.raises(KeyError, match="gptqt"):
+        get_quantizer("nope")
+
+
+def test_custom_quantizer_plugs_into_quantize_model():
+    @register_quantizer("keepdense")
+    class KeepDense(Quantizer):
+        def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
+            return QuantResult(wq_t=Wt)      # identity "quantization"
+
+    try:
+        cfg, p, calib = _tiny()
+        spec = QuantSpec.from_config(cfg.quant, method="keepdense")
+        qp, rep = quantize_model(cfg, p, calib, spec=spec)
+        w0 = p["blocks"]["L0"]["attn"]["wq"]
+        np.testing.assert_array_equal(np.asarray(qp["blocks"]["L0"]["attn"]["wq"]),
+                                      np.asarray(w0))
+        assert all(st["method"] == "keepdense" for st in rep.values())
+    finally:
+        _REGISTRY.pop("keepdense", None)
+
+
+def test_packed_mode_rejects_unpackable_method():
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="rtn", mode="packed")
+    with pytest.raises(ValueError, match="packed"):
+        quantize_model(cfg, p, calib, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec resolution
+# ---------------------------------------------------------------------------
+
+def test_override_rules_first_match_wins_and_skip():
+    spec = QuantSpec(method="gptqt", bits=3, include_head=True, overrides=(
+        OverrideRule("lm_head", bits=8),
+        OverrideRule("blocks.L1.*", method="rtn", bits=4),
+        OverrideRule("wd", skip=True),
+        OverrideRule("w*", bits=2),
+    ))
+    assert spec.resolve("lm_head", "lm_head").bits == 8
+    p = spec.resolve("blocks.L1.attn.wq", "wq")
+    assert (p.method, p.bits) == ("rtn", 4)
+    assert spec.resolve("blocks.L0.mlp.wd", "wd") is None
+    assert spec.resolve("blocks.L0.attn.wq", "wq").bits == 2
+    # unmatched leaves inherit the defaults
+    assert spec.resolve("blocks.L0.mamba.in_proj", "in_proj").bits == 3
+    # eligibility still gates: norms are never quantized
+    assert spec.resolve("blocks.L0.ln1", "ln1") is None
+
+
+def test_exclude_and_head_gating():
+    spec = QuantSpec(exclude=("x_proj",))
+    assert spec.resolve("blocks.L0.mamba.x_proj", "x_proj") is None
+    assert spec.resolve("lm_head", "lm_head") is None       # head opt-in
+    assert QuantSpec(include_head=True).resolve("lm_head", "lm_head")
+
+
+def test_spec_dict_roundtrip():
+    spec = QuantSpec(method="gptqt", bits=2, mode="packed",
+                     exclude=("x_proj",),
+                     overrides=(OverrideRule("wv", bits=4),
+                                OverrideRule("wd", skip=True)))
+    assert QuantSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_mixed_precision_quantizes_matched_leaves_at_their_bits():
+    """The acceptance criterion: a spec with override rules produces
+    different bit-widths for matched leaves of the SAME model."""
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(
+        cfg.quant, method="gptqt", mode="packed",
+        overrides=(OverrideRule("wv", bits=2),
+                   OverrideRule("blocks.L0.mlp.*", bits=4)))
+    qp, rep = quantize_model(cfg, p, calib, spec=spec)
+    attn0 = qp["blocks"]["L0"]["attn"]
+    assert attn0["wv"].bits == 2
+    assert attn0["wq"].bits == cfg.quant.bits      # default
+    assert qp["blocks"]["L0"]["mlp"]["wg"].bits == 4
+    assert qp["blocks"]["L0"]["mlp"]["wd"].bits == 4
+    logits, _ = forward(cfg, qp, calib[0])
+    assert jnp.isfinite(logits).all()
+
+
+def test_abstract_path_uses_same_resolver():
+    from repro.quant.abstract import quantize_params_abstract
+    cfg, p, _ = _tiny()
+    p_abs = jax.eval_shape(lambda: p)
+    spec = QuantSpec.from_config(cfg.quant, mode="packed",
+                                 overrides=(OverrideRule("wv", bits=2),))
+    q_abs = quantize_params_abstract(cfg, p_abs, spec=spec)
+    assert q_abs["blocks"]["L0"]["attn"]["wv"].bits == 2
+    assert q_abs["blocks"]["L0"]["attn"]["wq"].bits == cfg.quant.bits
+    # legacy uniform-bits call still works
+    q_abs2 = quantize_params_abstract(cfg, p_abs, 2)
+    assert q_abs2["blocks"]["L0"]["attn"]["wq"].bits == 2
+
+
+# ---------------------------------------------------------------------------
+# streaming calibration
+# ---------------------------------------------------------------------------
+
+def test_streaming_accumulator_matches_batch_hessian():
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.standard_normal((t, 24)), jnp.float32)
+          for t in (7, 31, 64, 3)]
+    H_ref, n_ref = hessian_from_inputs(xs)
+    acc = HessianAccumulator(24)
+    for x in xs:
+        acc.update(x)
+    H, n = acc.finalize()
+    assert n == n_ref == sum(x.shape[0] for x in xs)
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ref), rtol=1e-6)
+    # higher-rank activations fold like their 2D reshape
+    acc2 = HessianAccumulator(24)
+    acc2.update(jnp.stack([xs[0][:3], xs[3]]))              # (2, 3, 24)
+    H2, _ = acc2.finalize()
+    H3, _ = hessian_from_inputs([xs[0][:3], xs[3]])
+    np.testing.assert_allclose(np.asarray(H2), np.asarray(H3), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_calibration_is_constant_memory_per_weight():
+    """collect_hessians must hold accumulators, not activation lists:
+    the per-weight state between batches is exactly one (K, K) sum."""
+    from repro.core.api import collect_hessians
+    cfg, p, calib = _tiny()
+    hs = collect_hessians(cfg, p, calib)
+    for path, g, leaf, H in hs.values():
+        K = leaf.shape[-2]
+        assert np.asarray(H).shape == (K, K)
+        assert np.isfinite(np.asarray(H)).all()
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_signature_warns_and_matches_spec_path():
+    cfg, p, calib = _tiny()
+    with pytest.warns(DeprecationWarning):
+        q_old, _ = quantize_model(cfg, p, calib, method="rtn")
+    q_new, _ = quantize_model(
+        cfg, p, calib, spec=QuantSpec.from_config(cfg.quant, method="rtn"))
+    w_old = q_old["blocks"]["L0"]["attn"]["wq"]
+    w_new = q_new["blocks"]["L0"]["attn"]["wq"]
+    np.testing.assert_array_equal(np.asarray(w_old), np.asarray(w_new))
+
+
+def test_spec_plus_legacy_kwargs_is_an_error():
+    cfg, p, calib = _tiny()
+    with pytest.raises(TypeError, match="not both"):
+        quantize_model(cfg, p, calib, spec=QuantSpec(), method="rtn")

@@ -9,6 +9,7 @@ from repro.configs import get_config, smoke_config
 from repro.core import quantize_model
 from repro.kernels import ops
 from repro.models import decode_step, forward, init_params, prefill
+from repro.quant import QuantSpec
 
 KEY = jax.random.PRNGKey(0)
 
@@ -31,7 +32,9 @@ ALL_METHODS = ["rtn", "gptq", "gptq_minmse", "gptq_bcq", "bcq", "gptqt"]
 @pytest.mark.parametrize("method", ALL_METHODS)
 def test_all_methods_produce_finite_models(tiny_setup, method):
     cfg, p, calib, test, base = tiny_setup
-    qp, rep = quantize_model(cfg, p, calib, method=method)
+    qp, rep = quantize_model(cfg, p, calib,
+                             spec=QuantSpec.from_config(cfg.quant,
+                                                        method=method))
     logits, _ = forward(cfg, qp, test)
     assert jnp.isfinite(logits).all()
     assert len(rep) > 0
@@ -41,8 +44,9 @@ def test_all_methods_produce_finite_models(tiny_setup, method):
 
 def test_fake_equals_packed(tiny_setup):
     cfg, p, calib, test, _ = tiny_setup
-    qf, _ = quantize_model(cfg, p, calib, method="gptqt", mode="fake")
-    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt")
+    qf, _ = quantize_model(cfg, p, calib, spec=spec.replace(mode="fake"))
+    qp, _ = quantize_model(cfg, p, calib, spec=spec.replace(mode="packed"))
     lf, _ = forward(cfg, qf, test)
     lp, _ = forward(cfg, qp, test)
     np.testing.assert_allclose(np.asarray(lf), np.asarray(lp), atol=1e-5)
@@ -50,7 +54,9 @@ def test_fake_equals_packed(tiny_setup):
 
 def test_packed_pallas_interpret_matches_ref(tiny_setup):
     cfg, p, calib, test, _ = tiny_setup
-    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    qp, _ = quantize_model(
+        cfg, p, calib,
+        spec=QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed"))
     l_ref, _ = forward(cfg, qp, test)
     ops.FORCE_PALLAS = True
     try:
@@ -63,7 +69,9 @@ def test_packed_pallas_interpret_matches_ref(tiny_setup):
 
 def test_quantized_decode_matches_quantized_forward(tiny_setup):
     cfg, p, calib, _, _ = tiny_setup
-    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    qp, _ = quantize_model(
+        cfg, p, calib,
+        spec=QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed"))
     toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
     full, _ = forward(cfg, qp, toks)
     last, cache = prefill(cfg, qp, toks[:, :20], 32)
@@ -79,7 +87,9 @@ def test_moe_expert_quantization():
     cfg = smoke_config("mixtral-8x7b").replace(dtype="float32")
     p = init_params(cfg, KEY)
     calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
-    qp, rep = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    qp, rep = quantize_model(
+        cfg, p, calib,
+        spec=QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed"))
     logits, _ = forward(cfg, qp, calib[0])
     assert jnp.isfinite(logits).all()
     # expert leaves became QuantizedTensor stacks
@@ -93,7 +103,8 @@ def test_mamba_arch_quantization():
     cfg = smoke_config("falcon-mamba-7b").replace(dtype="float32")
     p = init_params(cfg, KEY)
     calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
-    qp, rep = quantize_model(cfg, p, calib, method="gptqt")
+    qp, rep = quantize_model(
+        cfg, p, calib, spec=QuantSpec.from_config(cfg.quant, method="gptqt"))
     logits, _ = forward(cfg, qp, calib[0])
     assert jnp.isfinite(logits).all()
     # excluded projections stayed dense (cfg.quant.exclude)
@@ -106,7 +117,9 @@ def test_quantized_bytes_ratio():
     cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2)
     p = init_params(cfg, KEY)
     calib = [jax.random.randint(KEY, (2, 48), 0, cfg.vocab_size)]
-    qp, _ = quantize_model(cfg, p, calib, method="gptqt", mode="packed")
+    qp, _ = quantize_model(
+        cfg, p, calib,
+        spec=QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed"))
     from repro.quant import QuantizedTensor
     w = p["blocks"]["L0"]["attn"]["wq"]
     qw = qp["blocks"]["L0"]["attn"]["wq"]

@@ -105,9 +105,12 @@ def test_system_end_to_end_train_quantize_serve(tmp_path):
     out = tr.run()
     assert out["final_loss"] < 3.0   # learnable corpus
 
+    from repro.quant import QuantSpec
     sl = calibration_slices(toks, 8, 96, seed=1)
-    qp, _ = quantize_model(cfg, tr.params, [sl[:4], sl[4:]],
-                           method="gptqt", mode="packed")
+    qp, _ = quantize_model(
+        cfg, tr.params, [sl[:4], sl[4:]],
+        spec=QuantSpec.from_config(cfg.quant, method="gptqt",
+                                   mode="packed"))
     tok = ByteTokenizer()
     eng = ServeEngine(cfg, qp, batch_size=2, max_len=128, dtype="float32")
     req = Request(prompt=tok.encode("the ancient city "), max_new_tokens=12)
