@@ -1,8 +1,16 @@
 """Tab. I/II analogue: perplexity of full/RTN/BCQ/GPTQ/GPTQT at 3-bit and
 2-bit on trained tiny LMs (wiki-analogue corpus). The paper's claim under
 test: GPTQT <= GPTQ < BCQ << RTN at 3-bit; at 2-bit RTN/BCQ collapse
-while GPTQT stays reasonable."""
+while GPTQT stays reasonable.
+
+`--group-size` adds a FineQuant-style axis: the same method x bits grid
+re-run with per-K-group scales (group_size entries per scale group),
+reported as e.g. `gptqt-w2-g64`. Finer groups should close most of the
+2-bit gap at a small memory cost (see docs/QUANT.md for the formula).
+"""
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import emit, eval_ppl, quantized_ppl
 from repro.data.pretrained import get_trained_lm
@@ -11,20 +19,29 @@ MODELS = ["tiny-lm", "tiny-lm-wide"]
 METHODS = ["rtn", "bcq", "gptq", "gptqt"]
 
 
-def main(models=None):
+def main(models=None, group_sizes=(0,)):
     rows = {}
     for name in models or MODELS:
         cfg, params = get_trained_lm(name, corpus="wiki")
         base = eval_ppl(cfg, params, "wiki")
         emit(f"table1/{name}/full16", 0.0, f"{base:.3f}")
-        rows[(name, "full", 16)] = base
-        for bits in (3, 2):
-            for m in METHODS:
-                ppl, dt = quantized_ppl(cfg, params, "wiki", m, bits)
-                emit(f"table1/{name}/{m}-w{bits}", dt * 1e6, f"{ppl:.3f}")
-                rows[(name, m, bits)] = ppl
+        rows[(name, "full", 16, 0)] = base
+        for gs in group_sizes:
+            tag = f"-g{gs}" if gs else ""
+            for bits in (3, 2):
+                for m in METHODS:
+                    ppl, dt = quantized_ppl(cfg, params, "wiki", m, bits,
+                                            group_size=gs)
+                    emit(f"table1/{name}/{m}-w{bits}{tag}", dt * 1e6,
+                         f"{ppl:.3f}")
+                    rows[(name, m, bits, gs)] = ppl
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="*", default=None)
+    ap.add_argument("--group-size", type=int, nargs="*", default=[0],
+                    help="group_size values to sweep (0 = per-channel)")
+    args = ap.parse_args()
+    main(models=args.models, group_sizes=tuple(args.group_size))

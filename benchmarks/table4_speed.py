@@ -9,6 +9,12 @@ No TPU in this container, so this benchmark reports BOTH:
       the bandwidth-bound target: weight bytes per token / HBM bw
       (v5e 819 GB/s), where GPTQT-3bit moves ~18.75% of bf16 bytes plus
       alpha/beta overhead. The projected speedup column is `derived`.
+
+The `GROUP_SIZES` axis re-times the fused path with per-K-group scales
+(G = K/group_size copies of alpha/beta): the measured CPU delta is the
+dequant overhead of the extra scale expansion, and the projection adds
+the G-times-larger scale bytes — the perf trajectory captures what
+finer grouping costs on the serving path.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from repro.quant.packing import pack_signs
 HBM_BW = 819e9
 WIDTHS = [(1024, 4096), (2048, 8192), (4096, 16384)]
 BITS = 3
+GROUP_SIZES = (0, 128, 64)      # 0 = per-channel (G=1)
 
 
 def _bench(fn, *args, iters=5):
@@ -49,8 +56,6 @@ def main():
         # GPTQT: packed bitplanes
         signs = jnp.asarray(rng.integers(0, 2, (BITS, K, N)).astype(bool))
         codes = pack_signs(signs)
-        alphas = jnp.asarray(rng.random((1, N, BITS), dtype=np.float32))
-        betas = jnp.zeros((1, N), jnp.float32)
 
         dense = jax.jit(lambda x, w: x @ w)
         gptq_path = jax.jit(
@@ -60,21 +65,35 @@ def main():
 
         t_d = _bench(dense, x, w)
         t_g = _bench(gptq_path, x, q, s)
-        t_t = _bench(gptqt_path, x, codes, alphas, betas)
 
         bytes_dense = K * N * 2                        # bf16 target bytes
-        bytes_packed = (BITS * (K // 32) * N * 4 + N * BITS * 4 + N * 4)
-        proj_speedup = bytes_dense / bytes_packed      # bandwidth-bound
         emit(f"table4/K{K}N{N}/dense", t_d * 1e6, "1.00x")
         emit(f"table4/K{K}N{N}/gptq_dequant", t_g * 1e6,
              f"{t_d / t_g:.2f}x_cpu")
-        emit(f"table4/K{K}N{N}/gptqt_fused", t_t * 1e6,
-             f"proj_{proj_speedup:.2f}x_v5e")
         rows[(K, N)] = {"dense_us": t_d * 1e6, "gptq_us": t_g * 1e6,
-                        "gptqt_us": t_t * 1e6,
-                        "proj_speedup_v5e": proj_speedup,
-                        "proj_us_dense_v5e": bytes_dense / HBM_BW * 1e6,
-                        "proj_us_gptqt_v5e": bytes_packed / HBM_BW * 1e6}
+                        "proj_us_dense_v5e": bytes_dense / HBM_BW * 1e6}
+
+        # fused path across scale granularities: G = K/gs alpha/beta
+        # copies — measures the dequant-expand overhead of finer groups
+        for gs in GROUP_SIZES:
+            G = K // gs if gs else 1
+            tag = f"gptqt_fused_g{gs}" if gs else "gptqt_fused"
+            alphas = jnp.asarray(rng.random((G, N, BITS), dtype=np.float32))
+            betas = jnp.zeros((G, N), jnp.float32)
+            t_t = _bench(gptqt_path, x, codes, alphas, betas)
+            bytes_packed = (BITS * (K // 32) * N * 4
+                            + G * N * BITS * 4 + G * N * 4)
+            proj_speedup = bytes_dense / bytes_packed  # bandwidth-bound
+            emit(f"table4/K{K}N{N}/{tag}", t_t * 1e6,
+                 f"proj_{proj_speedup:.2f}x_v5e")
+            rows[(K, N)][f"{tag}_us"] = t_t * 1e6
+            rows[(K, N)][f"{tag}_proj_speedup_v5e"] = proj_speedup
+            rows[(K, N)][f"{tag}_proj_us_v5e"] = bytes_packed / HBM_BW * 1e6
+        rows[(K, N)]["gptqt_us"] = rows[(K, N)]["gptqt_fused_us"]
+        rows[(K, N)]["proj_speedup_v5e"] = \
+            rows[(K, N)]["gptqt_fused_proj_speedup_v5e"]
+        rows[(K, N)]["proj_us_gptqt_v5e"] = \
+            rows[(K, N)]["gptqt_fused_proj_us_v5e"]
     return rows
 
 

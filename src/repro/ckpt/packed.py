@@ -22,6 +22,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 from pathlib import Path
 
 import jax.numpy as jnp
@@ -30,7 +31,11 @@ import numpy as np
 from repro.quant.qlinear import QuantizedTensor
 from repro.quant.spec import QuantSpec
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+
+# one warning per process for legacy per-channel artifacts loaded under
+# a spec that asks for group-wise scales
+_WARNED_LEGACY_GROUPS = False
 
 
 def _encode(tree, arrays: dict):
@@ -39,7 +44,12 @@ def _encode(tree, arrays: dict):
         return {k: _encode(v, arrays) for k, v in tree.items()}
     if isinstance(tree, QuantizedTensor):
         ent = {"kind": "qt", "k_in": tree.k_in,
-               "orig_dtype": tree.orig_dtype}
+               "orig_dtype": tree.orig_dtype,
+               # the scale-group axis is explicit in the manifest (not
+               # just implied by array shapes) so readers can reason
+               # about grouping without touching arrays.npz
+               "groups": int(tree.n_groups),
+               "group_size": int(tree.group_size)}
         for field in ("codes", "alphas", "betas"):
             key = f"a{len(arrays)}"
             arrays[key] = np.asarray(getattr(tree, field))
@@ -57,9 +67,14 @@ def _decode(node, arrays):
     if "kind" not in node or not isinstance(node.get("kind"), str):
         return {k: _decode(v, arrays) for k, v in node.items()}
     if node["kind"] == "qt":
+        alphas = jnp.asarray(arrays[node["alphas"]])
+        if "groups" in node and alphas.shape[-3] != node["groups"]:
+            raise ValueError(
+                f"corrupt packed artifact: manifest says {node['groups']} "
+                f"scale groups but alphas have shape {alphas.shape}")
         return QuantizedTensor(
             codes=jnp.asarray(arrays[node["codes"]]),
-            alphas=jnp.asarray(arrays[node["alphas"]]),
+            alphas=alphas,
             betas=jnp.asarray(arrays[node["betas"]]),
             k_in=node["k_in"], orig_dtype=node["orig_dtype"])
     arr = jnp.asarray(arrays[node["key"]])
@@ -112,4 +127,29 @@ def load_packed(directory):
     params = _decode(manifest["tree"], arrays)
     spec = (QuantSpec.from_dict(manifest["spec"])
             if manifest.get("spec") else None)
+    _warn_legacy_groups(d, params, spec)
     return params, spec, manifest.get("meta", {})
+
+
+def _warn_legacy_groups(d, params, spec) -> None:
+    """One-time warning: the artifact's spec asks for group-wise scales
+    but its QuantizedTensor leaves are per-channel (G=1) — it predates
+    group-wise solvers (group_size was carried in the spec but silently
+    dropped). Re-quantize to actually get per-group scales."""
+    global _WARNED_LEGACY_GROUPS
+    if _WARNED_LEGACY_GROUPS or spec is None or spec.group_size <= 0:
+        return
+    import jax
+    legacy = [
+        leaf for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(leaf, QuantizedTensor)
+        and leaf.n_groups == 1 and leaf.k_in > spec.group_size]
+    if legacy:
+        _WARNED_LEGACY_GROUPS = True
+        warnings.warn(
+            f"packed artifact {d} requests group_size="
+            f"{spec.group_size} in its spec but {len(legacy)} quantized "
+            f"leaves carry per-channel (G=1) scales — it was written "
+            f"before group-wise solvers existed; re-quantize and re-save "
+            f"to get true per-group scales", UserWarning, stacklevel=3)

@@ -178,6 +178,7 @@ def quantize_matrix(W, H, method=None, qcfg=None, mode="fake",
             f"method {plan.method!r} has no packed (binary-coding) "
             f"representation; use mode='fake' or a packable method "
             f"(e.g. 'gptqt', 'bcq')")
+    plan.n_groups(W.shape[-2])   # group_size must divide K_in (clear error)
     Wt = W.astype(jnp.float32).T                         # (N, K)
     res = q.quantize(Wt, H, plan, orig_dtype=str(W.dtype))
     stats = {"err": output_error(Wt, res.wq_t, H),
@@ -252,6 +253,10 @@ def quantize_model(cfg, params, calib_batches, *, spec=None, method=None,
         dotted = ("blocks." if g0 != -1 else "") + dotted_path(path0)
         plan = spec.resolve(dotted, name, getattr(leaf0, "ndim", 0))
         assert plan is not None, dotted   # collect_hessians already filtered
+        try:
+            plan.n_groups(leaf0.shape[-2])
+        except ValueError as e:
+            raise ValueError(f"{dotted}: {e}") from None
         if g0 == -1:    # top-level (lm_head)
             new_leaf, st = quantize_matrix(leaf0, entries[0][3], plan=plan)
             new_params = {**new_params, "lm_head": new_leaf}

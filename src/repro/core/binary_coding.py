@@ -62,6 +62,11 @@ def choice_levels_int(E, J, bits: int):
 
 # --------------------------------------------------------------------------
 # BCQ baseline (Kwon et al.): greedy + alternating least squares
+#
+# Group-wise scaling: `group_size > 0` fits an independent binary coding
+# per contiguous K-group. Groups are folded into rows (repro.core.rtn.
+# group_rows) so the per-row solvers below batch over (row, group) pairs
+# in one shot; alphas come back with an explicit (N, G, bits) group axis.
 # --------------------------------------------------------------------------
 
 def bcq_greedy(Wt, bits: int):
@@ -78,9 +83,19 @@ def bcq_greedy(Wt, bits: int):
     return jnp.stack(alphas, 1), jnp.stack(signs, 0)
 
 
-def bcq_alternating(Wt, bits: int, iters: int = 15):
+def bcq_alternating(Wt, bits: int, iters: int = 15, group_size: int = 0):
     """Eq. 4: alternately refit alphas by least squares and reassign signs
-    by nearest representable level. Returns (Wq, alphas, signs)."""
+    by nearest representable level. Returns (Wq, alphas, signs) with
+    Wq (N, K), signs (bits, N, K) and alphas (N, bits) — or, with
+    `group_size > 0`, one coding per contiguous K-group and alphas
+    carrying the group axis (N, G, bits)."""
+    if group_size:
+        from repro.core.rtn import group_rows
+        Wg, G = group_rows(Wt, group_size)
+        wq, alphas, signs = bcq_alternating(Wg, bits, iters)
+        N, K = Wt.shape
+        return (wq.reshape(N, K), alphas.reshape(N, G, bits),
+                signs.reshape(bits, N, K))
     N, K = Wt.shape
     alphas, signs = bcq_greedy(Wt, bits)
     combos = jnp.asarray(sign_combos(bits))              # (L, k)
@@ -102,8 +117,9 @@ def bcq_alternating(Wt, bits: int, iters: int = 15):
     return wq, alphas, signs
 
 
-def bcq_levels(Wt, bits: int, iters: int = 15):
-    """Level values (N, 2^k) of the BCQ-fit grid (for GPTQ+BCQ, Tab. V)."""
-    _, alphas, _ = bcq_alternating(Wt, bits, iters)
+def bcq_levels(Wt, bits: int, iters: int = 15, group_size: int = 0):
+    """Level values of the BCQ-fit grid (for GPTQ+BCQ, Tab. V):
+    (N, 2^k), or (N, G, 2^k) with `group_size > 0`."""
+    _, alphas, _ = bcq_alternating(Wt, bits, iters, group_size=group_size)
     combos = jnp.asarray(sign_combos(bits))
-    return alphas @ combos.T                             # (N, 2^k)
+    return alphas @ combos.T                             # (N[, G], 2^k)

@@ -4,6 +4,16 @@ through the Cholesky factor of H^-1. Because the grid is an argument
 (per-row arbitrary level sets), the same solver backs GPTQ (linear grid),
 GPTQ+BCQ (BCQ grid), GPTQ(min-MSE) (clipped grid) and GPTQT (BCchoice
 grid) — exactly the comparison structure of Tab. V.
+
+Group-wise grids: pass `levels` of shape (N, G, L) and the solver
+switches to the column's group grid as the sweep crosses each group
+boundary (`col_group` maps solve-order column -> group; with actorder
+the map is permuted alongside the columns, so a column always quantizes
+against its ORIGINAL group's grid — the static-groups convention).
+`gptq_solve_refresh` is the sequential variant for linear grids without
+actorder: at every group boundary it re-fits the group's scale/center
+from the *current* (error-compensated) residual block, the literal
+"refresh the scale as the sweep enters the group" schedule.
 """
 from __future__ import annotations
 
@@ -26,8 +36,9 @@ def _chol_inv_upper(H):
 
 
 @functools.partial(jax.jit, static_argnames=())
-def _solve_loop(Wt, U, levels):
-    """Wt (N, K); U (K, K) upper; levels (N, L). Returns (Q, idx)."""
+def _solve_loop(Wt, U, levels, col_group):
+    """Wt (N, K); U (K, K) upper; levels (N, G, L); col_group (K,) int32
+    mapping solve-order column -> grid index along G. Returns (Q, idx)."""
     N, K = Wt.shape
 
     def col_step(c, carry):
@@ -35,8 +46,10 @@ def _solve_loop(Wt, U, levels):
         w = jax.lax.dynamic_slice_in_dim(W, c, 1, axis=1)[:, 0]   # (N,)
         urow = jax.lax.dynamic_slice_in_dim(U, c, 1, axis=0)[0]   # (K,)
         d = urow[c]
-        idx = jnp.argmin(jnp.abs(w[:, None] - levels), axis=1)    # (N,)
-        q = jnp.take_along_axis(levels, idx[:, None], axis=1)[:, 0]
+        lv = jax.lax.dynamic_index_in_dim(
+            levels, col_group[c], axis=1, keepdims=False)         # (N, L)
+        idx = jnp.argmin(jnp.abs(w[:, None] - lv), axis=1)        # (N,)
+        q = jnp.take_along_axis(lv, idx[:, None], axis=1)[:, 0]
         err = (w - q) / d
         mask = (jnp.arange(K) > c).astype(W.dtype)
         W = W - err[:, None] * (urow * mask)[None, :]
@@ -50,29 +63,106 @@ def _solve_loop(Wt, U, levels):
     return Q, I
 
 
-def gptq_solve(Wt, H, levels, *, percdamp: float = 0.01, actorder: bool = True):
-    """Quantize Wt (N_out, K_in) against level sets `levels` (N, L) using
-    Hessian H (K, K). Returns (Wq (N,K) fp32, idx (N,K) int32)."""
+def gptq_solve(Wt, H, levels, *, percdamp: float = 0.01, actorder: bool = True,
+               col_group=None):
+    """Quantize Wt (N_out, K_in) against level sets `levels` using
+    Hessian H (K, K). Returns (Wq (N,K) fp32, idx (N,K) int32).
+
+    levels: (N, L) per-row grids, or (N, G, L) per-(row, K-group) grids
+    with contiguous groups of length K/G (override the group of each
+    column via `col_group` (K,) if the grouping is not contiguous).
+    """
     Wt = Wt.astype(jnp.float32)
     H, dead_cols = damp(H.astype(jnp.float32), percdamp)
     Wt = jnp.where(dead_cols[None, :], 0.0, Wt)
 
     K = Wt.shape[1]
+    levels = levels.astype(jnp.float32)
+    if levels.ndim == 2:
+        levels = levels[:, None, :]                      # (N, 1, L)
+    G = levels.shape[1]
+    if col_group is None:
+        if K % G:
+            raise ValueError(
+                f"grouped levels (G={G}) need G to divide K={K} (or an "
+                f"explicit col_group map)")
+        col_group = jnp.arange(K, dtype=jnp.int32) // (K // G)
+    col_group = jnp.asarray(col_group, jnp.int32)
+
     if actorder:
         perm = jnp.argsort(-jnp.diag(H))
         inv_perm = jnp.argsort(perm)
         Wt_p = Wt[:, perm]
         H_p = H[perm][:, perm]
+        col_group = col_group[perm]
     else:
         perm = inv_perm = None
         Wt_p, H_p = Wt, H
 
     U = _chol_inv_upper(H_p)
-    Q, I = _solve_loop(Wt_p, U, levels.astype(jnp.float32))
+    Q, I = _solve_loop(Wt_p, U, levels, col_group)
 
     if actorder:
         Q, I = Q[:, inv_perm], I[:, inv_perm]
     return Q, I
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def _solve_loop_refresh(Wt, U, *, bits: int, group_size: int):
+    """Linear-grid sweep that re-fits (S, center) per row from the
+    CURRENT residual block each time the column index enters a new
+    group. Requires natural column order (no actorder)."""
+    N, K = Wt.shape
+    n_levels = 2.0 ** bits
+    off = (n_levels - 1.0) / 2.0
+
+    def col_step(c, carry):
+        W, Q, I, S, Cen = carry
+
+        def refresh(_):
+            blk = jax.lax.dynamic_slice_in_dim(W, c, group_size, axis=1)
+            wmax = jnp.max(blk, axis=1)
+            wmin = jnp.min(blk, axis=1)
+            s = jnp.maximum((wmax - wmin) / (n_levels - 1.0), 1e-12)
+            return s, (wmax + wmin) / 2.0
+
+        S, Cen = jax.lax.cond(c % group_size == 0, refresh,
+                              lambda _: (S, Cen), None)
+        w = jax.lax.dynamic_slice_in_dim(W, c, 1, axis=1)[:, 0]   # (N,)
+        urow = jax.lax.dynamic_slice_in_dim(U, c, 1, axis=0)[0]   # (K,)
+        d = urow[c]
+        idx = jnp.clip(jnp.round((w - Cen) / S + off), 0, n_levels - 1)
+        q = S * (idx - off) + Cen
+        err = (w - q) / d
+        mask = (jnp.arange(K) > c).astype(W.dtype)
+        W = W - err[:, None] * (urow * mask)[None, :]
+        Q = Q.at[:, c].set(q)
+        I = I.at[:, c].set(idx.astype(jnp.int32))
+        return W, Q, I, S, Cen
+
+    Q0 = jnp.zeros_like(Wt)
+    I0 = jnp.zeros(Wt.shape, jnp.int32)
+    S0 = jnp.ones((N,), jnp.float32)
+    C0 = jnp.zeros((N,), jnp.float32)
+    _, Q, I, _, _ = jax.lax.fori_loop(0, K, col_step, (Wt, Q0, I0, S0, C0))
+    return Q, I
+
+
+def gptq_solve_refresh(Wt, H, *, bits: int, group_size: int,
+                       percdamp: float = 0.01):
+    """GPTQ with a linear grid whose per-group scale is refreshed from
+    the compensated residual at every group boundary (the reference
+    GPTQ `groupsize` schedule; incompatible with actorder, which
+    scatters a group's columns across the sweep)."""
+    Wt = Wt.astype(jnp.float32)
+    K = Wt.shape[1]
+    if group_size <= 0 or K % group_size:
+        raise ValueError(
+            f"group_size={group_size} must be positive and divide K={K}")
+    H, dead_cols = damp(H.astype(jnp.float32), percdamp)
+    Wt = jnp.where(dead_cols[None, :], 0.0, Wt)
+    U = _chol_inv_upper(H)
+    return _solve_loop_refresh(Wt, U, bits=bits, group_size=group_size)
 
 
 def output_error(Wt, Wq, H):

@@ -17,6 +17,15 @@ channels):
            alpha_i = S'*e_i/2, beta = S'*(m - off) + center; pack sign
            bitplanes -> QuantizedTensor.
 
+Group-wise scaling (`group_size > 0`, FineQuant-style): every contiguous
+K-group of a row gets its OWN grid, BCchoice, and re-explored scale.
+Groups fold into rows up front (core/rtn.group_rows), so steps 1-3 run
+batched over all (row, group) pairs at once — the same vectorized code,
+N*G rows of length K/G — and only the GPTQ solve sees the full rows,
+switching grids at group boundaries via its `col_group` map. The fused
+QuantizedTensor then carries true G = K/group_size scale leaves
+(alphas (G, N, k), betas (G, N)).
+
 Scoring uses per-row histograms of the int-domain weights (sufficient
 statistics s0/s1/s2 per bin), which turns candidate search into two
 (N, bins) @ (bins, n_candidates) matmuls; `exact=True` scores elementwise
@@ -24,17 +33,15 @@ instead (tests / tiny layers).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.binary_coding import (choice_levels_int,
                                       enumerate_bc_choices, sign_combos)
 from repro.core.gptq import gptq_solve
-from repro.core.rtn import row_grid
+from repro.core.rtn import group_rows, row_grid
 from repro.quant.packing import pack_signs
 from repro.quant.qlinear import QuantizedTensor
 
@@ -45,23 +52,24 @@ HIST_BINS_PER_LEVEL = 8
 class GPTQTResult:
     qt: QuantizedTensor          # packed representation (layer layout K,N)
     wq_t: jnp.ndarray            # dequantized (N, K) fp32 (GPTQ orientation)
-    levels: jnp.ndarray          # (N, 2^k) final float levels
-    choice_e: jnp.ndarray        # (N, k) chosen e_i
-    choice_j: jnp.ndarray        # (N,) chosen offset j
-    scale: jnp.ndarray           # (N,) re-explored scale S'
-    center: jnp.ndarray          # (N,) row centers
-    mult: jnp.ndarray            # (N,) selected scale multiplier
+    levels: jnp.ndarray          # (N[, G], 2^k) final float levels
+    choice_e: jnp.ndarray        # (N[, G], k) chosen e_i
+    choice_j: jnp.ndarray        # (N[, G]) chosen offset j
+    scale: jnp.ndarray           # (N[, G]) re-explored scale S'
+    center: jnp.ndarray          # (N[, G]) row/group centers
+    mult: jnp.ndarray            # (N[, G]) selected scale multiplier
+    group_size: int = 0          # K-group length (0 = per-channel)
 
 
 def _row_hist_stats(Wn, hd, n_levels, bins):
-    """Wn (N, K) int-domain weights; hd (K,) diag-H weights.
+    """Wn (N, K) int-domain weights; hd (K,) or (N, K) diag-H weights.
     -> s0, s1, s2 (N, bins), bin centers (bins,)."""
     N, K = Wn.shape
     lo, hi = -0.5, n_levels - 0.5
     width = (hi - lo) / bins
     idx = jnp.clip(((Wn - lo) / width).astype(jnp.int32), 0, bins - 1)
     flat = (jnp.arange(N)[:, None] * bins + idx).reshape(-1)
-    w = jnp.broadcast_to(hd[None, :], (N, K)).reshape(-1)
+    w = jnp.broadcast_to(hd, (N, K)).reshape(-1)
     x = Wn.reshape(-1)
     s0 = jax.ops.segment_sum(w, flat, N * bins).reshape(N, bins)
     s1 = jax.ops.segment_sum(w * x, flat, N * bins).reshape(N, bins)
@@ -83,10 +91,13 @@ def _score_candidates_hist(s0, s1, s2, centers, cand_levels):
 
 
 def _score_candidates_exact(Wn, hd, cand_levels):
-    """Elementwise scoring. Wn (N,K); cand_levels (C,L) -> (N, C)."""
+    """Elementwise scoring. Wn (N,K); hd (K,) or (N,K);
+    cand_levels (C,L) -> (N, C)."""
+    hd2 = jnp.broadcast_to(hd, Wn.shape)
+
     def one(lv):
         d = jnp.min(jnp.abs(Wn[..., None] - lv[None, None, :]), axis=-1)
-        return jnp.sum(d * d * hd[None, :], axis=1)
+        return jnp.sum(d * d * hd2, axis=1)
     return jax.lax.map(one, cand_levels).T               # (N, C)
 
 
@@ -102,67 +113,87 @@ def _mult_grid(reexplore_range: int, n: int, points: int):
 def gptqt_quantize(Wt, H, *, bits=3, intermediate_bits=5,
                    reexplore_range=1, reexplore_points=33,
                    max_candidates=4096, exact=False, percdamp=0.01,
-                   actorder=True, orig_dtype="bfloat16") -> GPTQTResult:
-    """Wt (N_out, K_in) fp32; H (K, K). Full GPTQT pipeline."""
+                   actorder=True, group_size=0,
+                   orig_dtype="bfloat16") -> GPTQTResult:
+    """Wt (N_out, K_in) fp32; H (K, K). Full GPTQT pipeline.
+
+    `group_size > 0` fits an independent (grid, BCchoice, re-explored
+    scale) per contiguous K-group; it must divide K.
+    """
     Wt = Wt.astype(jnp.float32)
     N, K = Wt.shape
     n, k = intermediate_bits, bits
     n_levels = 2 ** n
     hd = jnp.clip(jnp.diag(H.astype(jnp.float32)), 1e-12, None)
 
+    # fold groups into rows: all per-row steps below run on (R, Kg) with
+    # R = N*G rows (one per (row, group) pair) — batch, don't loop
+    Wr, G = group_rows(Wt, group_size)                   # (R, Kg)
+    R, Kg = Wr.shape
+    # per-(row,group) diag-H weights: group g sees hd columns [g*Kg, ...)
+    hdr = jnp.tile(hd.reshape(G, Kg), (N, 1)) if G > 1 else hd
+
     # ---- step 1: linear grid ----
-    S0, center = row_grid(Wt, n)
+    S0, center = row_grid(Wr, n)
 
     # ---- step 2: BCchoice search at S0 ----
     E, J = enumerate_bc_choices(n, k, max_candidates=max_candidates)
     cand_levels = choice_levels_int(E, J, k)             # (C, 2^k)
-    Wn = (Wt - center[:, None]) / S0[:, None] + (n_levels - 1) / 2.0
+    Wn = (Wr - center[:, None]) / S0[:, None] + (n_levels - 1) / 2.0
     if exact:
-        scores = _score_candidates_exact(Wn, hd, cand_levels)
+        scores = _score_candidates_exact(Wn, hdr, cand_levels)
     else:
         bins = HIST_BINS_PER_LEVEL * n_levels
-        s0, s1, s2, centers = _row_hist_stats(Wn, hd, n_levels, bins)
+        s0, s1, s2, centers = _row_hist_stats(Wn, hdr, n_levels, bins)
         scores = _score_candidates_hist(s0, s1, s2, centers, cand_levels)
-    best = jnp.argmin(scores, axis=1)                    # (N,)
-    ce, cj = E[best], J[best]                            # (N,k), (N,)
+    best = jnp.argmin(scores, axis=1)                    # (R,)
+    ce, cj = E[best], J[best]                            # (R,k), (R,)
 
-    # ---- re-explore scale (Eq. 7), choice fixed ----
+    # ---- re-explore scale (Eq. 7), choice fixed, per (row, group) ----
     mults = _mult_grid(reexplore_range, n, reexplore_points)
     combos = jnp.asarray(sign_combos(k))                 # (L, k)
     off = (n_levels - 1) / 2.0
-    # int-domain levels per row: (N, L)
+    # int-domain levels per (row, group): (R, L)
     row_levels_int = cj[:, None] + (jnp.sum(ce, 1)[:, None] + ce @ combos.T) / 2.0
     sorted_rl = jnp.sort(row_levels_int, axis=1)
     mids = (sorted_rl[:, 1:] + sorted_rl[:, :-1]) / 2.0
+    hdr2 = jnp.broadcast_to(hdr, Wr.shape)
 
     def mult_err(m):
-        Wm = (Wt - center[:, None]) / (S0 * m)[:, None] + off
+        Wm = (Wr - center[:, None]) / (S0 * m)[:, None] + off
         idx = jnp.sum(Wm[:, :, None] > mids[:, None, :], axis=-1)
-        q = jnp.take_along_axis(sorted_rl, idx.reshape(N, -1), axis=1).reshape(N, K)
+        q = jnp.take_along_axis(sorted_rl, idx.reshape(R, -1), axis=1).reshape(R, Kg)
         d = (Wm - q) * (S0 * m)[:, None]                 # back to float domain
-        return jnp.sum(d * d * hd[None, :], axis=1)      # (N,)
+        return jnp.sum(d * d * hdr2, axis=1)             # (R,)
 
-    errs = jax.lax.map(mult_err, mults)                  # (M, N)
-    mi = jnp.argmin(errs, axis=0)                        # (N,)
+    errs = jax.lax.map(mult_err, mults)                  # (M, R)
+    mi = jnp.argmin(errs, axis=0)                        # (R,)
     mult = mults[mi]
-    S = S0 * mult                                        # (N,)
+    S = S0 * mult                                        # (R,)
 
     # ---- final float levels, computed EXACTLY as fused dequant does ----
-    alphas = (ce / 2.0) * S[:, None]                     # (N, k)
-    beta = (cj + jnp.sum(ce, 1) / 2.0 - off) * S + center  # (N,)
-    levels = beta[:, None] + alphas @ combos.T           # (N, 2^k), combo order
+    alphas = (ce / 2.0) * S[:, None]                     # (R, k)
+    beta = (cj + jnp.sum(ce, 1) / 2.0 - off) * S + center  # (R,)
+    levels = beta[:, None] + alphas @ combos.T           # (R, 2^k), combo order
 
-    # ---- GPTQ solve against the fused grid ----
-    wq_t, idx = gptq_solve(Wt, H, levels, percdamp=percdamp, actorder=actorder)
+    # ---- GPTQ solve against the fused grid(s) ----
+    wq_t, idx = gptq_solve(Wt, H, levels.reshape(N, G, -1),
+                           percdamp=percdamp, actorder=actorder)
 
     # ---- pack: combo index IS the sign pattern ----
     signs = ((idx[:, :, None] >> jnp.arange(k)[None, None, :]) & 1) > 0  # (N,K,k)
     signs = jnp.transpose(signs, (2, 1, 0))              # (k, K, N)
     codes = pack_signs(signs)
     qt = QuantizedTensor(
-        codes=codes,                 # (k, ceil(K/32), N)
-        alphas=alphas[None],         # (G=1, N, k)
-        betas=beta[None],            # (G=1, N)
+        codes=codes,                                       # (k, ceil(K/32), N)
+        alphas=jnp.swapaxes(alphas.reshape(N, G, k), 0, 1),  # (G, N, k)
+        betas=beta.reshape(N, G).T,                        # (G, N)
         k_in=K, orig_dtype=orig_dtype)
-    return GPTQTResult(qt=qt, wq_t=wq_t, levels=levels, choice_e=ce,
-                       choice_j=cj, scale=S, center=center, mult=mult)
+
+    def shaped(x):
+        """(R, ...) -> (N, ...) for G=1, (N, G, ...) for grouped runs."""
+        return x.reshape(N, G, *x.shape[1:]) if G > 1 else x
+    return GPTQTResult(qt=qt, wq_t=wq_t, levels=shaped(levels),
+                       choice_e=shaped(ce), choice_j=shaped(cj),
+                       scale=shaped(S), center=shaped(center),
+                       mult=shaped(mult), group_size=int(group_size))

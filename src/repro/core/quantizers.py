@@ -10,6 +10,12 @@ with the repro.quant registry:
 
 Each wraps a solver from repro.core; importing this module is what
 populates the registry (repro.quant.registry lazy-imports it).
+
+All methods honor `plan.group_size`: scales (and for the binary-coding
+methods the whole alpha/beta coding) are fit per contiguous K-group.
+Groups fold into rows via core/rtn.group_rows, so the per-row solvers
+batch over (row, group) pairs; the GPTQ solver consumes grouped level
+sets of shape (N, G, L) and switches grids at group boundaries.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ from repro.core import binary_coding as bc
 from repro.core import rtn as rtn_mod
 from repro.core.gptq import gptq_solve
 from repro.core.gptqt import gptqt_quantize
+from repro.core.rtn import group_rows
 from repro.quant.packing import pack_signs
 from repro.quant.qlinear import QuantizedTensor
 from repro.quant.registry import QuantResult, Quantizer, register_quantizer
@@ -27,7 +34,8 @@ from repro.quant.registry import QuantResult, Quantizer, register_quantizer
 @register_quantizer("rtn")
 class RTNQuantizer(Quantizer):
     def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
-        wq, _ = rtn_mod.quantize_rtn(Wt, plan.bits)
+        wq, _ = rtn_mod.quantize_rtn(Wt, plan.bits,
+                                     group_size=plan.group_size)
         return QuantResult(wq_t=wq)
 
 
@@ -36,45 +44,58 @@ class BCQQuantizer(Quantizer):
     supports_packed = True
 
     def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
-        wq, alphas, signs = bc.bcq_alternating(Wt, plan.bits)
+        N, K = Wt.shape
+        wq, alphas, signs = bc.bcq_alternating(Wt, plan.bits,
+                                               group_size=plan.group_size)
         qt = None
         if plan.mode == "packed":
+            if alphas.ndim == 2:                         # (N, k) -> (1, N, k)
+                alphas = alphas[None]
+            else:                                        # (N, G, k) -> (G, N, k)
+                alphas = jnp.swapaxes(alphas, 0, 1)
+            G = alphas.shape[0]
             codes = pack_signs(jnp.transpose(signs, (0, 2, 1)))  # (k,K,N)
-            qt = QuantizedTensor(codes, alphas[None],            # (1,N,k)
-                                 jnp.zeros((1, Wt.shape[0]), jnp.float32),
-                                 k_in=Wt.shape[1], orig_dtype=orig_dtype)
+            qt = QuantizedTensor(codes, alphas,
+                                 jnp.zeros((G, N), jnp.float32),
+                                 k_in=K, orig_dtype=orig_dtype)
         return QuantResult(wq_t=wq, qt=qt)
 
 
 class _GPTQBase(Quantizer):
-    """GPTQ solver against a per-row level grid; subclasses pick the grid."""
+    """GPTQ solver against a per-row (or per-row-group) level grid;
+    subclasses pick the grid."""
 
-    def levels(self, Wt, bits):
+    def levels(self, Wt, bits, group_size):
         raise NotImplementedError
 
     def quantize(self, Wt, H, plan, *, orig_dtype="bfloat16"):
-        wq, _ = gptq_solve(Wt, H, self.levels(Wt, plan.bits))
+        wq, _ = gptq_solve(Wt, H, self.levels(Wt, plan.bits,
+                                              plan.group_size))
         return QuantResult(wq_t=wq)
 
 
 @register_quantizer("gptq")
 class GPTQQuantizer(_GPTQBase):
-    def levels(self, Wt, bits):
-        S, center = rtn_mod.row_grid(Wt, bits)
-        return rtn_mod.linear_levels(S, center, bits)
+    def levels(self, Wt, bits, group_size):
+        Wr, G = group_rows(Wt, group_size)
+        S, center = rtn_mod.row_grid(Wr, bits)
+        lv = rtn_mod.linear_levels(S, center, bits)      # (N*G, L)
+        return lv.reshape(Wt.shape[0], G, -1) if G > 1 else lv
 
 
 @register_quantizer("gptq_minmse")
 class GPTQMinMSEQuantizer(_GPTQBase):
-    def levels(self, Wt, bits):
-        S, center = rtn_mod.minmse_grid(Wt, bits)
-        return rtn_mod.linear_levels(S, center, bits)
+    def levels(self, Wt, bits, group_size):
+        Wr, G = group_rows(Wt, group_size)
+        S, center = rtn_mod.minmse_grid(Wr, bits)
+        lv = rtn_mod.linear_levels(S, center, bits)
+        return lv.reshape(Wt.shape[0], G, -1) if G > 1 else lv
 
 
 @register_quantizer("gptq_bcq")
 class GPTQBCQQuantizer(_GPTQBase):
-    def levels(self, Wt, bits):
-        return bc.bcq_levels(Wt, bits)
+    def levels(self, Wt, bits, group_size):
+        return bc.bcq_levels(Wt, bits, group_size=group_size)
 
 
 @register_quantizer("gptqt")
@@ -87,6 +108,7 @@ class GPTQTQuantizer(Quantizer):
             intermediate_bits=plan.intermediate_bits,
             reexplore_range=plan.reexplore_range,
             reexplore_points=plan.reexplore_points,
-            exact=plan.exact_search, orig_dtype=orig_dtype)
+            exact=plan.exact_search, group_size=plan.group_size,
+            orig_dtype=orig_dtype)
         qt = res.qt if plan.mode == "packed" else None
         return QuantResult(wq_t=res.wq_t, qt=qt)

@@ -9,10 +9,40 @@ re-exploring S (Eq. 7) stretches the axis symmetrically about the row's
 center ("like a spring", Fig. 2).
 
 All functions take W_t of shape (N_rows=out, K_cols=in).
+
+Group-wise scaling (FineQuant-style): `group_rows` folds contiguous
+K-groups of length `group_size` into extra rows, so every per-row
+routine above becomes per-(row, group) for free — one reshape, no
+vmap needed (the rows ARE the batch). `group_size=0` keeps one group
+per row (per-channel). Non-divisible K raises: callers either pick a
+divisor of K or pad before calling.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def n_k_groups(k: int, group_size: int) -> int:
+    """Number of contiguous K-groups; validates divisibility."""
+    if group_size == 0:
+        return 1
+    if group_size < 0:
+        raise ValueError(f"group_size must be >= 0, got {group_size}")
+    if k % group_size:
+        raise ValueError(
+            f"group_size={group_size} does not divide K={k}; pick a "
+            f"divisor of K (or 0 for per-channel scales) — padding is "
+            f"not applied implicitly")
+    return k // group_size
+
+
+def group_rows(Wt, group_size: int):
+    """(N, K) -> ((N*G, K/G) view with groups as rows, G). Row order is
+    (n, g) -> n*G + g, i.e. a plain row-major reshape, so
+    `X.reshape(N, G, ...)` inverts it."""
+    N, K = Wt.shape
+    G = n_k_groups(K, group_size)
+    return Wt.reshape(N * G, K // G), G
 
 
 def row_grid(Wt, bits: int, clip: float = 1.0):
@@ -33,8 +63,13 @@ def linear_levels(S, center, bits: int):
     return S[:, None] * c[None, :] + center[:, None]
 
 
-def quantize_rtn(Wt, bits: int, clip: float = 1.0):
-    """-> (Wq, int codes) with the row grid above."""
+def quantize_rtn(Wt, bits: int, clip: float = 1.0, group_size: int = 0):
+    """-> (Wq, int codes) with the row grid above; `group_size > 0`
+    fits one grid per contiguous K-group instead of per row."""
+    if group_size:
+        Wg, _ = group_rows(Wt, group_size)
+        wq, q = quantize_rtn(Wg, bits, clip)
+        return wq.reshape(Wt.shape), q.reshape(Wt.shape)
     S, center = row_grid(Wt, bits, clip)
     off = (2.0 ** bits - 1.0) / 2.0
     q = jnp.round((Wt - center[:, None]) / S[:, None] + off)

@@ -1,25 +1,40 @@
-"""Pallas TPU kernel: dequant-fused binary-coded GEMM.
+"""Pallas TPU kernel: dequant-fused binary-coded GEMM with group-wise
+scales.
 
-Computes y = x @ W where W[k, n] = sum_i alphas[n, i] * s_i[k, n] + betas[n]
-and the sign bitplanes s_i are packed 32-per-uint32 along K. The packed
-codes (bits/16 of the bf16 bytes at 3-bit) stream HBM->VMEM tile by tile;
-each tile is expanded to a dense (BK, BN) weight tile *in VMEM* and fed to
-the MXU as one bf16 GEMM — the TPU-native replacement for GPU LUT-GEMM
-(DESIGN.md §2). Accumulation over the K grid axis happens in an fp32 VMEM
-scratch accumulator.
+Computes y = x @ W where
+    W[k, n] = sum_i alphas[g(k), n, i] * s_i[k, n] + betas[g(k), n],
+g(k) = k // group_size, and the sign bitplanes s_i are packed 32-per-
+uint32 along K. The packed codes (bits/16 of the bf16 bytes at 3-bit)
+stream HBM->VMEM tile by tile; each tile is expanded to a dense
+(BK, BN) weight tile *in VMEM* and fed to the MXU as one bf16 GEMM —
+the TPU-native replacement for GPU LUT-GEMM (DESIGN.md §2).
+Accumulation over the K grid axis happens in an fp32 VMEM scratch
+accumulator.
+
+Group-wise alphas stay a single fused expand: the K-tile's slice of the
+(G, N, bits) alpha array is selected by the BlockSpec index map from
+the K grid index, so the kernel body only broadcasts each group's
+scales over its rows before the one MXU dot — no extra passes, no
+gather. Tiling constraint: BK must be a multiple of group_size (several
+groups per K-tile) or group_size a multiple of BK (one group spanning
+several tiles); `bcq_matmul` adjusts block_k automatically (round down
+to a group multiple, or shrink to gcd(group_size, block_k) for odd
+spanning sizes), so any group_size that is a multiple of the 32-bit
+pack word works.
 
 Layout notes (TPU-friendly):
   x       (M, K)            -> blocks (BM, BK)
   codes   (bits, K/32, N)   -> blocks (bits, BK/32, BN); K is the
                                second-minor dim so unpacking expands
                                sublanes, keeping N on the 128-wide lane dim
-  alphas  (1, N, bits)      -> (1, BN, bits)  [per-output-channel, G=1]
-  betas   (1, N)            -> (1, BN)
+  alphas  (G, N, bits)      -> (BG, BN, bits), BG = groups per K-tile
+  betas   (G, N)            -> (BG, BN)
 All MXU dims (BM, BN, BK) default to multiples of 128.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +49,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 
 
 def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
-            bits: int, nk: int):
+            bits: int, nk: int, bg: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -43,15 +58,22 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
 
     codes = codes_ref[...]                               # (bits, BK/32, BN)
     bk32, bn = codes.shape[1], codes.shape[2]
+    bk = bk32 * WORD
     shifts = jax.lax.broadcasted_iota(
         jnp.uint32, (1, 1, WORD, 1), 2)                  # (1,1,32,1)
     planes = (codes[:, :, None, :] >> shifts) & jnp.uint32(1)
-    planes = planes.reshape(bits, bk32 * WORD, bn).astype(jnp.float32)
+    planes = planes.reshape(bits, bk, bn).astype(jnp.float32)
     signs = 2.0 * planes - 1.0                           # (bits, BK, BN)
 
-    w = jnp.broadcast_to(beta_ref[0][None, :], signs.shape[1:]).astype(jnp.float32)
+    # expand group scales over their rows: group g covers rows
+    # [g*sub, (g+1)*sub) of this K-tile (sub = BK // BG)
+    sub = bk // bg
+    signs = signs.reshape(bits, bg, sub, bn)
+    w = jnp.broadcast_to(
+        beta_ref[...][:, None, :], (bg, sub, bn)).astype(jnp.float32)
     for i in range(bits):                                # static unroll
-        w = w + alpha_ref[0, :, i][None, :] * signs[i]
+        w = w + alpha_ref[:, :, i][:, None, :] * signs[i]
+    w = w.reshape(bk, bn)
 
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], w.astype(x_ref.dtype),
@@ -67,14 +89,37 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
                                              "interpret"))
 def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
                block_k=256, interpret=False):
-    """x (M, K) with K % 32 == 0; codes (bits, K/32, N); alphas (1, N, bits);
-    betas (1, N). Returns (M, N) in x.dtype. Pads M/N/K to block multiples.
+    """x (M, K) with K % 32 == 0; codes (bits, K/32, N); alphas
+    (G, N, bits); betas (G, N) with G == 1 (per-channel) or G dividing K
+    into contiguous groups whose size is a multiple of 32. Returns
+    (M, N) in x.dtype. Pads M/N/K to block multiples.
     """
     M, K = x.shape
     bits, KW, N = codes.shape
+    G = alphas.shape[0]
     assert KW * WORD == K, (K, KW)
-    assert alphas.shape == (1, N, bits), alphas.shape
-    assert betas.shape == (1, N), betas.shape
+    assert alphas.shape == (G, N, bits), alphas.shape
+    assert betas.shape == (G, N), betas.shape
+
+    if G == 1:
+        gs = 0
+    else:
+        if K % G:
+            raise ValueError(f"G={G} scale groups must divide K={K}")
+        gs = K // G
+        if gs % WORD:
+            raise ValueError(
+                f"group_size={gs} must be a multiple of {WORD} for the "
+                f"packed kernel (use the jnp reference path otherwise)")
+        if gs < block_k:
+            # several whole groups per K-tile: round BK down to a group
+            # multiple (stays >= gs >= 32)
+            block_k = block_k - block_k % gs
+        elif gs % block_k:
+            # group spans tiles but doesn't divide evenly: shrink BK to
+            # the largest common divisor (a multiple of 32, since both
+            # are) so every K-tile stays inside one group
+            block_k = math.gcd(gs, block_k)
 
     # block height must stay a multiple of the 8-sublane tile: round the
     # small-M shortcut up (e.g. M=100 -> bm=104, not 100)
@@ -86,21 +131,36 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
         x = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
     if Np != N or Kp != K:
         codes = jnp.pad(codes, ((0, 0), (0, (Kp - K) // WORD), (0, Np - N)))
-        alphas = jnp.pad(alphas, ((0, 0), (0, Np - N), (0, 0)))
-        betas = jnp.pad(betas, ((0, 0), (0, Np - N)))
+        Gp = Kp // gs if gs else 1
+        alphas = jnp.pad(alphas, ((0, Gp - G), (0, Np - N), (0, 0)))
+        betas = jnp.pad(betas, ((0, Gp - G), (0, Np - N)))
 
     nk = Kp // block_k
     grid = (Mp // bm, Np // block_n, nk)
 
+    if gs == 0:
+        bg = 1
+        a_index = lambda i, j, k: (0, j, 0)
+        b_index = lambda i, j, k: (0, j)
+    elif gs <= block_k:
+        bg = block_k // gs
+        a_index = lambda i, j, k: (k, j, 0)              # tile k -> groups
+        b_index = lambda i, j, k: (k, j)                 # [k*bg, (k+1)*bg)
+    else:
+        bg = 1
+        tiles_per_group = gs // block_k
+        a_index = lambda i, j, k: (k // tiles_per_group, j, 0)
+        b_index = lambda i, j, k: (k // tiles_per_group, j)
+
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits, nk=nk),
+        functools.partial(_kernel, bits=bits, nk=nk, bg=bg),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((bits, block_k // WORD, block_n),
                          lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((1, block_n, bits), lambda i, j, k: (0, j, 0)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bg, block_n, bits), a_index),
+            pl.BlockSpec((bg, block_n), b_index),
         ],
         out_specs=pl.BlockSpec((bm, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),

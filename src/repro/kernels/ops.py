@@ -3,8 +3,11 @@
 `bcq_apply(x, qt)` is what `layers.linear` calls for QuantizedTensor
 weights: it picks the Pallas kernel on TPU (or when FORCE_PALLAS is set,
 running interpret=True off-TPU for tests) and the pure-jnp reference
-otherwise. Expert stacks (leading dims) and grouped scales fall back to
-the reference path.
+otherwise. Group-wise scales (G > 1) ride the kernel whenever the
+packed layout lines up (group_size a multiple of the 32-bit pack word,
+so the zero-padded K tail never crosses into a phantom group); expert
+stacks (leading dims) and ragged groupings fall back to the reference
+path.
 """
 from __future__ import annotations
 
@@ -25,13 +28,24 @@ def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _kernel_groups_ok(qt) -> bool:
+    """G > 1 runs the fused kernel iff groups tile the packed K axis:
+    group_size divides k_in (validated at construction) AND is a
+    multiple of the 32-bit pack word, which together mean k_in is
+    already word-aligned (no pad rows outside the last group)."""
+    G = qt.alphas.shape[-3]
+    if G == 1:
+        return True
+    return qt.k_in % G == 0 and (qt.k_in // G) % WORD == 0
+
+
 def bcq_apply(x, qt):
     """x (..., k_in) @ QuantizedTensor -> (..., n_out)."""
     lead = qt.codes.shape[:-3]
     if lead:                      # expert/group stacks: reference path
         w = _dequant_nd(qt, x.dtype)
         return jnp.einsum("...k,...kn->...n", x, w)
-    if qt.alphas.shape[-3] != 1 or not _use_pallas():
+    if not _use_pallas() or not _kernel_groups_ok(qt):
         w = ref.dequant_ref(qt.codes, qt.alphas, qt.betas, qt.k_in,
                             dtype=x.dtype)
         return jnp.einsum("...k,kn->...n", x, w)

@@ -24,7 +24,9 @@ NEG_INF = -1e30
 
 def dequant_ref(codes, alphas, betas, k_in: int, dtype=jnp.float32):
     """codes (bits, K/32, N) u32; alphas (G, N, bits); betas (G, N)
-    -> W (k_in, N)."""
+    -> W (k_in, N). Group g's scales cover K rows [g*ceil(k_in/G),
+    ...): exact contiguous groups when G divides k_in (the
+    QuantizedTensor invariant), ragged-tail semantics otherwise."""
     signs = unpack_signs(codes, k_in)                    # (bits, K, N)
     G = alphas.shape[0]
     glen = -(-k_in // G)

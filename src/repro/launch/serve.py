@@ -23,8 +23,16 @@ def main():
     ap.add_argument("--arch", default="tiny-lm")
     ap.add_argument("--quant", type=int, default=0,
                     help="quantization bits (0 = dense)")
-    ap.add_argument("--method", default="gptqt",
-                    help="registered quantizer name (see docs/QUANT.md)")
+    ap.add_argument("--method", default=None,
+                    help="registered quantizer name (default gptqt; see "
+                         "docs/QUANT.md)")
+    ap.add_argument("--group-size", type=int, default=0,
+                    help="K entries per scale group (0 = per-channel); "
+                         "must divide every quantized leaf's K_in")
+    ap.add_argument("--suggest-overrides", action="store_true",
+                    help="run the FineQuant-style sensitivity sweep and "
+                         "print a paste-ready OverrideRule tuple instead "
+                         "of serving")
     ap.add_argument("--save-quantized", default=None, metavar="DIR",
                     help="write the packed model artifact after quantizing")
     ap.add_argument("--load-quantized", default=None, metavar="DIR",
@@ -43,10 +51,34 @@ def main():
     from repro.serve import Request, ServeEngine
 
     tok = ByteTokenizer()
+    if args.suggest_overrides:
+        from benchmarks.common import calib_batches_for
+        from repro.data.pretrained import get_trained_lm
+        from repro.quant import (QuantSpec, format_overrides, format_report,
+                                 sensitivity_sweep, suggest_overrides)
+
+        cfg, params = get_trained_lm(args.arch, steps=args.train_steps)
+        spec = QuantSpec.from_config(
+            cfg.quant, method=args.method or "gptqt",
+            bits=args.quant or cfg.quant.bits,
+            group_size=args.group_size)
+        scores = sensitivity_sweep(cfg, params, calib_batches_for("wiki"),
+                                   spec=spec)
+        print(format_report(scores))
+        rules = suggest_overrides(scores, base_bits=spec.bits)
+        print(f"\n# most sensitive {len(rules)}/{len(scores)} leaves "
+              f"bumped from w{spec.bits} to w{spec.bits + 1}; paste into "
+              f"QuantSpec(..., overrides=...):")
+        print(format_overrides(rules))
+        return
+
     if args.load_quantized:
-        if args.quant or args.save_quantized:
+        if (args.quant or args.save_quantized or args.group_size
+                or args.method):
             ap.error("--load-quantized boots the artifact as-is; it is "
-                     "incompatible with --quant/--save-quantized")
+                     "incompatible with --quant/--save-quantized/"
+                     "--group-size/--method (re-quantize and re-save to "
+                     "change them)")
         from repro.ckpt.packed import load_packed
         params, spec, meta = load_packed(args.load_quantized)
         arch = meta.get("arch", args.arch)
@@ -66,10 +98,12 @@ def main():
         cfg, params = get_trained_lm(args.arch, steps=args.train_steps)
         if args.quant:
             spec = QuantSpec.from_config(
-                cfg.quant, method=args.method, mode="packed",
-                bits=args.quant)
+                cfg.quant, method=args.method or "gptqt", mode="packed",
+                bits=args.quant, group_size=args.group_size)
+            gdesc = (f", group_size={spec.group_size}" if spec.group_size
+                     else "")
             print(f"quantizing with {spec.method} to {spec.bits} bits "
-                  f"(packed) ...")
+                  f"(packed{gdesc}) ...")
             params, _ = quantize_model(cfg, params,
                                        calib_batches_for("wiki"), spec=spec)
             if args.save_quantized:

@@ -3,6 +3,8 @@ from repro.quant.qlinear import QuantizedTensor
 from repro.quant.registry import (QuantResult, Quantizer,
                                   available_quantizers, get_quantizer,
                                   register_quantizer)
+from repro.quant.search import (LeafScore, format_overrides, format_report,
+                                sensitivity_sweep, suggest_overrides)
 from repro.quant.spec import (QUANTIZABLE, LeafPlan, OverrideRule,
                               QuantSpec, is_quantizable)
 
@@ -10,5 +12,7 @@ __all__ = [
     "pack_signs", "unpack_signs", "padded_k", "QuantizedTensor",
     "QuantSpec", "OverrideRule", "LeafPlan", "QUANTIZABLE",
     "is_quantizable", "Quantizer", "QuantResult", "register_quantizer",
-    "get_quantizer", "available_quantizers",
+    "get_quantizer", "available_quantizers", "LeafScore",
+    "sensitivity_sweep", "suggest_overrides", "format_overrides",
+    "format_report",
 ]

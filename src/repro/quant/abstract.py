@@ -15,18 +15,22 @@ import jax.numpy as jnp
 
 from repro.quant.packing import WORD
 from repro.quant.qlinear import QuantizedTensor
-from repro.quant.spec import QuantSpec
+from repro.quant.spec import QuantSpec, n_groups_for
 
 
-def quantized_leaf_abstract(leaf, bits: int):
-    """leaf: SDS/array of shape (..., K, N) -> QuantizedTensor of SDS."""
+def quantized_leaf_abstract(leaf, bits: int, group_size: int = 0):
+    """leaf: SDS/array of shape (..., K, N) -> QuantizedTensor of SDS.
+    `group_size > 0` sizes the scale leaves at G = K/group_size groups
+    along K, so the dry-run memory model charges per-group alphas/betas
+    exactly as the concrete quantizer would emit them."""
     *lead, K, N = leaf.shape
     KW = -(-K // WORD)
+    G = n_groups_for(K, group_size)
     sds = jax.ShapeDtypeStruct
     return QuantizedTensor(
         codes=sds((*lead, bits, KW, N), jnp.uint32),
-        alphas=sds((*lead, 1, N, bits), jnp.float32),
-        betas=sds((*lead, 1, N), jnp.float32),
+        alphas=sds((*lead, G, N, bits), jnp.float32),
+        betas=sds((*lead, G, N), jnp.float32),
         k_in=K, orig_dtype=str(leaf.dtype))
 
 
@@ -52,7 +56,8 @@ def quantize_params_abstract(cfg, params, bits=None, include_head=False,
                 else:
                     plan = spec.resolve(".".join(sub), k,
                                         getattr(v, "ndim", 0))
-                    out[k] = (quantized_leaf_abstract(v, plan.bits)
+                    out[k] = (quantized_leaf_abstract(v, plan.bits,
+                                                      plan.group_size)
                               if plan else v)
             return out
         return tree

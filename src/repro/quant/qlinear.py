@@ -1,10 +1,17 @@
 """QuantizedTensor: the fused binary-coding weight representation (Eq. 11).
 
 W[k, n] = sum_i alphas[g(k), n, i] * s_i[k, n] + betas[g(k), n],
-s in {-1,+1} packed as uint32 bitplanes. This is a pytree, so it slots
-directly into param trees: lax.scan slices the leading (group/expert)
-axes of its leaves, pjit shards them (N on the `model` axis), and
-`layers.linear` dispatches on it transparently.
+s in {-1,+1} packed as uint32 bitplanes, g(k) = k // group_size the
+contiguous K-group of row k. This is a pytree, so it slots directly into
+param trees: lax.scan slices the leading (group/expert) axes of its
+leaves, pjit shards them (N on the `model` axis), and `layers.linear`
+dispatches on it transparently.
+
+The G axis invariant is validated at construction: alphas (..., G, N,
+bits) and betas (..., G, N) must agree on G and N with the codes, and
+G > 1 must divide k_in exactly (per-channel G=1 tolerates any k_in).
+Validation is shape-only — tracers and ShapeDtypeStructs pass through —
+and skipped for leaves that carry no shape (tree-structure plumbing).
 """
 from __future__ import annotations
 
@@ -12,6 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant.packing import unpack_signs
+
+
+def _shape(x):
+    s = getattr(x, "shape", None)
+    return tuple(s) if isinstance(s, (tuple, list)) else None
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -24,6 +36,34 @@ class QuantizedTensor:
         self.betas = betas        # (..., G, N) float32
         self.k_in = int(k_in)
         self.orig_dtype = str(orig_dtype)
+        self._validate()
+
+    def _validate(self):
+        cs, as_, bs = _shape(self.codes), _shape(self.alphas), _shape(self.betas)
+        if (cs is None or as_ is None or bs is None
+                or len(cs) < 3 or len(as_) < 3 or len(bs) < 2):
+            return                  # no/partial shape info: trust the caller
+        bits, KW, N = cs[-3:]
+        G = as_[-3]
+        if as_[-2:] != (N, bits):
+            raise ValueError(
+                f"alphas {as_} do not match codes {cs}: want "
+                f"(..., G, N={N}, bits={bits})")
+        if bs[-2:] != (G, N):
+            raise ValueError(
+                f"betas {bs} do not match alphas {as_}: want "
+                f"(..., G={G}, N={N})")
+        if not (cs[:-3] == as_[:-3] == bs[:-2]):
+            raise ValueError(
+                f"leading (stack) dims disagree: codes {cs}, alphas "
+                f"{as_}, betas {bs}")
+        if G > 1 and self.k_in % G:
+            raise ValueError(
+                f"G={G} scale groups must divide k_in={self.k_in} "
+                f"(group boundaries are contiguous K slices)")
+        if self.k_in > KW * 32:
+            raise ValueError(
+                f"k_in={self.k_in} exceeds packed capacity {KW * 32}")
 
     # ---- pytree ----
     def tree_flatten_with_keys(self):
@@ -43,6 +83,17 @@ class QuantizedTensor:
     @property
     def n_out(self):
         return self.codes.shape[-1]
+
+    @property
+    def n_groups(self):
+        """Scale groups along K (G axis length)."""
+        return self.alphas.shape[-3]
+
+    @property
+    def group_size(self):
+        """K entries per scale group; 0 means per-channel (G=1)."""
+        G = self.n_groups
+        return 0 if G == 1 else self.k_in // G
 
     @property
     def shape(self):

@@ -1,0 +1,152 @@
+"""FineQuant-style per-leaf sensitivity sweep (the ROADMAP's "per-layer
+bit search" follow-up, first half): score every quantizable leaf by its
+Hessian-diagonal-weighted quantization error at a grid of bit-widths,
+then emit a ready-to-paste `OverrideRule` tuple that keeps the most
+sensitive leaves at higher precision.
+
+The score for leaf W (GPTQ orientation, rows = output channels) at b
+bits is the *relative* diag(H)-weighted error of a cheap RTN proxy:
+
+    err(b) = sum_k hd[k] * (W - RTN_b(W))^2  /  sum_k hd[k] * W^2
+
+— the same second-order proxy the GPTQT BCchoice search minimizes, so
+the ranking orders leaves by how much layer-output MSE each one
+contributes at a given width, without running the (much slower) GPTQ
+solves per leaf. Scores are comparable across leaves because they are
+normalized by the leaf's own weighted energy.
+
+Typical use (also wired to `python -m repro.launch.serve
+--suggest-overrides`):
+
+    scores = sensitivity_sweep(cfg, params, calib_batches)
+    rules = suggest_overrides(scores, base_bits=cfg.quant.bits)
+    print(format_overrides(rules))     # paste into your QuantSpec
+    spec = QuantSpec.from_config(cfg.quant, overrides=rules)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rtn import quantize_rtn
+from repro.quant.spec import OverrideRule, QuantSpec, dotted_path, leaf_name
+
+DEFAULT_BITS_GRID = (2, 3, 4)
+
+
+@dataclass(frozen=True)
+class LeafScore:
+    """Sensitivity of one weight leaf (averaged over layer groups and
+    experts when the leaf is stacked)."""
+    path: str                       # dotted path, e.g. "blocks.L0.attn.wv"
+    err: Dict[int, float]           # bits -> relative weighted error
+    params: int                     # elements (for budget accounting)
+
+    def sensitivity(self, bits: int) -> float:
+        """Error at `bits`, snapped to the nearest scored width (the
+        sweep grid is fixed; callers may ask about e.g. 5 bits)."""
+        return self.err[min(self.err, key=lambda b: abs(b - bits))]
+
+
+def _leaf_err(Wt, hd, bits: int, group_size: int) -> float:
+    """Relative diag(H)-weighted RTN error for one (N, K) matrix."""
+    Wt = Wt.astype(jnp.float32)
+    try:
+        wq, _ = quantize_rtn(Wt, bits, group_size=group_size)
+    except ValueError:              # group_size does not divide this K
+        wq, _ = quantize_rtn(Wt, bits)
+    hd = jnp.clip(hd, 1e-12, None)[None, :]
+    num = jnp.sum(hd * (Wt - wq) ** 2)
+    den = jnp.sum(hd * Wt ** 2) + 1e-12
+    return float(num / den)
+
+
+def sensitivity_sweep(cfg, params, calib_batches, *,
+                      bits_grid: Tuple[int, ...] = DEFAULT_BITS_GRID,
+                      spec: QuantSpec | None = None,
+                      hessians=None) -> Tuple[LeafScore, ...]:
+    """Calibrate (or reuse `hessians` from collect_hessians) and score
+    every spec-eligible leaf at each width in `bits_grid`. Returns
+    LeafScores sorted most-sensitive-first at the spec's base bits."""
+    from repro.core.api import collect_hessians   # lazy: api imports quant
+    if spec is None:
+        spec = QuantSpec.from_config(cfg.quant)
+    if hessians is None:
+        hessians = collect_hessians(cfg, params, calib_batches, spec=spec)
+
+    by_path: Dict[str, list] = {}
+    for path, g, leaf, H in hessians.values():
+        dotted = ("blocks." if g != -1 else "") + dotted_path(path)
+        by_path.setdefault(dotted, []).append((leaf, H))
+
+    scores = []
+    for dotted, entries in sorted(by_path.items()):
+        name = dotted.rsplit(".", 1)[-1]
+        plan = spec.resolve(dotted, name, getattr(entries[0][0], "ndim", 2))
+        gsize = plan.group_size if plan is not None else 0
+        errs: Dict[int, list] = {b: [] for b in bits_grid}
+        n_params = 0
+        for leaf, H in entries:
+            mats = ([(leaf[e], H[e]) for e in range(leaf.shape[0])]
+                    if leaf.ndim == 3 else [(leaf, H)])
+            for W, He in mats:
+                Wt = jnp.asarray(W).T                     # (N, K)
+                hd = jnp.diag(jnp.asarray(He, jnp.float32))
+                for b in bits_grid:
+                    errs[b].append(_leaf_err(Wt, hd, b, gsize))
+                n_params += W.size
+        scores.append(LeafScore(
+            path=dotted,
+            err={b: float(np.mean(errs[b])) for b in bits_grid},
+            params=n_params))
+
+    base = min(bits_grid, key=lambda b: abs(b - spec.bits))
+    scores.sort(key=lambda s: -s.sensitivity(base))
+    return tuple(scores)
+
+
+def suggest_overrides(scores: Iterable[LeafScore], *, base_bits: int,
+                      bump_frac: float = 0.25,
+                      bump_to: int | None = None) -> Tuple[OverrideRule, ...]:
+    """Top `bump_frac` most-sensitive leaves (at `base_bits`) get an
+    OverrideRule raising them to `bump_to` (default base_bits + 1) —
+    the FineQuant recipe: spend the extra bits where the weighted error
+    concentrates."""
+    scores = list(scores)
+    if not scores:
+        return ()
+    bump_to = bump_to if bump_to is not None else base_bits + 1
+    ranked = sorted(scores, key=lambda s: -s.sensitivity(base_bits))
+    n_bump = max(1, int(round(len(ranked) * bump_frac)))
+    return tuple(OverrideRule(pattern=s.path, bits=bump_to)
+                 for s in ranked[:n_bump])
+
+
+def format_overrides(rules: Iterable[OverrideRule]) -> str:
+    """Render rules as paste-ready QuantSpec construction source."""
+    lines = ["overrides = ("]
+    for r in rules:
+        parts = [repr(r.pattern)]
+        for f in ("method", "bits", "intermediate_bits", "group_size"):
+            v = getattr(r, f)
+            if v is not None:
+                parts.append(f"{f}={v!r}")
+        if r.skip:
+            parts.append("skip=True")
+        lines.append(f"    OverrideRule({', '.join(parts)}),")
+    lines.append(")")
+    return "\n".join(lines)
+
+
+def format_report(scores: Iterable[LeafScore],
+                  bits_grid: Tuple[int, ...] = DEFAULT_BITS_GRID) -> str:
+    """Human-readable sensitivity table (one line per leaf)."""
+    header = "leaf".ljust(32) + "".join(f"  err@w{b}" for b in bits_grid)
+    lines = [header, "-" * len(header)]
+    for s in scores:
+        lines.append(s.path.ljust(32) + "".join(
+            f"  {s.err[b]:7.4f}" for b in bits_grid))
+    return "\n".join(lines)

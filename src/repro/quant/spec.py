@@ -76,6 +76,42 @@ class LeafPlan:
     reexplore_points: int = 33
     exact_search: bool = False
 
+    def __post_init__(self):
+        _check_group_size(self.group_size)
+
+    def n_groups(self, k_in: int) -> int:
+        """Scale groups along a K_in-length contraction axis; raises a
+        clear error when group_size does not divide k_in (no implicit
+        padding)."""
+        return n_groups_for(k_in, self.group_size)
+
+
+def n_groups_for(k_in: int, group_size: int) -> int:
+    """THE quant-layer divisibility check (shared by LeafPlan and the
+    abstract dry-run so the error message cannot drift)."""
+    if group_size == 0:
+        return 1
+    if k_in % group_size:
+        raise ValueError(
+            f"group_size={group_size} does not divide the weight's "
+            f"K_in={k_in}; pick a divisor of every quantized leaf's K "
+            f"(or add an OverrideRule with a fitting group_size / "
+            f"group_size=0 for the odd leaves)")
+    return k_in // group_size
+
+
+def _check_group_size(group_size) -> None:
+    if group_size is None:
+        return
+    if not isinstance(group_size, int) or isinstance(group_size, bool):
+        raise ValueError(
+            f"group_size must be an int (K entries per scale group), "
+            f"got {group_size!r}")
+    if group_size < 0:
+        raise ValueError(
+            f"group_size must be >= 0 (0 = per-channel scales), got "
+            f"{group_size}")
+
 
 @dataclass(frozen=True)
 class OverrideRule:
@@ -86,7 +122,11 @@ class OverrideRule:
     method: Optional[str] = None
     bits: Optional[int] = None
     intermediate_bits: Optional[int] = None
+    group_size: Optional[int] = None
     skip: bool = False
+
+    def __post_init__(self):
+        _check_group_size(self.group_size)
 
     def matches(self, path: str, name: str) -> bool:
         return fnmatchcase(name, self.pattern) or fnmatchcase(path,
@@ -112,6 +152,7 @@ class QuantSpec:
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got "
                              f"{self.mode!r}")
+        _check_group_size(self.group_size)
 
     # ---------------- construction ----------------
     @classmethod
@@ -140,6 +181,7 @@ class QuantSpec:
         if not self.eligible(name, ndim):
             return None
         method, bits, ibits = self.method, self.bits, self.intermediate_bits
+        gsize = self.group_size
         for rule in self.overrides:
             if rule.matches(path, name):
                 if rule.skip:
@@ -147,10 +189,12 @@ class QuantSpec:
                 method = rule.method or method
                 bits = rule.bits or bits
                 ibits = rule.intermediate_bits or ibits
+                if rule.group_size is not None:
+                    gsize = rule.group_size
                 break
         return LeafPlan(
             method=method, bits=bits, mode=self.mode,
-            intermediate_bits=ibits, group_size=self.group_size,
+            intermediate_bits=ibits, group_size=gsize,
             reexplore_range=self.reexplore_range,
             reexplore_points=self.reexplore_points,
             exact_search=self.exact_search)

@@ -1,11 +1,25 @@
-"""Minimal stand-in for `hypothesis` when it isn't installed (the CPU CI
-image): runs each property test on `max_examples` deterministic
+"""Minimal stand-in for `hypothesis` when it isn't installed (bare local
+environments): runs each property test on `max_examples` deterministic
 pseudo-random draws from the strategy space, seeded by the test name so
 failures reproduce. Only the tiny API surface the suite uses.
+
+Environments that are SUPPOSED to have the real package (the CI images
+install it) set REQUIRE_HYPOTHESIS=1: importing this shim then raises
+immediately, so a broken/missing hypothesis install fails the run
+loudly instead of being silently masked by the fallback's much weaker
+example generation.
 """
 from __future__ import annotations
 
+import os
 import random
+
+if os.environ.get("REQUIRE_HYPOTHESIS"):
+    raise ImportError(
+        "REQUIRE_HYPOTHESIS is set but the real `hypothesis` package "
+        "failed to import — refusing to substitute the fallback shim "
+        "(install hypothesis in this image, or unset REQUIRE_HYPOTHESIS "
+        "to accept the weaker deterministic fallback)")
 
 
 class _Strategy:

@@ -15,11 +15,11 @@ from repro.quant.packing import pack_signs, unpack_signs
 from repro.quant.qlinear import QuantizedTensor
 
 
-def _rand_qt(rng, K, N, bits):
+def _rand_qt(rng, K, N, bits, G=1):
     codes = jnp.asarray(rng.integers(0, 2 ** 32, (bits, -(-K // 32), N),
                                      dtype=np.uint32))
-    alphas = jnp.asarray(rng.random((1, N, bits), dtype=np.float32) * 0.2)
-    betas = jnp.asarray((rng.standard_normal((1, N)) * 0.05).astype(np.float32))
+    alphas = jnp.asarray(rng.random((G, N, bits), dtype=np.float32) * 0.2)
+    betas = jnp.asarray((rng.standard_normal((G, N)) * 0.05).astype(np.float32))
     return codes, alphas, betas
 
 
@@ -118,6 +118,106 @@ def test_bcq_matmul_odd_m_rounds_block_to_sublanes(M):
     got = bcq_matmul(x, codes, alphas, betas, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# group-wise scales (per-K-group alphas/betas)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("group_size", [0, 64, 128])
+@pytest.mark.parametrize("M", [32, 33])                  # even / odd M
+def test_bcq_matmul_grouped_matches_ref(group_size, M):
+    K, N, bits = 256, 130, 3
+    G = K // group_size if group_size else 1
+    rng = np.random.default_rng(group_size * 100 + M)
+    codes, alphas, betas = _rand_qt(rng, K, N, bits, G)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, K)
+    got = bcq_matmul(x, codes, alphas, betas, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bcq_matmul_group128_acceptance_gemm():
+    """Acceptance: group_size=128 on a (256, 512, 384) GEMM matches the
+    jnp oracle to fp32 tolerance (interpret mode)."""
+    M, K, N, bits, gs = 256, 512, 384, 3, 128
+    rng = np.random.default_rng(7)
+    codes, alphas, betas = _rand_qt(rng, K, N, bits, K // gs)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, K)
+    got = bcq_matmul(x, codes, alphas, betas, interpret=True)
+    scale = float(jnp.abs(want).max()) + 1e-9
+    assert float(jnp.abs(got - want).max()) / scale < 2e-5
+
+
+def test_bcq_matmul_group_spans_multiple_k_tiles():
+    """group_size > block_k: one group covers several K-tiles, selected
+    by the grid-index arithmetic in the BlockSpec index map."""
+    K, N, bits, gs = 1024, 96, 2, 512
+    rng = np.random.default_rng(11)
+    codes, alphas, betas = _rand_qt(rng, K, N, bits, K // gs)
+    x = jnp.asarray(rng.standard_normal((16, K)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, K)
+    got = bcq_matmul(x, codes, alphas, betas, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bcq_matmul_grouped_gemv_and_bf16():
+    rng = np.random.default_rng(13)
+    codes, alphas, betas = _rand_qt(rng, 256, 320, 3, G=4)
+    x = jnp.asarray(rng.standard_normal((2, 256))).astype(jnp.bfloat16)
+    want = ref.bcq_matmul_ref(x.astype(jnp.float32), codes, alphas, betas, 256)
+    got = bcq_gemv(x, codes, alphas, betas, interpret=True)
+    scale = float(jnp.abs(want).max()) + 1e-9
+    assert float(jnp.abs(got.astype(jnp.float32) - want).max()) / scale < 2e-2
+
+
+def test_bcq_matmul_group_not_multiple_of_block_k():
+    """Regression: gs=320 (word-aligned, > block_k, not a multiple of
+    it) must shrink block_k to gcd and still match the oracle — the
+    ops-layer predicate admits every word-aligned grouping, so the
+    kernel has to handle them all."""
+    K, N, bits, gs = 1280, 64, 2, 320
+    rng = np.random.default_rng(23)
+    codes, alphas, betas = _rand_qt(rng, K, N, bits, K // gs)
+    x = jnp.asarray(rng.standard_normal((16, K)).astype(np.float32))
+    want = ref.bcq_matmul_ref(x, codes, alphas, betas, K)
+    got = bcq_matmul(x, codes, alphas, betas, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # and through the dispatch layer (what serving actually calls)
+    from repro.kernels import ops
+    qt = QuantizedTensor(codes, alphas, betas, k_in=K, orig_dtype="float32")
+    old = ops.FORCE_PALLAS
+    ops.FORCE_PALLAS = True
+    try:
+        y = ops.bcq_apply(x, qt)
+    finally:
+        ops.FORCE_PALLAS = old
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bcq_matmul_rejects_bad_grouping():
+    rng = np.random.default_rng(17)
+    codes, alphas, betas = _rand_qt(rng, 256, 64, 2, G=3)  # 3 !| 256
+    x = jnp.asarray(rng.standard_normal((8, 256)).astype(np.float32))
+    with pytest.raises(ValueError, match="divide"):
+        bcq_matmul(x, codes, alphas, betas, interpret=True)
+
+
+def test_quantized_tensor_validates_group_invariant():
+    rng = np.random.default_rng(19)
+    codes, alphas, betas = _rand_qt(rng, 64, 8, 2, G=2)
+    QuantizedTensor(codes, alphas, betas, k_in=64)          # ok
+    with pytest.raises(ValueError, match="divide"):
+        QuantizedTensor(codes, alphas, betas, k_in=63)      # 2 !| 63
+    with pytest.raises(ValueError, match="betas"):
+        QuantizedTensor(codes, alphas, betas[:1], k_in=64)  # G mismatch
+    with pytest.raises(ValueError, match="alphas"):
+        QuantizedTensor(codes, alphas[:, :, :1], betas, k_in=64)
 
 
 @pytest.mark.parametrize("block_m,block_n,block_k",

@@ -104,6 +104,83 @@ def test_loaded_model_serves_identically(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# group-wise (G > 1) artifacts
+# ---------------------------------------------------------------------------
+
+def test_grouped_packed_roundtrip_and_serving(tmp_path):
+    """A G>1 QuantizedTensor tree survives save/load bit-exactly and
+    serves token-identically (the PR 3 round-trip, with groups)."""
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
+                                 group_size=64)
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    # the tree really carries grouped scale leaves
+    qts = [l for _, l in _leaves(qp) if isinstance(l, QuantizedTensor)]
+    assert qts and all(q.n_groups == q.k_in // 64 for q in qts)
+    assert any(q.n_groups > 1 for q in qts)
+    save_packed(tmp_path / "g", qp, spec=spec, meta={"arch": "tiny-lm"})
+    lp, lspec, _ = load_packed(tmp_path / "g")
+    assert lspec.group_size == 64
+    for (pq, lq), (pl_, ll) in zip(_leaves(qp), _leaves(lp)):
+        assert pq == pl_
+        if isinstance(lq, QuantizedTensor):
+            assert ll.n_groups == lq.n_groups
+            assert ll.group_size == lq.group_size
+            for f in ("codes", "alphas", "betas"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(lq, f)), np.asarray(getattr(ll, f)))
+
+    mk = lambda: [Request(prompt=(np.arange(10) * 3 + i).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=8)
+                  for i in range(2)]
+    outs = []
+    for params in (qp, lp):
+        eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                          dtype="float32")
+        reqs = mk()
+        eng.run(reqs)
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_manifest_records_group_axis(tmp_path):
+    import json
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
+                                 group_size=128)
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec)
+    manifest = json.loads((d / "manifest.json").read_text())
+    wq = manifest["tree"]["blocks"]["L0"]["attn"]["wq"]
+    assert wq["kind"] == "qt"
+    assert wq["group_size"] == 128
+    assert wq["groups"] == wq["k_in"] // 128
+
+
+def test_legacy_g1_artifact_warns_under_grouped_spec(tmp_path):
+    """A pre-groups artifact (spec carries group_size but leaves are
+    per-channel) must warn exactly once on load."""
+    import warnings as _w
+
+    from repro.ckpt import packed as packed_mod
+    cfg, p, calib = _tiny()
+    # simulate the legacy state: solvers ignored group_size -> G=1 leaves
+    # but the spec recorded in the manifest still requests groups
+    spec_g1 = QuantSpec.from_config(cfg.quant, method="gptqt",
+                                    mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec_g1)
+    legacy_spec = spec_g1.replace(group_size=64)
+    save_packed(tmp_path / "legacy", qp, spec=legacy_spec)
+    packed_mod._WARNED_LEGACY_GROUPS = False
+    with pytest.warns(UserWarning, match="per-channel"):
+        load_packed(tmp_path / "legacy")
+    with _w.catch_warnings():           # one-time: second load is silent
+        _w.simplefilter("error")
+        load_packed(tmp_path / "legacy")
+    packed_mod._WARNED_LEGACY_GROUPS = False
+
+
+# ---------------------------------------------------------------------------
 # device-resident block tables
 # ---------------------------------------------------------------------------
 

@@ -146,6 +146,115 @@ def test_abstract_path_uses_same_resolver():
 
 
 # ---------------------------------------------------------------------------
+# group-wise spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_group_size_validation_is_loud():
+    """The silent no-op is gone: bad group_size values raise clearly."""
+    with pytest.raises(ValueError, match=">= 0"):
+        QuantSpec(group_size=-64)
+    with pytest.raises(ValueError, match="int"):
+        QuantSpec(group_size=64.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        OverrideRule("wv", group_size=-1)
+    plan = QuantSpec(group_size=48).resolve("blocks.L0.attn.wq", "wq")
+    with pytest.raises(ValueError, match="divide"):
+        plan.n_groups(256)
+    assert plan.n_groups(96) == 2
+
+
+def test_nondivisible_group_size_names_the_leaf():
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="rtn", group_size=96)
+    with pytest.raises(ValueError) as ei:       # 96 !| 256
+        quantize_model(cfg, p, calib, spec=spec)
+    assert "group_size=96" in str(ei.value)
+    assert "blocks." in str(ei.value)
+
+
+def test_override_rule_can_set_group_size():
+    spec = QuantSpec(method="gptqt", bits=3, group_size=128, overrides=(
+        OverrideRule("wv", group_size=64),
+        OverrideRule("wd", group_size=0),
+    ))
+    assert spec.resolve("blocks.L0.attn.wv", "wv").group_size == 64
+    assert spec.resolve("blocks.L0.mlp.wd", "wd").group_size == 0
+    assert spec.resolve("blocks.L0.attn.wq", "wq").group_size == 128
+    # serializes through dicts like every other override field
+    assert QuantSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_grouped_quantize_model_emits_grouped_leaves():
+    from repro.quant import QuantizedTensor
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(
+        cfg.quant, method="gptqt", mode="packed", group_size=128,
+        overrides=(OverrideRule("wv", group_size=0),))
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    attn = qp["blocks"]["L0"]["attn"]
+    assert isinstance(attn["wq"], QuantizedTensor)
+    assert attn["wq"].n_groups == 2          # K=256 / 128
+    assert attn["wv"].n_groups == 1          # per-leaf opt-out
+    assert qp["blocks"]["L0"]["mlp"]["wd"].n_groups == 8   # K=1024 / 128
+    logits, _ = forward(cfg, qp, calib[0])
+    assert jnp.isfinite(logits).all()
+
+
+def test_abstract_grouped_leaf_sizes_scale_memory():
+    from repro.quant.abstract import quantized_leaf_abstract
+    leaf = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    q1 = quantized_leaf_abstract(leaf, 3)
+    qg = quantized_leaf_abstract(leaf, 3, group_size=128)
+    assert q1.alphas.shape == (1, 64, 3) and qg.alphas.shape == (4, 64, 3)
+    assert qg.betas.shape == (4, 64)
+    # the size model must charge for the extra scale copies
+    assert qg.packed_bytes() - q1.packed_bytes() == 3 * (64 * 3 + 64) * 4
+    with pytest.raises(ValueError, match="divide"):
+        quantized_leaf_abstract(leaf, 3, group_size=100)
+
+
+def test_abstract_resolver_threads_group_size():
+    from repro.quant.abstract import quantize_params_abstract
+    cfg, p, _ = _tiny()
+    p_abs = jax.eval_shape(lambda: p)
+    spec = QuantSpec.from_config(cfg.quant, mode="packed", group_size=64)
+    q_abs = quantize_params_abstract(cfg, p_abs, spec=spec)
+    wq = q_abs["blocks"]["L0"]["attn"]["wq"]
+    assert wq.alphas.shape[-3] == wq.k_in // 64
+
+
+# ---------------------------------------------------------------------------
+# sensitivity sweep (FineQuant-style bit search)
+# ---------------------------------------------------------------------------
+
+def test_sensitivity_sweep_scores_and_suggests():
+    from repro.quant import (format_overrides, sensitivity_sweep,
+                             suggest_overrides)
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, bits=3)
+    scores = sensitivity_sweep(cfg, p, calib, spec=spec)
+    assert scores                                    # every eligible leaf
+    paths = {s.path for s in scores}
+    assert "blocks.L0.attn.wq" in paths
+    for s in scores:
+        # coarser quantization can only hurt: err monotone in -bits
+        assert s.err[2] >= s.err[3] >= s.err[4] >= 0.0
+    rules = suggest_overrides(scores, base_bits=3, bump_frac=0.3)
+    assert rules and all(r.bits == 4 for r in rules)
+    assert len(rules) == max(1, round(len(scores) * 0.3))
+    # suggested patterns resolve against the same spec machinery
+    spec2 = spec.replace(overrides=rules)
+    bumped = spec2.resolve(rules[0].pattern, rules[0].pattern.rsplit(
+        ".", 1)[-1])
+    assert bumped.bits == 4
+    src = format_overrides(rules)
+    assert src.startswith("overrides = (") and "OverrideRule(" in src
+    # off-grid base bits snap to the nearest scored width (no KeyError)
+    rules5 = suggest_overrides(scores, base_bits=5)
+    assert rules5 and all(r.bits == 6 for r in rules5)
+
+
+# ---------------------------------------------------------------------------
 # streaming calibration
 # ---------------------------------------------------------------------------
 

@@ -9,8 +9,9 @@ except ImportError:  # CPU CI image without hypothesis
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import (bcq_alternating, bcq_greedy, enumerate_bc_choices,
-                        gptq_solve, hessian_from_inputs, linear_levels,
-                        minmse_grid, output_error, quantize_rtn, row_grid)
+                        gptq_solve, gptq_solve_refresh, group_rows,
+                        hessian_from_inputs, linear_levels, minmse_grid,
+                        n_k_groups, output_error, quantize_rtn, row_grid)
 from repro.core.binary_coding import choice_levels_int, sign_combos
 from repro.core.gptqt import gptqt_quantize
 
@@ -182,6 +183,158 @@ def test_gptqt_hist_matches_exact_search_quality():
     e1 = output_error(Wt, r_exact.wq_t, H)
     e2 = output_error(Wt, r_hist.wq_t, H)
     assert e2 <= e1 * 1.10 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# group-wise scaling (per-K-group grids through every solver)
+# ---------------------------------------------------------------------------
+
+def test_group_rows_layout_and_validation():
+    Wt, _ = _data(n=8, k=64)
+    Wg, G = group_rows(Wt, 16)
+    assert G == 4 and Wg.shape == (32, 16)
+    # row (n, g) holds columns [g*16, (g+1)*16) of original row n
+    np.testing.assert_array_equal(np.asarray(Wg[5]),
+                                  np.asarray(Wt[1, 16:32]))
+    with pytest.raises(ValueError, match="divide"):
+        n_k_groups(64, 48)
+    with pytest.raises(ValueError, match=">= 0"):
+        n_k_groups(64, -2)
+
+
+def test_grouped_rtn_equals_per_group_reference():
+    """Group-wise RTN == per-row RTN applied group by group."""
+    Wt, _ = _data(n=16, k=64, seed=10)
+    gs = 16
+    wq, q = quantize_rtn(Wt, 3, group_size=gs)
+    for g in range(64 // gs):
+        blk = Wt[:, g * gs:(g + 1) * gs]
+        wq_blk, _ = quantize_rtn(blk, 3)
+        np.testing.assert_allclose(np.asarray(wq[:, g * gs:(g + 1) * gs]),
+                                   np.asarray(wq_blk), rtol=1e-6)
+
+
+def test_grouped_rtn_reduces_weight_mse():
+    """Finer scale groups track the weight distribution better: MSE must
+    not increase, and on heteroscedastic rows it strictly drops."""
+    rng = np.random.default_rng(0)
+    # per-group spread so per-channel scales are badly matched
+    Wt = jnp.asarray(rng.standard_normal((16, 128)) *
+                     np.repeat(rng.uniform(0.1, 4.0, (16, 4)), 32, axis=1),
+                     jnp.float32)
+    wq0, _ = quantize_rtn(Wt, 3)
+    wq1, _ = quantize_rtn(Wt, 3, group_size=32)
+    e0 = float(jnp.sum((wq0 - Wt) ** 2))
+    e1 = float(jnp.sum((wq1 - Wt) ** 2))
+    assert e1 < e0
+
+
+def test_gptq_grouped_identity_hessian_equals_grouped_rtn():
+    """Group-boundary unit test: with H = I and no actorder the solver
+    must quantize each column against ITS group's grid — i.e. reduce to
+    group-wise RTN exactly at and across boundaries."""
+    Wt, _ = _data(n=16, k=64)
+    H = jnp.eye(64)
+    gs = 16
+    Wg, G = group_rows(Wt, gs)
+    S, c = row_grid(Wg, 3)
+    levels = linear_levels(S, c, 3).reshape(16, G, -1)
+    wq, _ = gptq_solve(Wt, H, levels, actorder=False, percdamp=0.0)
+    wq_rtn, _ = quantize_rtn(Wt, 3, group_size=gs)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(wq_rtn), atol=1e-4)
+
+
+def test_gptq_grouped_actorder_uses_original_group_grids():
+    """actorder permutes the sweep; each column must still quantize
+    against its ORIGINAL group's level set (static-groups convention)."""
+    Wt, H = _data(n=16, k=64, seed=11)
+    gs = 16
+    Wg, G = group_rows(Wt, gs)
+    S, c = row_grid(Wg, 3)
+    levels3 = linear_levels(S, c, 3).reshape(16, G, -1)
+    wq, idx = gptq_solve(Wt, H, levels3, actorder=True)
+    # every output value must lie on its own (row, group) grid
+    lv = np.asarray(levels3)
+    wqn = np.asarray(wq)
+    for n in range(16):
+        for col in range(64):
+            assert np.min(np.abs(lv[n, col // gs] - wqn[n, col])) < 1e-5
+
+
+def test_gptq_refresh_identity_hessian_equals_grouped_rtn():
+    """With H = I there is no compensation, so the refreshed grid equals
+    the static per-group grid and the sweep reduces to grouped RTN."""
+    Wt, _ = _data(n=16, k=64, seed=12)
+    H = jnp.eye(64)
+    wq, _ = gptq_solve_refresh(Wt, H, bits=3, group_size=16, percdamp=0.0)
+    wq_rtn, _ = quantize_rtn(Wt, 3, group_size=16)
+    np.testing.assert_allclose(np.asarray(wq), np.asarray(wq_rtn), atol=1e-4)
+
+
+def test_gptq_refresh_tracks_compensated_residual():
+    """On correlated data the refreshed grids see the compensated
+    residuals; the result must still beat plain grouped RTN on output
+    error (the whole point of the GPTQ sweep)."""
+    Wt, H = _data(seed=13)
+    wq, _ = gptq_solve_refresh(Wt, H, bits=3, group_size=16)
+    wq_rtn, _ = quantize_rtn(Wt, 3, group_size=16)
+    assert output_error(Wt, wq, H) < output_error(Wt, wq_rtn, H)
+
+
+def test_grouped_bcq_shapes_and_error():
+    Wt, _ = _data(n=16, k=64, seed=14)
+    wq1, a1, s1 = bcq_alternating(Wt, 3)
+    wq4, a4, s4 = bcq_alternating(Wt, 3, group_size=16)
+    assert a1.shape == (16, 3) and a4.shape == (16, 4, 3)
+    assert s4.shape == (3, 16, 64)
+    # 4x the scale freedom must not hurt the fit
+    assert float(jnp.sum((wq4 - Wt) ** 2)) <= \
+        float(jnp.sum((wq1 - Wt) ** 2)) + 1e-5
+
+
+def test_gptqt_grouped_beats_per_channel():
+    """Acceptance: gptqt with groups achieves strictly lower
+    reconstruction error than G=1 on the synthetic-Hessian fixture."""
+    Wt, H = _data(seed=4)
+    r1 = gptqt_quantize(Wt, H, bits=3, intermediate_bits=5)
+    rg = gptqt_quantize(Wt, H, bits=3, intermediate_bits=5, group_size=16)
+    assert output_error(Wt, rg.wq_t, H) < output_error(Wt, r1.wq_t, H)
+
+
+def test_gptqt_grouped_fusion_is_exact():
+    """Eq. 11 fusion with true G scale leaves: packed dequant must equal
+    the solver output bit-for-bit, and the QT must carry G = K/gs."""
+    Wt, H = _data(seed=5)
+    rg = gptqt_quantize(Wt, H, bits=3, intermediate_bits=5, group_size=32)
+    assert rg.qt.n_groups == 2 and rg.qt.group_size == 32
+    assert rg.qt.alphas.shape == (2, Wt.shape[0], 3)
+    dq = rg.qt.dequant(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dq.T), np.asarray(rg.wq_t))
+    # per-(row, group) level sets are binary-coding trees
+    combos = jnp.asarray(sign_combos(3))
+    want = rg.qt.betas[..., None] + jnp.einsum(
+        "gnk,lk->gnl", rg.qt.alphas, combos)             # (G, N, L)
+    np.testing.assert_allclose(np.asarray(jnp.swapaxes(want, 0, 1)),
+                               np.asarray(rg.levels), rtol=1e-6)
+
+
+def test_gptqt_grouped_quantized_matmul_matches_dequant():
+    """The serving path: grouped QT matmul (reference dispatch) must
+    agree with explicit dequant @ x."""
+    Wt, H = _data(seed=15)
+    rg = gptqt_quantize(Wt, H, bits=2, intermediate_bits=4, group_size=16)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (5, Wt.shape[1])).astype(np.float32))
+    y = rg.qt.quantized_matmul(x)
+    w = rg.qt.dequant(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gptqt_nondivisible_group_size_raises():
+    Wt, H = _data(n=8, k=64)
+    with pytest.raises(ValueError, match="divide"):
+        gptqt_quantize(Wt, H, bits=2, intermediate_bits=4, group_size=48)
 
 
 @given(st.integers(0, 2))
