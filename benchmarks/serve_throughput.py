@@ -144,6 +144,33 @@ def main() -> None:
              f"cow={shared['cow_forks']};pages_hw={shared['pages_hw']}/"
              f"{base['pages_hw']}")
 
+    # sharded serving: paged engine over a (data, 1) mesh when the host
+    # exposes >1 device (launch with XLA_FLAGS=
+    # --xla_force_host_platform_device_count=2 to exercise on CPU) —
+    # measures the mesh-partitioned pool + shared compile cache path
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve import ServeEngine
+        mesh = make_serve_mesh(data=2, model=1)
+        for c in (4, 8):
+            eng = ServeEngine(cfg, params, batch_size=c, max_len=MAX_LEN,
+                              dtype="float32", cache_kind="paged",
+                              page_size=PAGE, mesh=mesh)
+            reqs = _requests(cfg.vocab_size, c)
+            t0 = time.time()
+            eng.run(reqs)
+            s = eng.stats
+            emit(f"serve_sharded_d2_c{c}",
+                 1e6 * s["decode_s"] / max(s["tokens"], 1),
+                 f"tok_s={s['tokens'] / max(s['decode_s'], 1e-9):.1f};"
+                 f"wall_s={time.time() - t0:.2f};"
+                 f"shards={eng.kv.n_shards};"
+                 f"pages_per_shard={eng.kv.pages_per_shard}")
+    else:
+        print("# sharded scenario skipped: 1 device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=2)")
+
 
 if __name__ == "__main__":
     main()

@@ -7,10 +7,31 @@ Layout:  <dir>/arrays.npz + manifest.json + COMMITTED
 
 The manifest mirrors the (nested-dict) param tree; each leaf entry is
 either {"kind": "array", "key", "dtype"} or {"kind": "qt", codes/alphas/
-betas keys + k_in + orig_dtype}, where keys index arrays.npz. Arrays are
-stored verbatim (codes are uint32 bitplanes, alphas/betas fp32, dense
-leaves at their own dtype), so a save -> load round trip is bit-exact —
-the round-trip test serves both trees and checks token-identical output.
+betas keys + k_in + orig_dtype + groups/group_size}, where keys index
+arrays.npz. Arrays are stored verbatim (codes are uint32 bitplanes,
+alphas/betas fp32 — or bf16 bits under `scale_dtype="bfloat16"` —
+dense leaves at their own dtype), so a save -> load round trip is
+bit-exact at the stored precision — the round-trip test serves both
+trees and checks token-identical output.
+
+Format history (manifest["format_version"], loaders accept <= current):
+  v1 (PR 3)  — tree + arrays + spec; per-channel scales only.
+  v2 (PR 4)  — qt leaves record groups/group_size (G-axis scales).
+  v3 (this)  — "sharding" block (symbolic mesh axes) + per-leaf
+               symbolic PartitionSpecs, so `load_packed(mesh=...)`
+               places every leaf straight onto a jax.sharding mesh with
+               no host-side full-tree materialization; optional
+               `scale_dtype="bfloat16"` halves alpha/beta bytes
+               (manifest-flagged; fp32 artifacts load unchanged).
+
+Sharding metadata is *symbolic* — axis names from dist.sharding's rules
+with no sizes — so one artifact serves any mesh shape: at load the spec
+is re-guarded against the real mesh (`guard_pspec` drops an axis when
+the dim doesn't divide it) and, by default, the "data" axis is dropped
+from weight leaves (serving replicates weights across data-parallel
+shards; pass fsdp=True to keep FSDP-style K-dim sharding). v1/v2
+artifacts carry no specs: with a mesh they load replicated, with a
+one-time warning.
 
 Crash-safety follows repro.ckpt.checkpoint: everything is written into
 <dir>.tmp, atomically renamed, and a fsynced COMMITTED marker lands
@@ -25,23 +46,36 @@ import shutil
 import warnings
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.quant.qlinear import QuantizedTensor
 from repro.quant.spec import QuantSpec
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
+SCALE_DTYPES = (None, "float32", "bfloat16")
 
 # one warning per process for legacy per-channel artifacts loaded under
 # a spec that asks for group-wise scales
 _WARNED_LEGACY_GROUPS = False
+# one warning per process for pre-v3 artifacts loaded onto a mesh
+_WARNED_NO_PSPEC = False
 
 
-def _encode(tree, arrays: dict):
+def _symbolic_spec(names, leaf):
+    """The leaf's symbolic PartitionSpec (JSON-safe) under the shared
+    GSPMD rules — size-free, guarded against the real mesh at load."""
+    from repro.dist.sharding import named_pspec, pspec_to_json, symbolic_mesh
+    return pspec_to_json(named_pspec(None, list(names), leaf,
+                                     symbolic_mesh()))
+
+
+def _encode(tree, arrays: dict, path=(), scale_dtype=None):
     """Nested dict tree -> manifest node; arrays collected by key."""
     if isinstance(tree, dict):
-        return {k: _encode(v, arrays) for k, v in tree.items()}
+        return {k: _encode(v, arrays, path + (k,), scale_dtype)
+                for k, v in tree.items()}
     if isinstance(tree, QuantizedTensor):
         ent = {"kind": "qt", "k_in": tree.k_in,
                "orig_dtype": tree.orig_dtype,
@@ -49,10 +83,24 @@ def _encode(tree, arrays: dict):
                # just implied by array shapes) so readers can reason
                # about grouping without touching arrays.npz
                "groups": int(tree.n_groups),
-               "group_size": int(tree.group_size)}
+               "group_size": int(tree.group_size),
+               "pspec": {f: _symbolic_spec(path + ("." + f,),
+                                           getattr(tree, f))
+                         for f in ("codes", "alphas", "betas")}}
         for field in ("codes", "alphas", "betas"):
             key = f"a{len(arrays)}"
-            arrays[key] = np.asarray(getattr(tree, field))
+            arr = np.asarray(getattr(tree, field))
+            if field != "codes" and (scale_dtype == "bfloat16"
+                                     or str(arr.dtype) == "bfloat16"):
+                # halve the G-axis scale bytes: store bf16 bits (npz has
+                # no bfloat16 and would degrade it to a void dtype),
+                # flag it, round-trip through a view. Scales that are
+                # ALREADY bf16 (e.g. via cast_scales) take this path
+                # unconditionally — storing them verbatim would commit
+                # an artifact load_packed cannot read.
+                arr = arr.astype(jnp.bfloat16).view(np.uint16)
+                ent["scale_dtype"] = "bfloat16"
+            arrays[key] = arr
             ent[field] = key
         return ent
     key = f"a{len(arrays)}"
@@ -60,32 +108,74 @@ def _encode(tree, arrays: dict):
     dt = str(arr.dtype)
     # npz has no bfloat16: store the raw bits, restore via view on load
     arrays[key] = arr.view(np.uint16) if dt == "bfloat16" else arr
-    return {"kind": "array", "key": key, "dtype": dt}
+    return {"kind": "array", "key": key, "dtype": dt,
+            "pspec": _symbolic_spec(path, tree)}
 
 
-def _decode(node, arrays):
+class _Placer:
+    """Per-leaf device placement: with a mesh, each array goes straight
+    from the (lazily-read) npz member onto its guarded NamedSharding —
+    at no point is a fully-materialized host tree plus a device tree
+    alive together. Without a mesh this is a plain jnp.asarray."""
+
+    def __init__(self, mesh, fsdp: bool):
+        self.mesh = mesh
+        self.fsdp = fsdp
+
+    def __call__(self, arr, pspec_json):
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding
+        from repro.dist.sharding import (drop_axes, guard_pspec,
+                                         pspec_from_json)
+        from jax.sharding import PartitionSpec as P
+        spec = pspec_from_json(pspec_json) if pspec_json is not None else P()
+        if not self.fsdp:
+            spec = drop_axes(spec, ("data",))
+        spec = guard_pspec(np.shape(arr), spec, self.mesh)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+
+def _decode(node, arrays, place: _Placer):
     if "kind" not in node or not isinstance(node.get("kind"), str):
-        return {k: _decode(v, arrays) for k, v in node.items()}
+        return {k: _decode(v, arrays, place) for k, v in node.items()}
+    pspec = node.get("pspec")
     if node["kind"] == "qt":
-        alphas = jnp.asarray(arrays[node["alphas"]])
+        def scales(field):
+            a = arrays[node[field]]
+            if node.get("scale_dtype") == "bfloat16":
+                # fp32 load path kept: bf16-stored scales rehydrate to
+                # fp32 values (rounded once at save)
+                a = np.asarray(a).view(jnp.bfloat16).astype(np.float32)
+            return place(a, pspec[field] if pspec else None)
+        alphas = scales("alphas")
         if "groups" in node and alphas.shape[-3] != node["groups"]:
             raise ValueError(
                 f"corrupt packed artifact: manifest says {node['groups']} "
                 f"scale groups but alphas have shape {alphas.shape}")
         return QuantizedTensor(
-            codes=jnp.asarray(arrays[node["codes"]]),
+            codes=place(arrays[node["codes"]],
+                        pspec["codes"] if pspec else None),
             alphas=alphas,
-            betas=jnp.asarray(arrays[node["betas"]]),
+            betas=scales("betas"),
             k_in=node["k_in"], orig_dtype=node["orig_dtype"])
-    arr = jnp.asarray(arrays[node["key"]])
+    arr = arrays[node["key"]]
     if node["dtype"] == "bfloat16":
-        arr = arr.view(jnp.bfloat16)
-    return arr
+        arr = np.asarray(arr).view(jnp.bfloat16)
+    return place(arr, pspec)
 
 
 def save_packed(directory, params, *, spec: QuantSpec | None = None,
-                meta: dict | None = None) -> Path:
-    """Write a packed model artifact; returns the final directory."""
+                meta: dict | None = None, scale_dtype: str | None = None
+                ) -> Path:
+    """Write a packed model artifact; returns the final directory.
+    `scale_dtype="bfloat16"` stores QuantizedTensor alphas/betas as
+    bf16 (half the G-axis scale bytes; values round once — parity is
+    within bf16 epsilon of the fp32 artifact)."""
+    if scale_dtype not in SCALE_DTYPES:
+        raise ValueError(f"scale_dtype={scale_dtype!r}; "
+                         f"expected one of {SCALE_DTYPES}")
+    from repro.dist.sharding import SYMBOLIC_AXES
     final = Path(directory)
     tmp = final.with_name(final.name + ".tmp")
     if tmp.exists():
@@ -96,7 +186,13 @@ def save_packed(directory, params, *, spec: QuantSpec | None = None,
         "format_version": FORMAT_VERSION,
         "spec": spec.to_dict() if spec is not None else None,
         "meta": meta or {},
-        "tree": _encode(params, arrays),
+        # symbolic axes the per-leaf pspecs refer to; sizes are a load-
+        # time property of the real mesh, never baked into the artifact
+        "sharding": {"axes": list(SYMBOLIC_AXES),
+                     "rule": "repro.dist.sharding.named_pspec"},
+        "tree": _encode(params, arrays,
+                        scale_dtype=None if scale_dtype == "float32"
+                        else scale_dtype),
     }
     np.savez(tmp / "arrays.npz", **arrays)
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
@@ -111,9 +207,18 @@ def save_packed(directory, params, *, spec: QuantSpec | None = None,
     return final
 
 
-def load_packed(directory):
+def load_packed(directory, *, mesh=None, fsdp: bool = False):
     """-> (params tree, QuantSpec or None, meta dict). Bit-exact inverse
-    of save_packed; refuses uncommitted (crashed mid-save) artifacts."""
+    of save_packed (at the stored scale precision); refuses uncommitted
+    (crashed mid-save) artifacts.
+
+    With `mesh`, every leaf is placed directly onto its manifest-
+    recorded PartitionSpec, guarded against the real mesh — codes,
+    alphas and G-axis scale leaves land sharded without a host-side
+    gather of the full tree. `fsdp=False` (default) drops the "data"
+    axis from weight specs (serving replicates weights over the
+    data-parallel shards); `fsdp=True` keeps it (memory-tight boots).
+    """
     d = Path(directory)
     if not (d / "COMMITTED").exists():
         raise FileNotFoundError(
@@ -123,12 +228,30 @@ def load_packed(directory):
         raise ValueError(
             f"packed artifact format {manifest['format_version']} is newer "
             f"than this code ({FORMAT_VERSION})")
-    arrays = dict(np.load(d / "arrays.npz"))
-    params = _decode(manifest["tree"], arrays)
+    if mesh is not None and manifest["format_version"] < 3:
+        _warn_no_pspec(d, manifest["format_version"])
+    # npz members are read lazily, one leaf at a time, as _decode places
+    # them — no dict(np.load(...)) bulk materialization
+    arrays = np.load(d / "arrays.npz")
+    params = _decode(manifest["tree"], arrays, _Placer(mesh, fsdp))
     spec = (QuantSpec.from_dict(manifest["spec"])
             if manifest.get("spec") else None)
     _warn_legacy_groups(d, params, spec)
     return params, spec, manifest.get("meta", {})
+
+
+def _warn_no_pspec(d, version) -> None:
+    """One-time warning: a pre-v3 artifact has no per-leaf specs, so a
+    mesh load can only replicate every leaf."""
+    global _WARNED_NO_PSPEC
+    if _WARNED_NO_PSPEC:
+        return
+    _WARNED_NO_PSPEC = True
+    warnings.warn(
+        f"packed artifact {d} is format v{version} (pre-sharding-"
+        f"metadata): leaves will be REPLICATED onto the mesh; re-save "
+        f"with this code to record per-leaf PartitionSpecs",
+        UserWarning, stacklevel=3)
 
 
 def _warn_legacy_groups(d, params, spec) -> None:
@@ -139,7 +262,6 @@ def _warn_legacy_groups(d, params, spec) -> None:
     global _WARNED_LEGACY_GROUPS
     if _WARNED_LEGACY_GROUPS or spec is None or spec.group_size <= 0:
         return
-    import jax
     legacy = [
         leaf for leaf in jax.tree.leaves(
             params, is_leaf=lambda x: isinstance(x, QuantizedTensor))

@@ -45,10 +45,15 @@ def _is_matmul(name: str) -> bool:
 # mesh helpers
 # --------------------------------------------------------------------------
 
-def _axis_sizes(mesh) -> dict:
-    """Works for jax.sharding.Mesh AND shape-only stand-ins that expose
-    .axis_names and .devices (tests use a FakeMesh)."""
+def mesh_axis_sizes(mesh) -> dict:
+    """axis name -> size. Works for jax.sharding.Mesh AND shape-only
+    stand-ins that expose .axis_names and .devices (tests use a
+    FakeMesh). THE one derivation — engine/launcher shard counts must
+    not re-zip this themselves."""
     return dict(zip(tuple(mesh.axis_names), np.shape(mesh.devices)))
+
+
+_axis_sizes = mesh_axis_sizes
 
 
 def _div(n: int, axis, sizes) -> bool:
@@ -97,8 +102,15 @@ def _path_names(path):
 
 def param_pspec(cfg, path, leaf, mesh, *, fsdp: bool = True) -> P:
     """Sharding rule for one parameter leaf. `path` is a jax key path."""
+    return named_pspec(cfg, _path_names(path), leaf, mesh, fsdp=fsdp)
+
+
+def named_pspec(cfg, names, leaf, mesh, *, fsdp: bool = True) -> P:
+    """param_pspec over plain string path components — the manifest
+    writer (ckpt/packed.py) walks a nested dict and has no jax key
+    paths. QuantizedTensor children are addressed by appending
+    ".codes"/".alphas"/".betas" to the weight's path."""
     sizes = _axis_sizes(mesh)
-    names = _path_names(path)
     name = names[-1]
     shape = tuple(leaf.shape)
     data_ax = "data" if (fsdp and "data" in sizes) else None
@@ -252,3 +264,72 @@ def last_logits_sharding(cfg, mesh, batch: int):
     v_ax = "model" if ("model" in sizes
                        and cfg.vocab_size % sizes["model"] == 0) else None
     return NamedSharding(mesh, batch_pspec(mesh, batch, (v_ax,)))
+
+
+# --------------------------------------------------------------------------
+# symbolic specs (packed-artifact manifests)
+# --------------------------------------------------------------------------
+# A packed artifact records each leaf's *symbolic* PartitionSpec — axis
+# names without sizes — so any later mesh can place the leaf directly
+# (ckpt/packed.py). The symbolic mesh below has size-1 axes, which makes
+# the divisibility guard in the rules above vacuous: the rule's full
+# intent survives into the manifest, and `guard_pspec` re-applies the
+# guard against the real mesh at load time.
+
+SYMBOLIC_AXES = ("data", "model")
+
+
+class _SymbolicMesh:
+    def __init__(self, axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.empty((1,) * len(self.axis_names))
+
+
+def symbolic_mesh(axes=SYMBOLIC_AXES):
+    """Shape-only stand-in whose every axis divides everything — rules
+    evaluated against it return the unguarded symbolic spec."""
+    return _SymbolicMesh(axes)
+
+
+def pspec_to_json(spec) -> list:
+    """PartitionSpec -> JSON-safe list (entries: None | str | [str])."""
+    return [list(a) if isinstance(a, tuple) else a for a in tuple(spec)]
+
+
+def pspec_from_json(entries) -> P:
+    return P(*[tuple(a) if isinstance(a, list) else a for a in entries])
+
+
+def drop_axes(spec, axes) -> P:
+    """Remove the named mesh axes from a spec (replicating those dims):
+    serving loads drop "data" by default — weights replicate over the
+    data-parallel shards, FSDP-style gathering is a training concern."""
+    axes = set(axes)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            left = tuple(a for a in entry if a not in axes)
+            return left if len(left) > 1 else (left[0] if left else None)
+        return None if entry in axes else entry
+    return P(*[keep(a) for a in tuple(spec)])
+
+
+def guard_pspec(shape, spec, mesh) -> P:
+    """Re-apply the divisibility guard of a symbolic spec against a
+    real mesh: an axis is dropped (dim replicated) when the mesh lacks
+    it or the dim does not divide its size. Short specs are padded with
+    None to the leaf's rank."""
+    sizes = _axis_sizes(mesh)
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+
+    def ok(dim, ax):
+        if ax is None:
+            return True
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in sizes for a in axes):
+            return False
+        return _div(dim, ax, sizes)
+
+    return P(*[a if ok(d, a) else None for d, a in zip(shape, entries)])

@@ -16,3 +16,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-process CPU mesh for tests/examples (1 device)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serve_mesh(*, data: int | None = None, model: int = 1):
+    """Serving mesh over the visible devices: `data` page-pool shards
+    (each holding an equal block of the paged-KV pool and an equal
+    slice of the batch) x `model` tensor-parallel ways. Defaults to all
+    devices on the data axis. Pair with `XLA_FLAGS=
+    --xla_force_host_platform_device_count=N` (or `launch.serve
+    --devices N`) to rehearse multi-device serving on CPU."""
+    n = len(jax.devices())
+    if data is None:
+        data = max(n // model, 1)
+    if data * model > n:
+        raise ValueError(f"mesh {data}x{model} needs {data * model} "
+                         f"devices, only {n} visible")
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -10,10 +10,17 @@ so a relaunch boots without re-running calibration or the GPTQ solves:
   # every later launch: skip calibration/GPTQ entirely
   PYTHONPATH=src python -m repro.launch.serve \\
       --load-quantized artifacts/packed/tiny-w3 --requests 6
+
+  # sharded serving: the packed artifact loads straight onto a 2-way
+  # data mesh (per-leaf PartitionSpecs from the v3 manifest) and the
+  # paged page pool is partitioned over the same axis
+  PYTHONPATH=src python -m repro.launch.serve --devices 2 --mesh 2,1 \\
+      --load-quantized artifacts/packed/tiny-w3 --requests 6
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -21,6 +28,16 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host (CPU) devices via XLA_FLAGS — a "
+                         "laptop-scale stand-in for a real multi-chip "
+                         "mesh (must be set before jax initializes, so "
+                         "it is a launcher flag)")
+    ap.add_argument("--mesh", default=None, metavar="D,M",
+                    help="serve over a (data, model) mesh, e.g. 2,1: "
+                         "the paged KV pool shards its pages over the "
+                         "data axis and --load-quantized places packed "
+                         "leaves onto the mesh directly")
     ap.add_argument("--quant", type=int, default=0,
                     help="quantization bits (0 = dense)")
     ap.add_argument("--method", default=None,
@@ -46,9 +63,23 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     args = ap.parse_args()
 
+    if args.devices:
+        # must land before the first jax import anywhere below
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
     from repro.configs import get_config
     from repro.data import ByteTokenizer
     from repro.serve import Request, ServeEngine
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        d, m = (int(x) for x in args.mesh.replace("x", ",").split(","))
+        mesh = make_serve_mesh(data=d, model=m)
+        print(f"serving over mesh data={d} model={m}")
 
     tok = ByteTokenizer()
     if args.suggest_overrides:
@@ -80,7 +111,7 @@ def main():
                      "--group-size/--method (re-quantize and re-save to "
                      "change them)")
         from repro.ckpt.packed import load_packed
-        params, spec, meta = load_packed(args.load_quantized)
+        params, spec, meta = load_packed(args.load_quantized, mesh=mesh)
         arch = meta.get("arch", args.arch)
         # mirror get_trained_lm's config construction; all weights come
         # from the artifact, so no training or calibration happens here
@@ -114,8 +145,25 @@ def main():
         elif args.save_quantized:
             ap.error("--save-quantized requires --quant")
 
-    eng = ServeEngine(cfg, params, batch_size=args.batch_size,
-                      max_len=160, dtype="float32")
+    batch = args.batch_size
+    if mesh is not None:
+        # every page-pool shard serves an equal slice of the batch
+        from repro.dist.sharding import mesh_axis_sizes
+        d = int(mesh_axis_sizes(mesh).get("data", 1))
+        if batch % d:
+            batch = -(-batch // d) * d
+            print(f"batch_size rounded {args.batch_size} -> {batch} "
+                  f"(must split over {d} data shards)")
+    eng = ServeEngine(cfg, params, batch_size=batch,
+                      max_len=160, dtype="float32",
+                      cache_kind="paged" if mesh is not None else "dense",
+                      mesh=mesh)
+    if mesh is not None:
+        kv = eng.kv
+        print(f"sharded page pool: {kv.n_shards} shards x "
+              f"{kv.pages_per_shard} pages "
+              f"({kv.usable_in_shard(0)} usable + 1 reserve each, "
+              f"page_size={kv.page_size})")
     seeds = ["the ancient city", "a famous museum", "this railway",
              "the council", "another region", "the early dynasty"]
     reqs = [Request(prompt=tok.encode(seeds[i % len(seeds)]),

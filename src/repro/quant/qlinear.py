@@ -103,9 +103,27 @@ class QuantizedTensor:
     def ndim(self):
         return len(self.shape)
 
+    @property
+    def scale_dtype(self):
+        """dtype of the alpha/beta scale leaves (fp32 by default; packed
+        artifacts may round them through bf16 — ckpt/packed.py)."""
+        return str(jnp.dtype(self.alphas.dtype))
+
     def packed_bytes(self):
         return sum(a.size * a.dtype.itemsize
                    for a in (self.codes, self.alphas, self.betas))
+
+    def cast_scales(self, dtype):
+        """New QuantizedTensor with alphas/betas cast to `dtype` (codes
+        are integer bitplanes and never cast). Casting fp32 -> bf16 ->
+        fp32 reproduces exactly what a `scale_dtype="bfloat16"` packed
+        artifact round-trips, so parity tests build their reference
+        through this."""
+        return QuantizedTensor(
+            codes=self.codes,
+            alphas=jnp.asarray(self.alphas, dtype),
+            betas=jnp.asarray(self.betas, dtype),
+            k_in=self.k_in, orig_dtype=self.orig_dtype)
 
     # ---- numerics ----
     def dequant(self, dtype=None):

@@ -22,9 +22,23 @@ per leaf, so the engine is representation-agnostic.
 Prompt lengths are padded to power-of-two buckets before the jitted
 prefill (attention-only, no-window configs), so admission compiles once
 per bucket instead of once per distinct prompt length.
+
+Sharded serving: pass `mesh=` (a jax.sharding.Mesh with a "data" axis,
+see launch/mesh.py:make_serve_mesh) and the engine becomes mesh-native
+— the paged page pool is partitioned over the data axis (per-shard
+allocator, serve/kv_cache.py), the device pool and block-table mirror
+are placed with dist.sharding's cache rules, and the decode/extend
+steps run under the mesh context so batch activations stay anchored to
+the data axis. Model-axis tensor parallelism composes through the
+params' own shardings (ckpt/packed.py:load_packed(mesh=...) places a
+packed artifact straight onto the mesh). All jitted step wrappers are
+borrowed from the process-wide serve/compile_cache.py, so N engines —
+or N restarts of the serving loop — share one warmup per (config,
+mesh).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 
@@ -32,9 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import (copy_pages, decode_step, decode_step_paged,
-                                extend_paged, init_cache, prefill,
-                                scatter_prefill_cache)
+from repro.models.model import init_cache
+from repro.serve import compile_cache
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.scheduler import Scheduler
 
@@ -69,7 +82,10 @@ class Request:
 
 class DenseSlotPool:
     """Slot accounting shim so the Scheduler drives the dense engine
-    too: one fixed max_len 'page' per sequence."""
+    too: one fixed max_len 'page' per sequence, and a trivial single
+    shard for the scheduler's shard protocol."""
+
+    n_shards = 1
 
     def __init__(self, n_slots: int, max_len: int):
         self.max_seqs = n_slots
@@ -89,7 +105,20 @@ class DenseSlotPool:
     def used_pages(self) -> int:
         return int(self._active.sum())
 
-    def alloc_slot(self):
+    # shard protocol (one trivial shard)
+    def shard_of_slot(self, slot: int) -> int:
+        return 0
+
+    def pick_shard(self):
+        return 0 if self.free_page_count else None
+
+    def free_in_shard(self, shard: int) -> int:
+        return self.free_page_count
+
+    def usable_in_shard(self, shard: int) -> int:
+        return self.usable_pages
+
+    def alloc_slot(self, shard=None):
         for i in range(self.max_seqs):
             if not self._active[i]:
                 self._active[i] = True
@@ -115,7 +144,7 @@ class ServeEngine:
                  dtype=None, greedy=True, cache_kind="dense",
                  page_size=64, n_pages=None, prefill_chunk=None,
                  bucket_prompts=True, watermark=1, prefix_sharing=True,
-                 prefix_max_pages=None):
+                 prefix_max_pages=None, mesh=None):
         assert cache_kind in ("dense", "paged"), cache_kind
         if cache_kind == "paged" and cfg.mla is not None:
             raise NotImplementedError(
@@ -128,6 +157,21 @@ class ServeEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.cache_kind = cache_kind
+        self.mesh = mesh
+        # pool shards = the mesh's data-axis size: page blocks land on
+        # the same devices as the batch rows whose sequences use them
+        data_shards = 1
+        if mesh is not None:
+            from repro.dist.sharding import mesh_axis_sizes
+            data_shards = int(mesh_axis_sizes(mesh).get("data", 1))
+        n_shards = 1
+        if cache_kind == "paged" and data_shards > 1:
+            if batch_size % data_shards:
+                raise ValueError(
+                    f"batch_size={batch_size} must divide over the "
+                    f"{data_shards}-way data axis so every sequence "
+                    f"slot maps to exactly one page-pool shard")
+            n_shards = data_shards
         dtype = dtype or cfg.dtype
 
         attn_only = (cfg.mla is None
@@ -152,13 +196,17 @@ class ServeEngine:
                     "needs an attention-only pattern")
             pages_per_seq = -(-max_len // page_size)
             if n_pages is None:
-                # parity with the dense engine's byte budget, + null page
-                n_pages = batch_size * pages_per_seq + 1
+                # parity with the dense engine's byte budget, + one
+                # reserve (null) page per shard
+                n_pages = batch_size * pages_per_seq + n_shards
+            # the page axis must split evenly over the shards (it is
+            # the GSPMD-partitioned dim of the pool)
+            n_pages = -(-n_pages // n_shards) * n_shards
             self.kv = PagedKVCache(cfg, n_pages=n_pages,
                                    page_size=page_size,
                                    max_seqs=batch_size,
                                    max_pages_per_seq=pages_per_seq,
-                                   dtype=dtype)
+                                   dtype=dtype, n_shards=n_shards)
             self.page_size = page_size
             # prefix sharing skips matched prefill via the extend path,
             # so it has the same attention-only requirement
@@ -171,36 +219,43 @@ class ServeEngine:
             # when the allocator bumps their version (admission, growth,
             # COW, release) instead of re-uploading the whole table per
             # decode tick; the per-tick traffic is just the (B,) live
-            # mask that routes inactive rows to the null page
+            # mask that routes inactive rows to their shard's null page
             self._bt_dev = jnp.zeros((batch_size, pages_per_seq), jnp.int32)
             self._bt_applied = np.full((batch_size,), -1, np.int64)
-            self._bt_update = jax.jit(
-                lambda bt, idx, rows: bt.at[idx].set(rows),
-                donate_argnums=(0,))
-            self._decode = jax.jit(
-                lambda p, c, t, s, bt, live: decode_step_paged(
-                    cfg, p, c, t, s, bt * live[:, None]),
-                donate_argnums=(1,))
-            self._scatter = jax.jit(
-                lambda c, r, sl, pi, nv: scatter_prefill_cache(
-                    cfg, c, r, sl, pi, nv),
-                donate_argnums=(0,))
-            self._extend = jax.jit(
-                lambda p, c, t, sp, bt, nv: extend_paged(cfg, p, c, t, sp,
-                                                         bt, nv),
-                donate_argnums=(1,))
-            self._copy = jax.jit(
-                lambda c, s, d: copy_pages(c, s, d, n_pages),
-                donate_argnums=(0,))
+            # per-slot null-page row: all zeros unsharded; shard s's
+            # reserve page for slots living on shard s
+            self._null_row = jnp.asarray(
+                [self.kv.null_page_of_shard(self.kv.shard_of_slot(s))
+                 for s in range(batch_size)], jnp.int32)
+            self._bt_update = compile_cache.get("bt_update", None, mesh)
+            self._decode = compile_cache.get("decode_paged", cfg, mesh)
+            self._scatter = compile_cache.get("scatter_prefill", cfg,
+                                              mesh)
+            self._extend = compile_cache.get("extend_paged", cfg, mesh)
+            self._copy = compile_cache.get("copy_pages", None, mesh)
         else:
             if prefill_chunk:
                 raise NotImplementedError(
                     "chunked prefill requires cache_kind='paged'")
             self.kv = DenseSlotPool(batch_size, max_len)
             self.cache = init_cache(cfg, batch_size, max_len, dtype)
-            self._decode = jax.jit(
-                lambda p, c, t, s: decode_step(cfg, p, c, t, s),
-                donate_argnums=(1,))
+            self._decode = compile_cache.get("decode_dense", cfg, mesh)
+        if mesh is not None:
+            # place the cache (page pools / dense slabs, block-table
+            # mirror) onto the mesh with the shared GSPMD cache rules:
+            # pages and batch rows ride the data axis, KV heads the
+            # model axis when divisible
+            from repro.dist.sharding import batch_pspec, cache_shardings
+            from jax.sharding import NamedSharding
+            self.cache = jax.device_put(
+                self.cache, cache_shardings(cfg, self.cache, mesh))
+            if cache_kind == "paged":
+                row = NamedSharding(mesh, batch_pspec(mesh, batch_size))
+                self._bt_dev = jax.device_put(self._bt_dev, row)
+                self._null_row = jax.device_put(
+                    self._null_row,
+                    NamedSharding(mesh, batch_pspec(mesh, batch_size,
+                                                    ())))
 
         self.prefill_chunk = prefill_chunk
         self.sched = Scheduler(
@@ -208,12 +263,19 @@ class ServeEngine:
             prefill_chunk=prefill_chunk, prefix=self._prefix)
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
-        self._prefill = jax.jit(
-            lambda p, t, lp, ml: prefill(cfg, p, t, ml, last_pos=lp),
-            static_argnums=(3,))
+        self._prefill = compile_cache.get("prefill", cfg, mesh)
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "ticks": 0, "prefill_tokens": 0}
         self._entries = []
+
+    def _mesh_ctx(self):
+        """The engine's mesh context (no-op single-device): every jitted
+        step is traced inside it so constrain_batch anchors activations
+        to the data axis."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.dist.context import mesh_context
+        return mesh_context(self.mesh)
 
     # ---------------- COW fork application ----------------
     def _apply_copies(self, copies) -> None:
@@ -227,7 +289,8 @@ class ServeEngine:
         dst = [d for _, d in padded]
         self.cache = self._copy(self.cache,
                                 jnp.asarray(src, jnp.int32),
-                                jnp.asarray(dst, jnp.int32))
+                                jnp.asarray(dst, jnp.int32),
+                                self.kv.n_pages)
 
     # ---------------- device block-table mirror ----------------
     def _sync_block_tables(self) -> None:
@@ -448,7 +511,8 @@ class ServeEngine:
             live[ready] = 1         # masked rows write to the null page
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos, self._bt_dev,
-                                              jnp.asarray(live))
+                                              jnp.asarray(live),
+                                              self._null_row)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               toks, pos)
@@ -471,11 +535,13 @@ class ServeEngine:
     # ---------------- engine ----------------
     def _seq_cap(self) -> int:
         """Per-sequence token capacity: max_len, further bounded by what
-        the page pool can ever hold for one sequence — sequences truncate
-        here (like dense at max_len) instead of outgrowing the pool."""
+        one page-pool shard can ever hold for one sequence — sequences
+        truncate here (like dense at max_len) instead of outgrowing the
+        pool (a sequence's pages all come from its slot's shard)."""
         if self.cache_kind == "dense":
             return self.max_len
-        return min(self.max_len, self.kv.usable_pages * self.page_size)
+        return min(self.max_len,
+                   self.kv.usable_in_shard(0) * self.page_size)
 
     def run(self, requests: list[Request]):
         cap = self._seq_cap()
@@ -491,22 +557,23 @@ class ServeEngine:
                 # counted as zero — it is best-effort), so an unservable
                 # request is rejected here instead of crashing mid-run
                 need = self.sched.admission_need(len(r.prompt))
-                if need > self.kv.usable_pages:
+                if need > self.kv.usable_in_shard(0):
                     raise ValueError(
                         f"prompt of {len(r.prompt)} tokens needs {need} "
-                        f"pages (incl. watermark) but the pool only has "
-                        f"{self.kv.usable_pages}")
+                        f"pages (incl. watermark) but a pool shard only "
+                        f"has {self.kv.usable_in_shard(0)}")
         for r in requests:
             self.sched.submit(r)
         self._entries = list(self.sched.waiting)
-        while self.sched.has_work():
-            while True:
-                e = self.sched.try_admit()
-                if e is None:
-                    break
-                self._admit(e)
-            if self.cache_kind == "paged" and self.prefill_chunk:
-                self._prefill_tick()
-            self._decode_tick()
+        with self._mesh_ctx():
+            while self.sched.has_work():
+                while True:
+                    e = self.sched.try_admit()
+                    if e is None:
+                        break
+                    self._admit(e)
+                if self.cache_kind == "paged" and self.prefill_chunk:
+                    self._prefill_tick()
+                self._decode_tick()
         self.stats.update(self.sched.metrics_summary(self._entries))
         return requests

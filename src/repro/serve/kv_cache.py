@@ -10,6 +10,22 @@ Layout:
     slot, entry = page id (0 for unused slots, which is always a valid
     DMA target for the Pallas kernel).
 
+Sharding (`n_shards > 1`): the pool's page axis is partitioned into
+`n_shards` equal contiguous blocks matching the GSPMD layout of the
+device pool under `dist.sharding.cache_pspec` (pages on the "data"
+axis shard the leading page blocks onto consecutive devices), and the
+sequence slots are partitioned the same way (slot s lives on shard
+`s // (max_seqs / n_shards)`, matching the batch-on-data layout of the
+decode step's inputs). Every page a sequence ever touches — growth,
+COW forks, shared prefixes — comes from its own shard's block, so the
+decode gather and the prefill scatter stay device-local. The first
+page of each shard's block (`null_page_of_shard`) is a per-shard
+*reserve* page, never allocated: masked rows of that shard write there
+(the engine routes inactive rows via a per-slot null-page row instead
+of the constant 0). All allocator invariants below hold *per shard*;
+with `n_shards == 1` the layout degenerates to the original global
+pool (reserve page == null page 0).
+
 Pages are *refcounted* so completed prefill pages can be shared between
 sequences through the radix prefix index (serve/prefix_cache.py): a page
 may appear in several block-table rows and/or be retained by the index.
@@ -23,15 +39,19 @@ is functionally updated (donated) by decode/prefill steps. COW forks
 return (src, dst) page-id pairs; the engine applies them on device via
 models.model.copy_pages before the write lands.
 
-Invariants (asserted in tests/test_paged_kv.py and the property suite
+Invariants (asserted in tests/test_paged_kv.py, per shard in
+tests/test_sharded_serve.py, and the property suite
 tests/test_alloc_property.py):
-  - refcount conservation: free_pages + live_pages == n_pages - 1, where
-    a live page (refcount > 0) counts once no matter how many rows or
-    index nodes reference it;
+  - refcount conservation: free_pages + live_pages == usable_pages
+    (n_pages minus one reserve page per shard), where a live page
+    (refcount > 0) counts once no matter how many rows or index nodes
+    reference it; the same identity holds within each shard;
   - refcount[p] == (# slots whose block table holds p) + (1 if the
     prefix index retains p else 0);
   - no page is written while refcount > 1 (cow_for_write forks first);
-  - the null page 0 is never allocated, shared, or forked;
+  - reserve pages (the null page 0 and each shard's first page) are
+    never allocated, shared, or forked;
+  - every page owned by slot s belongs to shard_of_slot(s)'s block;
   - block-table entries beyond a sequence's page count are 0.
 """
 from __future__ import annotations
@@ -49,14 +69,26 @@ class OutOfPages(Exception):
 
 class PagedKVCache:
     def __init__(self, cfg, *, n_pages, page_size, max_seqs,
-                 max_pages_per_seq=None, dtype=None, create_pool=True):
+                 max_pages_per_seq=None, dtype=None, create_pool=True,
+                 n_shards=1):
         assert n_pages >= 2, "need at least the null page + one real page"
+        assert n_shards >= 1
+        assert n_pages % n_shards == 0, \
+            f"n_pages={n_pages} must split evenly over {n_shards} shards"
+        assert max_seqs % n_shards == 0, \
+            f"max_seqs={max_seqs} must split evenly over {n_shards} shards"
+        assert n_pages // n_shards >= 2, \
+            "each shard needs its reserve page + one usable page"
         self.cfg = cfg
         self.page_size = int(page_size)
         self.n_pages = int(n_pages)
         self.max_seqs = int(max_seqs)
+        self.n_shards = int(n_shards)
+        self.pages_per_shard = self.n_pages // self.n_shards
+        self.seqs_per_shard = self.max_seqs // self.n_shards
         self.max_pages_per_seq = (int(max_pages_per_seq)
-                                  if max_pages_per_seq else n_pages - 1)
+                                  if max_pages_per_seq
+                                  else self.pages_per_shard - 1)
         # the property-based allocator tests exercise the accounting
         # without paying for a device pool
         self.pool = (init_paged_cache(cfg, n_pages, page_size, max_seqs,
@@ -69,8 +101,13 @@ class PagedKVCache:
         # so the engine can mirror rows to a device-resident copy
         # incrementally instead of re-uploading the whole table per tick
         self.bt_version = np.zeros((max_seqs,), np.int64)
-        # page 0 reserved as the null page
-        self._free = list(range(n_pages - 1, 0, -1))
+        # per-shard free lists; each shard's first page (page 0 for
+        # shard 0 — the global null page) is the reserve page and never
+        # enters a free list
+        self._free_by_shard: list[list[int]] = [
+            list(range((s + 1) * self.pages_per_shard - 1,
+                       s * self.pages_per_shard, -1))
+            for s in range(self.n_shards)]
         self._owned: list[list[int]] = [[] for _ in range(max_seqs)]
         self._active = np.zeros((max_seqs,), bool)
         self._refcount = np.zeros((n_pages,), np.int32)
@@ -78,6 +115,18 @@ class PagedKVCache:
         self.high_water = 0
         self.cow_forks = 0
         self.pages_allocated = 0
+
+    # ---------------- shard geometry ----------------
+    def shard_of_page(self, pid: int) -> int:
+        return pid // self.pages_per_shard
+
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.seqs_per_shard
+
+    def null_page_of_shard(self, shard: int) -> int:
+        """The shard's reserve page: masked/inactive rows of that shard
+        write there (page 0 for shard 0 and for unsharded pools)."""
+        return shard * self.pages_per_shard
 
     def take_pool(self):
         """Hand the device pool to the caller (the engine functionally
@@ -89,21 +138,42 @@ class PagedKVCache:
 
     # ---------------- accounting ----------------
     @property
+    def _free(self) -> list[int]:
+        """Flat view of every free page (shard 0 first). Read-only:
+        allocation pops from the per-shard lists."""
+        if self.n_shards == 1:
+            return self._free_by_shard[0]
+        return [p for fl in self._free_by_shard for p in fl]
+
+    @property
     def usable_pages(self) -> int:
-        return self.n_pages - 1
+        return self.n_pages - self.n_shards
+
+    def usable_in_shard(self, shard: int = 0) -> int:
+        # shards are equal-sized today; validate anyway so a bogus
+        # shard id fails here, not as a plausible page count downstream
+        assert 0 <= shard < self.n_shards, shard
+        return self.pages_per_shard - 1
 
     @property
     def free_page_count(self) -> int:
-        return len(self._free)
+        return sum(len(fl) for fl in self._free_by_shard)
+
+    def free_in_shard(self, shard: int) -> int:
+        return len(self._free_by_shard[shard])
 
     @property
     def used_pages(self) -> int:
-        return self.usable_pages - len(self._free)
+        return self.usable_pages - self.free_page_count
 
     @property
     def live_pages(self) -> int:
         """Distinct pages with refcount > 0 (each counted once)."""
         return int((self._refcount > 0).sum())
+
+    def live_in_shard(self, shard: int) -> int:
+        lo = shard * self.pages_per_shard
+        return int((self._refcount[lo:lo + self.pages_per_shard] > 0).sum())
 
     def refcount(self, pid: int) -> int:
         return int(self._refcount[pid])
@@ -118,24 +188,46 @@ class PagedKVCache:
         return [i for i in range(self.max_seqs) if self._active[i]]
 
     # ---------------- slot lifecycle ----------------
-    def alloc_slot(self) -> int | None:
-        for i in range(self.max_seqs):
+    def pick_shard(self) -> int | None:
+        """Admission policy hook: the shard with the most free pages
+        among shards that still have a free sequence slot (ties to the
+        lowest shard id; None when every slot is taken). Trivially 0
+        for unsharded pools with a free slot."""
+        best, best_free = None, -1
+        for s in range(self.n_shards):
+            lo = s * self.seqs_per_shard
+            if self._active[lo:lo + self.seqs_per_shard].all():
+                continue
+            if len(self._free_by_shard[s]) > best_free:
+                best, best_free = s, len(self._free_by_shard[s])
+        return best
+
+    def alloc_slot(self, shard: int | None = None) -> int | None:
+        """Claim the first free slot (within `shard`'s slot block when
+        given)."""
+        lo, hi = 0, self.max_seqs
+        if shard is not None:
+            lo = shard * self.seqs_per_shard
+            hi = lo + self.seqs_per_shard
+        for i in range(lo, hi):
             if not self._active[i]:
                 self._active[i] = True
                 return i
         return None
 
-    def _reclaim(self, shortfall: int) -> int:
+    def _reclaim(self, shortfall: int, shard: int) -> int:
         """Ask the prefix index to drop its least-recently-used
-        unreferenced pages. Returns how many pages were freed."""
+        unreferenced pages *in this shard*. Returns how many pages were
+        freed."""
         if shortfall <= 0 or self.prefix_index is None:
             return 0
-        return self.prefix_index.evict(shortfall)
+        return self.prefix_index.evict(shortfall, shard=shard)
 
     def ensure(self, slot: int, n_tokens: int) -> None:
-        """Grow slot's page list to cover n_tokens; raises OutOfPages
-        (allocating nothing) when the pool can't satisfy the growth,
-        after reclaiming unreferenced prefix-index pages."""
+        """Grow slot's page list to cover n_tokens, allocating from the
+        slot's shard; raises OutOfPages (allocating nothing) when that
+        shard can't satisfy the growth, after reclaiming unreferenced
+        prefix-index pages of the same shard."""
         assert self._active[slot], slot
         need = self.pages_for(n_tokens) - len(self._owned[slot])
         if need <= 0:
@@ -143,13 +235,15 @@ class PagedKVCache:
         if self.pages_for(n_tokens) > self.max_pages_per_seq:
             raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
                              f"max_pages_per_seq={self.max_pages_per_seq}")
-        if need > len(self._free):
-            self._reclaim(need - len(self._free))
-        if need > len(self._free):
+        shard = self.shard_of_slot(slot)
+        free = self._free_by_shard[shard]
+        if need > len(free):
+            self._reclaim(need - len(free), shard)
+        if need > len(free):
             raise OutOfPages(f"slot {slot}: need {need} pages, "
-                             f"{len(self._free)} free")
+                             f"{len(free)} free in shard {shard}")
         for _ in range(need):
-            pid = self._free.pop()
+            pid = free.pop()
             idx = len(self._owned[slot])
             self._owned[slot].append(pid)
             self.block_tables[slot, idx] = pid
@@ -162,12 +256,17 @@ class PagedKVCache:
         """Attach already-live pages (a matched prefix) to a fresh slot:
         the pages become the slot's leading block-table entries and gain
         one reference each. Must precede any ensure() growth so page
-        index i keeps covering tokens [i*page_size, (i+1)*page_size)."""
+        index i keeps covering tokens [i*page_size, (i+1)*page_size).
+        Shared pages must live in the slot's shard — cross-shard
+        attachment would break page locality."""
         assert self._active[slot], slot
         assert not self._owned[slot], "share() must precede suffix alloc"
         assert len(page_ids) <= self.max_pages_per_seq
+        shard = self.shard_of_slot(slot)
         for idx, pid in enumerate(page_ids):
             assert pid != 0 and self._refcount[pid] > 0, pid
+            assert self.shard_of_page(int(pid)) == shard, \
+                (slot, pid, "cross-shard prefix attach")
             self._owned[slot].append(int(pid))
             self.block_tables[slot, idx] = pid
             self._refcount[pid] += 1
@@ -191,15 +290,17 @@ class PagedKVCache:
                   if self._refcount[owned[i]] > 1]
         if not shared:
             return []
-        if len(shared) > len(self._free):
-            self._reclaim(len(shared) - len(self._free))
-        if len(shared) > len(self._free):
+        sh = self.shard_of_slot(slot)
+        free = self._free_by_shard[sh]
+        if len(shared) > len(free):
+            self._reclaim(len(shared) - len(free), sh)
+        if len(shared) > len(free):
             raise OutOfPages(f"slot {slot}: {len(shared)} COW forks, "
-                             f"{len(self._free)} free")
+                             f"{len(free)} free in shard {sh}")
         copies = []
         for i in shared:
             old = owned[i]
-            new = self._free.pop()
+            new = free.pop()
             self._refcount[old] -= 1          # was > 1, never hits 0
             self._refcount[new] = 1
             owned[i] = new
@@ -218,12 +319,12 @@ class PagedKVCache:
         self._refcount[pid] += 1
 
     def unref(self, pid: int) -> None:
-        """Drop a reference; a page reaching refcount 0 returns to the
-        free list (contents are reused by overwrite)."""
+        """Drop a reference; a page reaching refcount 0 returns to its
+        home shard's free list (contents are reused by overwrite)."""
         assert self._refcount[pid] > 0, pid
         self._refcount[pid] -= 1
         if self._refcount[pid] == 0:
-            self._free.append(pid)
+            self._free_by_shard[self.shard_of_page(pid)].append(pid)
 
     def release(self, slot: int) -> None:
         """Drop a sequence's references (completion or preemption).
@@ -241,12 +342,16 @@ class PagedKVCache:
 
     # ---------------- defrag ----------------
     def compact(self, pool=None):
-        """Remap live pages onto the lowest page ids (gather on device,
-        rewrite block tables + prefix index) and return the compacted
-        pool. Paging has no *internal* fragmentation to fix — this
-        exists so long-lived engines can shrink the pool's high-water
-        footprint (e.g. before snapshotting a pool slice). Pass the pool
-        explicitly when the engine took ownership via take_pool()."""
+        """Remap live pages onto the lowest page ids *of their shard*
+        (gather on device, rewrite block tables + prefix index) and
+        return the compacted pool. Paging has no *internal*
+        fragmentation to fix — this exists so long-lived engines can
+        shrink the pool's high-water footprint (e.g. before
+        snapshotting a pool slice). Pages never cross shards, so the
+        gather permutation is block-diagonal over the page axis and the
+        device move stays shard-local under the GSPMD layout. Pass the
+        pool explicitly when the engine took ownership via
+        take_pool()."""
         import jax
         import jax.numpy as jnp
 
@@ -256,10 +361,14 @@ class PagedKVCache:
             pool = self.pool
 
         mapping: dict[int, int] = {}
+        next_in_shard = [s * self.pages_per_shard + 1
+                         for s in range(self.n_shards)]
 
         def remap(pid: int) -> int:
             if pid not in mapping:
-                mapping[pid] = len(mapping) + 1
+                sh = self.shard_of_page(pid)
+                mapping[pid] = next_in_shard[sh]
+                next_in_shard[sh] += 1
             return mapping[pid]
 
         for slot in range(self.max_seqs):
@@ -281,7 +390,6 @@ class PagedKVCache:
             src[new] = old
             new_rc[new] = self._refcount[old]
         self._refcount = new_rc
-        nxt = len(mapping) + 1
 
         if pool is not None:
             def move(leaf):
@@ -292,7 +400,10 @@ class PagedKVCache:
                 return leaf
 
             pool = jax.tree.map(move, pool)
-        self._free = list(range(self.n_pages - 1, nxt - 1, -1))
+        self._free_by_shard = [
+            list(range((s + 1) * self.pages_per_shard - 1,
+                       next_in_shard[s] - 1, -1))
+            for s in range(self.n_shards)]
         if not self._pool_taken:
             self.pool = pool
         return pool

@@ -27,6 +27,16 @@ Refcounts & eviction
   chains from the root. The allocator calls `evict` automatically when
   an allocation would otherwise fail, so cached prefixes are always
   sacrificed before any running sequence is preempted.
+
+Sharded pools
+  Over a sharded PagedKVCache the index is shard-local: a chain's shard
+  is the shard of its pages (one insert always comes from one slot, so
+  a chain never mixes shards), child nodes are keyed by (shard, token
+  tuple), and `lookup(..., shard=s)` only matches chains whose pages a
+  shard-s slot can attach. The same token prefix may therefore be
+  cached once per shard — that is the cost of keeping every gather
+  device-local. Eviction accepts the same shard filter so allocator
+  pressure in one shard never drains another shard's cached prefixes.
 """
 from __future__ import annotations
 
@@ -40,16 +50,17 @@ MAX_TAILS = 8
 
 class _Node:
     __slots__ = ("key", "page", "n_tokens", "children", "tails", "parent",
-                 "last_used")
+                 "last_used", "shard")
 
-    def __init__(self, key, page, n_tokens, parent):
+    def __init__(self, key, page, n_tokens, parent, shard=0):
         self.key = key                  # tuple of tokens this page holds
         self.page = page                # physical page id
         self.n_tokens = n_tokens        # valid tokens in the page
-        self.children = {}              # full-page nodes, key -> _Node
+        self.children = {}              # full nodes, (shard, key) -> _Node
         self.tails = []                 # partial-page nodes
         self.parent = parent
         self.last_used = 0
+        self.shard = shard              # home shard of self.page
 
     def is_leaf(self):
         return not self.children and not self.tails
@@ -95,31 +106,45 @@ class RadixPrefixCache:
         node.last_used = self._tick
 
     # ---------------- lookup ----------------
-    def lookup(self, tokens, *, max_tokens=None):
+    def lookup(self, tokens, *, max_tokens=None, shard=None):
         """Longest cached prefix of `tokens`, capped at max_tokens.
         Returns (n_matched, [page_ids]) where the pages cover tokens
         [0, n_matched) in order; the last page is partially matched when
         n_matched isn't page-aligned (the borrower must COW-fork it
-        before writing). Touches matched nodes (LRU)."""
+        before writing). `shard` restricts the match to chains whose
+        pages live in that pool shard (the only pages a slot of that
+        shard may attach); None matches any single shard's chain.
+        Touches matched nodes (LRU)."""
         toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
         limit = len(toks) if max_tokens is None else min(max_tokens,
                                                         len(toks))
+        shards = ((shard,) if shard is not None
+                  else range(getattr(self.kv, "n_shards", 1)))
         node, matched, pages = self.root, 0, []
         while limit - matched > 0:
             rem = limit - matched
             if rem >= self.page:
-                child = node.children.get(tuple(toks[matched:matched
-                                                     + self.page]))
+                chunk = tuple(toks[matched:matched + self.page])
+                child = None
+                for sh in shards:
+                    child = node.children.get((sh, chunk))
+                    if child is not None:
+                        break
                 if child is not None:
                     pages.append(child.page)
                     matched += self.page
                     self._touch(child)
                     node = child
+                    # stay on the matched chain's shard from here on: a
+                    # sequence can only attach pages of ONE shard
+                    shards = (child.shard,)
                     continue
             # no whole-page step: take the best partial match among this
             # node's children (full or tail) and stop
             best, best_lcp = None, 0
             for cand in list(node.children.values()) + node.tails:
+                if cand.shard not in shards:
+                    continue
                 lcp = min(_lcp(cand.key, toks[matched:]), rem,
                           cand.n_tokens)
                 if lcp > best_lcp:
@@ -141,13 +166,18 @@ class RadixPrefixCache:
         n = len(toks)
         nfull = n // self.page
         assert len(page_ids) >= self.kv.pages_for(n) if n else True
+        # one insert comes from one slot, so the whole chain shares the
+        # first page's shard
+        shard = (self.kv.shard_of_page(int(page_ids[0])) if len(page_ids)
+                 else 0)
         node = self.root
         for i in range(nfull):
             chunk = tuple(toks[i * self.page:(i + 1) * self.page])
-            child = node.children.get(chunk)
+            child = node.children.get((shard, chunk))
             if child is None:
-                child = _Node(chunk, int(page_ids[i]), self.page, node)
-                node.children[chunk] = child
+                child = _Node(chunk, int(page_ids[i]), self.page, node,
+                              shard)
+                node.children[(shard, chunk)] = child
                 self.kv.ref(child.page)
                 self._pages += 1
             self._touch(child)
@@ -158,11 +188,11 @@ class RadixPrefixCache:
             return
         key = tuple(toks[nfull * self.page:])
         for t in node.tails:
-            if t.key == key:
+            if t.key == key and t.shard == shard:
                 self._touch(t)
                 self._enforce_cap()
                 return
-        tail = _Node(key, int(page_ids[nfull]), rem, node)
+        tail = _Node(key, int(page_ids[nfull]), rem, node, shard)
         node.tails.append(tail)
         self.kv.ref(tail.page)
         self._pages += 1
@@ -191,36 +221,43 @@ class RadixPrefixCache:
         return (node is not self.root and node.is_leaf()
                 and self.kv.refcount(node.page) == 1)
 
-    def evict(self, n_pages: int) -> int:
+    def evict(self, n_pages: int, shard: int | None = None) -> int:
         """Free up to n_pages index-only pages, least-recently-used
-        leaves first. One tree walk seeds a heap of evictable leaves;
-        evicting a leaf pushes its parent if that just exposed it, so
-        reclaim is O(tree + freed*log) — it sits on the allocation
-        pressure path. Returns the number of pages actually freed."""
+        leaves first, restricted to `shard`'s chains when given (the
+        allocator reclaims under per-shard pressure — draining another
+        shard's cache would free nothing useful). One tree walk seeds a
+        heap of evictable leaves; evicting a leaf pushes its parent if
+        that just exposed it, so reclaim is O(tree + freed*log) — it
+        sits on the allocation pressure path. Returns the number of
+        pages actually freed."""
         import heapq
+
+        def evictable(node):
+            return (self._evictable(node)
+                    and (shard is None or node.shard == shard))
 
         heap, stack = [], [self.root]
         while stack:
             node = stack.pop()
             stack.extend(node.children.values())
             stack.extend(node.tails)
-            if self._evictable(node):
+            if evictable(node):
                 heapq.heappush(heap, (node.last_used, id(node), node))
         freed = 0
         while freed < n_pages and heap:
             tick, _, victim = heapq.heappop(heap)
-            if tick != victim.last_used or not self._evictable(victim):
+            if tick != victim.last_used or not evictable(victim):
                 continue              # stale entry (touched since seeded)
             parent = victim.parent
             if victim in parent.tails:
                 parent.tails.remove(victim)
             else:
-                del parent.children[victim.key]
+                del parent.children[(victim.shard, victim.key)]
             self.kv.unref(victim.page)
             self._pages -= 1
             self.evictions += 1
             freed += 1
-            if self._evictable(parent):
+            if evictable(parent):
                 heapq.heappush(heap, (parent.last_used, id(parent), parent))
         return freed
 

@@ -114,11 +114,30 @@ class Scheduler:
                 need += 1
         return need
 
+    # thin shard adapters: PagedKVCache and DenseSlotPool both expose
+    # the shard protocol (DenseSlotPool is trivially one shard)
+    def _pick_shard(self):
+        return self.kv.pick_shard()
+
+    def _alloc_slot(self, shard):
+        return self.kv.alloc_slot(shard=shard)
+
+    def _free_in_shard(self, shard):
+        return self.kv.free_in_shard(shard)
+
+    def _usable_in_shard(self, shard):
+        return self.kv.usable_in_shard(shard)
+
     def try_admit(self) -> _Entry | None:
         """Admit the queue head if a slot + its unshared prompt pages
         fit, reclaiming index-only pages when that is what stands in the
         way. The prefix match is re-run after every reclaim round: an
-        eviction may have dropped pages the previous lookup matched."""
+        eviction may have dropped pages the previous lookup matched.
+        Over a sharded pool the target shard is chosen first (the one
+        with the most free pages among shards with a free slot), and
+        the prefix match, the page accounting and the reclaim all run
+        against that shard alone — the admitted sequence's pages must
+        come from the shard its slot lives on."""
         if not self.waiting:
             return None
         # no free sequence slot -> nothing to admit; bail before the
@@ -128,23 +147,29 @@ class Scheduler:
             return None
         e = self.waiting[0]
         resumed = e.metrics.n_preemptions > 0
+        shard = self._pick_shard()
+        if shard is None:
+            return None
+        free_pages = lambda: self._free_in_shard(shard)
         while True:
             shared_tokens, shared_pages = 0, []
             if self.prefix is not None and len(e.prompt) > 1:
                 shared_tokens, shared_pages = self.prefix.lookup(
-                    e.prompt, max_tokens=len(e.prompt) - 1)
+                    e.prompt, max_tokens=len(e.prompt) - 1, shard=shard)
             need = self.admission_need(len(e.prompt), resumed=resumed,
                                        shared_tokens=shared_tokens)
-            if need > self.kv.usable_pages:
+            if need > self._usable_in_shard(shard):
                 raise ValueError(
-                    f"request needs {need} pages but the pool only has "
-                    f"{self.kv.usable_pages}; it can never be admitted")
-            if need <= self.kv.free_page_count:
+                    f"request needs {need} pages but a pool shard only "
+                    f"has {self._usable_in_shard(shard)}; it can never "
+                    f"be admitted")
+            if need <= free_pages():
                 break
-            shortfall = need - self.kv.free_page_count
-            if self.prefix is None or self.prefix.evict(shortfall) == 0:
+            shortfall = need - free_pages()
+            if (self.prefix is None
+                    or self.prefix.evict(shortfall, shard=shard) == 0):
                 return None
-        slot = self.kv.alloc_slot()
+        slot = self._alloc_slot(shard)
         if slot is None:
             return None
         self.waiting.popleft()
@@ -180,14 +205,21 @@ class Scheduler:
         self.waiting.appendleft(e)
         return e
 
-    def preempt_one(self) -> _Entry | None:
+    def preempt_one(self, shard: int | None = None) -> _Entry | None:
         """Evict the youngest running sequence (LIFO victim policy) that
         actually owns pages — evicting a freshly admitted zero-page entry
-        (chunked mode reserves the slot before any pages) frees nothing."""
-        if not self.running:
+        (chunked mode reserves the slot before any pages) frees nothing.
+        With `shard` given, only sequences of that shard are candidates:
+        pages freed in another shard cannot relieve this shard's
+        pressure."""
+        cands = self.running
+        if shard is not None:
+            cands = {s: e for s, e in self.running.items()
+                     if self.kv.shard_of_slot(s) == shard}
+        if not cands:
             return None
-        owners = [s for s in self.running if self.kv.owned_pages(s)]
-        slot = max(owners or self.running,
+        owners = [s for s in cands if self.kv.owned_pages(s)]
+        slot = max(owners or cands,
                    key=lambda s: self.running[s].metrics.t_admit)
         return self._preempt_slot(slot)
 
@@ -195,18 +227,23 @@ class Scheduler:
                               end_tok: int):
         """Grow `slot` to hold end_tok tokens AND fork any shared page
         in the write range [start_tok, end_tok) (copy-on-write), evicting
-        other sequences while the pool is dry (the allocator reclaims
-        index-only pages first). Returns (ok, copies): ok is False if
-        `slot` itself got evicted; copies are (src, dst) page pairs the
-        engine must apply to the device pool before the write."""
+        other sequences of the same shard while the pool is dry (the
+        allocator reclaims index-only pages of that shard first).
+        Returns (ok, copies): ok is False if `slot` itself got evicted;
+        copies are (src, dst) page pairs the engine must apply to the
+        device pool before the write."""
+        shard = self.kv.shard_of_slot(slot)
         while True:
             try:
                 self.kv.ensure(slot, end_tok)
                 return True, self.kv.cow_for_write(slot, start_tok,
                                                    end_tok)
             except OutOfPages:
-                if len(self.running) > 1:
-                    self.preempt_one()
+                others = [s for s in self.running
+                          if s != slot
+                          and self.kv.shard_of_slot(s) == shard]
+                if others:
+                    self.preempt_one(shard=shard)
                 else:
                     self._preempt_slot(slot)
                 if slot not in self.running:

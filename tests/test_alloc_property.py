@@ -126,6 +126,80 @@ def test_allocator_refcount_conservation_under_random_interleavings(seed):
 
 @settings(deadline=None)
 @given(st.integers(0, 10**9))
+def test_sharded_allocator_invariants_under_random_interleavings(seed):
+    """The same random-op soup over a 2-shard pool: conservation holds
+    globally AND within each shard, every slot's pages stay in its
+    shard, reserve pages never circulate, and cross-shard share()
+    attempts are rejected without mutating anything."""
+    rng = random.Random(seed)
+    page = rng.choice([2, 4])
+    pages_per_shard = rng.randint(3, 8)
+    kv = PagedKVCache(None, n_pages=2 * pages_per_shard, page_size=page,
+                      max_seqs=4, n_shards=2, create_pool=False)
+
+    def check():
+        assert kv.live_pages + kv.free_page_count == kv.usable_pages
+        for sh in range(kv.n_shards):
+            assert kv.live_in_shard(sh) + kv.free_in_shard(sh) \
+                == kv.usable_in_shard(sh)
+            reserve = kv.null_page_of_shard(sh)
+            assert kv.refcount(reserve) == 0 and reserve not in kv._free
+        for s in range(kv.max_seqs):
+            for pid in kv.owned_pages(s):
+                assert kv.shard_of_page(pid) == kv.shard_of_slot(s)
+
+    for _ in range(rng.randint(20, 60)):
+        op = rng.choice(OPS)
+        active = kv.active_slots()
+        if op == "alloc":
+            kv.alloc_slot(shard=rng.choice([None, 0, 1]))
+        elif op == "ensure" and active:
+            try:
+                kv.ensure(rng.choice(active),
+                          rng.randint(1, kv.usable_in_shard(0) * page
+                                      + page))
+            except OutOfPages:
+                pass
+        elif op == "share" and active:
+            fresh = [s for s in active if not kv.owned_pages(s)]
+            donors = [s for s in active if kv.owned_pages(s)]
+            if fresh and donors:
+                f, d = rng.choice(fresh), rng.choice(donors)
+                chain = kv.owned_pages(d)
+                k = rng.randint(1, min(len(chain), kv.max_pages_per_seq))
+                if kv.shard_of_slot(f) == kv.shard_of_slot(d):
+                    kv.share(f, chain[:k])
+                else:
+                    # cross-shard attach is rejected before any mutation
+                    before = kv._refcount.copy()
+                    with pytest.raises(AssertionError):
+                        kv.share(f, chain[:k])
+                    assert (kv._refcount == before).all()
+                    assert not kv.owned_pages(f)
+        elif op == "cow" and active:
+            owners = [s for s in active if kv.owned_pages(s)]
+            if owners:
+                slot = rng.choice(owners)
+                cap = len(kv.owned_pages(slot)) * page
+                start = rng.randint(0, cap - 1)
+                try:
+                    kv.cow_for_write(slot, start, rng.randint(start + 1,
+                                                              cap))
+                except OutOfPages:
+                    pass
+        elif op in ("release", "preempt") and active:
+            kv.release(rng.choice(active))
+        check()
+
+    for slot in kv.active_slots():
+        kv.release(slot)
+    assert kv.free_page_count == kv.usable_pages
+    for sh in range(kv.n_shards):
+        assert kv.free_in_shard(sh) == kv.usable_in_shard(sh)
+
+
+@settings(deadline=None)
+@given(st.integers(0, 10**9))
 def test_failed_allocations_are_atomic(seed):
     """ensure()/cow_for_write() that raise OutOfPages must leave the
     allocator exactly as it was (no partial allocation)."""

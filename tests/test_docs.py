@@ -1,0 +1,25 @@
+"""Documentation hygiene: docs/*.md (and the root *.md) must not carry
+dangling relative links or references to files that no longer exist —
+the same check CI runs as a dedicated step (tools/check_doc_links.py)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_docs_have_no_dangling_references():
+    r = subprocess.run([sys.executable,
+                        str(ROOT / "tools" / "check_doc_links.py")],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, f"\n{r.stdout}{r.stderr}"
+
+
+def test_architecture_doc_exists_and_is_linked():
+    """The end-to-end map must exist and be reachable from both topic
+    docs (QUANT.md and SERVING.md cross-link it)."""
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    assert arch.exists()
+    for doc in ("QUANT.md", "SERVING.md"):
+        assert "ARCHITECTURE.md" in (ROOT / "docs" / doc).read_text(), \
+            f"docs/{doc} should link the architecture map"

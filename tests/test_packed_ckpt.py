@@ -181,6 +181,166 @@ def test_legacy_g1_artifact_warns_under_grouped_spec(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# manifest v3: sharding metadata, bf16 scales, v2 back-compat
+# ---------------------------------------------------------------------------
+
+def test_manifest_v3_records_symbolic_shardings(tmp_path):
+    """Every leaf entry carries a symbolic PartitionSpec (axis names, no
+    sizes) so any later mesh can place it without re-deriving the rules;
+    QT children follow the dense weight they replace."""
+    import json
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec)
+    m = json.loads((d / "manifest.json").read_text())
+    assert m["format_version"] == 3
+    assert m["sharding"]["axes"] == ["data", "model"]
+    wq = m["tree"]["blocks"]["L0"]["attn"]["wq"]
+    assert wq["pspec"]["codes"][-2:] == ["data", "model"]
+    assert wq["pspec"]["alphas"][-3:] == [None, "model", None]
+    assert wq["pspec"]["betas"][-1] == "model"
+    ln = m["tree"]["blocks"]["L0"]["ln"]
+    assert all(a is None for a in ln["pspec"])   # norms replicate
+
+
+def test_v2_artifact_loads_and_warns_on_mesh(tmp_path):
+    """A v2 manifest (pre-sharding-metadata) must keep loading; with a
+    mesh it can only replicate, and says so once."""
+    import json
+    import warnings as _w
+
+    from repro.ckpt import packed as packed_mod
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec)
+
+    # strip the artifact back to v2: no sharding block, no pspec keys
+    m = json.loads((d / "manifest.json").read_text())
+    m["format_version"] = 2
+    m.pop("sharding")
+
+    def strip(node):
+        if isinstance(node.get("kind"), str):
+            node.pop("pspec", None)
+            return
+        for v in node.values():
+            strip(v)
+    strip(m["tree"])
+    (d / "manifest.json").write_text(json.dumps(m))
+
+    lp, lspec, _ = load_packed(d)          # meshless load: bit-exact
+    for (pq, lq), (pl_, ll) in zip(_leaves(qp), _leaves(lp)):
+        if isinstance(lq, QuantizedTensor):
+            np.testing.assert_array_equal(np.asarray(lq.codes),
+                                          np.asarray(ll.codes))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    packed_mod._WARNED_NO_PSPEC = False
+    with pytest.warns(UserWarning, match="REPLICATED"):
+        load_packed(d, mesh=mesh)
+    with _w.catch_warnings():              # one-time warning
+        _w.simplefilter("error")
+        load_packed(d, mesh=mesh)
+    packed_mod._WARNED_NO_PSPEC = False
+
+
+def test_future_format_is_refused(tmp_path):
+    import json
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec)
+    m = json.loads((d / "manifest.json").read_text())
+    m["format_version"] = 99
+    (d / "manifest.json").write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="newer"):
+        load_packed(d)
+
+
+def test_bf16_scales_halve_bytes_and_stay_within_tolerance(tmp_path):
+    """scale_dtype='bfloat16' stores alphas/betas as bf16 bits (half the
+    scale bytes of the G>1 overhead), loads back as fp32 values equal to
+    one bf16 rounding of the originals, and serves token-identically to
+    an engine fed the same-rounded scales directly."""
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
+                                 group_size=64)
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d32 = save_packed(tmp_path / "f32", qp, spec=spec)
+    d16 = save_packed(tmp_path / "bf16", qp, spec=spec,
+                      scale_dtype="bfloat16")
+
+    import json
+    a32 = np.load(d32 / "arrays.npz")
+    a16 = np.load(d16 / "arrays.npz")
+    wq32 = json.loads((d32 / "manifest.json").read_text())[
+        "tree"]["blocks"]["L0"]["attn"]["wq"]
+    wq16 = json.loads((d16 / "manifest.json").read_text())[
+        "tree"]["blocks"]["L0"]["attn"]["wq"]
+    assert wq16["scale_dtype"] == "bfloat16" and "scale_dtype" not in wq32
+    for f in ("alphas", "betas"):       # stored bytes exactly halved
+        assert a16[wq16[f]].dtype == np.uint16
+        assert a16[wq16[f]].nbytes * 2 == a32[wq32[f]].nbytes
+    assert a16[wq16["codes"]].dtype == np.uint32   # codes untouched
+
+    lp, lspec, _ = load_packed(d16)
+    assert lspec.group_size == 64
+    for (_, lq), (_, ll) in zip(_leaves(qp), _leaves(lp)):
+        if not isinstance(lq, QuantizedTensor):
+            continue
+        assert ll.alphas.dtype == np.float32       # fp32 load path kept
+        # exactly one bf16 rounding, no double rounding
+        ref = lq.cast_scales("bfloat16").cast_scales("float32")
+        np.testing.assert_array_equal(np.asarray(ll.alphas),
+                                      np.asarray(ref.alphas))
+        np.testing.assert_array_equal(np.asarray(ll.betas),
+                                      np.asarray(ref.betas))
+        # and the rounding is small: bf16 keeps ~8 mantissa bits
+        denom = np.abs(np.asarray(lq.alphas)) + 1e-8
+        rel = np.abs(np.asarray(ll.alphas) - np.asarray(lq.alphas)) / denom
+        assert float(rel.max()) < 1 / 128
+
+    mk = lambda: [Request(prompt=(np.arange(10) * 3 + i).astype(np.int32)
+                          % cfg.vocab_size, max_new_tokens=8)
+                  for i in range(2)]
+    rounded = jax.tree.map(
+        lambda x: (x.cast_scales("bfloat16").cast_scales("float32")
+                   if isinstance(x, QuantizedTensor) else x), qp,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    outs = []
+    for params in (rounded, lp):
+        eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                          dtype="float32")
+        reqs = mk()
+        eng.run(reqs)
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_already_bf16_scales_save_loadable(tmp_path):
+    """A tree whose QT scales are ALREADY bf16 (cast_scales) must not
+    commit an unreadable artifact: npz would degrade bf16 to a void
+    dtype, so save_packed stores the bits + flags the leaf even without
+    an explicit scale_dtype."""
+    import jax.numpy as jnp
+    from repro.quant.packing import pack_signs
+    rng = np.random.default_rng(0)
+    signs = jnp.asarray(np.sign(rng.standard_normal((2, 32, 8))) + 0.0)
+    qt = QuantizedTensor(
+        codes=pack_signs(signs),
+        alphas=jnp.asarray(rng.standard_normal((1, 8, 2)), jnp.float32),
+        betas=jnp.asarray(rng.standard_normal((1, 8)), jnp.float32),
+        k_in=32).cast_scales("bfloat16")
+    d = save_packed(tmp_path / "m", {"w": qt})
+    lp, _, _ = load_packed(d)           # must not raise
+    assert lp["w"].alphas.dtype == np.float32
+    np.testing.assert_array_equal(
+        np.asarray(lp["w"].alphas),
+        np.asarray(qt.alphas.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
 # device-resident block tables
 # ---------------------------------------------------------------------------
 

@@ -73,15 +73,20 @@ def test_bucketed_prefill_outputs_identical():
 
 
 def test_bucketed_prefill_amortizes_traces():
-    """Distinct prompt lengths inside one bucket share one prefill trace."""
+    """Distinct prompt lengths inside one bucket share one prefill trace.
+    The prefill jit is borrowed from the process-wide compile cache
+    (serve/compile_cache.py), so earlier engines with the same config
+    may already have populated it — measure the growth, not the
+    absolute entry count: six lengths in the 16 bucket may add at most
+    the one 16-bucket trace."""
     cfg = _tiny_cfg()
     p = init_params(cfg, KEY)
     eng = ServeEngine(cfg, p, batch_size=2, max_len=64, dtype="float32")
+    before = eng._prefill._cache_size()
     reqs = [Request(prompt=(np.arange(L) + 3).astype(np.int32) % 200,
                     max_new_tokens=2) for L in (9, 10, 11, 12, 14, 16)]
     eng.run(reqs)
-    # lengths 9..16 all pad to the 16 bucket -> exactly one compilation
-    assert eng._prefill._cache_size() == 1
+    assert eng._prefill._cache_size() - before <= 1
 
 
 @pytest.mark.slow
