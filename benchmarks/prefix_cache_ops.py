@@ -1,0 +1,100 @@
+"""Radix prefix-cache microbenchmark: host-only allocator + index ops,
+no model and no device pool (`PagedKVCache(create_pool=False)`), so the
+numbers isolate the bookkeeping the serving engine pays per admission —
+lookup, share, COW fork, insert, cap-enforced eviction.
+
+The workload is the traffic shape the radix cache exists for: a small
+set of hot system prompts (reused across many requests, Zipf-ish pick)
+each followed by a unique user tail. The cache cap is set well below
+the working set so the cold-first eviction policy is exercised on every
+wave: hot-prefix chains must survive (their nodes keep earning lookup
+hits) while one-shot tails churn through the cap. All counters are
+deterministic for a fixed seed — they gate exactly (noise 0) in
+`tools/bench_diff.py` — and the hit rate dropping means the eviction
+policy broke.
+
+  PYTHONPATH=src python -m benchmarks.run --only prefix_cache_ops
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bench import counter, latency, register_scenario
+from repro.bench.metrics.timers import Stopwatch
+
+PAGE = 16
+N_PAGES = 129               # 1 null + 128 usable
+MAX_SEQS = 4
+CACHE_CAP = 48              # pages the index may retain (forces eviction)
+N_HOT = 4                   # distinct system prompts
+HOT_PAGES = 4               # 64-token system prompts
+TAIL_TOKENS = 24            # unique per-request user suffix
+
+
+def _hot_prefixes(rng):
+    return [rng.integers(0, 32000, HOT_PAGES * PAGE).astype(np.int32)
+            for _ in range(N_HOT)]
+
+
+def run_workload(n_requests: int, seed: int = 0):
+    """Serve `n_requests` synthetic admissions through a host-only
+    allocator + radix index, mirroring the scheduler's admission /
+    finish bookkeeping (lookup -> share -> COW -> insert -> release).
+    Returns (prefix, kv, per-request second samples)."""
+    from repro.serve import PagedKVCache, RadixPrefixCache
+
+    kv = PagedKVCache(None, n_pages=N_PAGES, page_size=PAGE,
+                      max_seqs=MAX_SEQS, create_pool=False)
+    prefix = RadixPrefixCache(kv, max_cached_pages=CACHE_CAP)
+    rng = np.random.default_rng(seed)
+    hot = _hot_prefixes(rng)
+    sw = Stopwatch()
+    for i in range(n_requests):
+        # skewed reuse: prompt 0 is ~2x hotter than the rest
+        j = int(rng.integers(0, N_HOT + 1)) % N_HOT
+        tail = rng.integers(0, 32000, TAIL_TOKENS).astype(np.int32)
+        toks = np.concatenate([hot[j], tail])
+        with sw.lap():
+            matched, pages = prefix.lookup(toks,
+                                           max_tokens=len(toks) - 1)
+            slot = kv.alloc_slot()
+            assert slot is not None   # serial requests, MAX_SEQS slots
+            if matched:
+                kv.share(slot, pages)
+                prefix.hits += 1                 # scheduler contract:
+                prefix.tokens_saved += matched   # one hit per admission
+            kv.ensure(slot, len(toks))
+            kv.cow_for_write(slot, matched, len(toks))
+            prefix.insert(toks,
+                          kv.owned_pages(slot)[:kv.pages_for(len(toks))])
+            kv.release(slot)
+    return prefix, kv, sw.samples
+
+
+@register_scenario("prefix_cache_ops", quick=True, tags=("serving",))
+def prefix_cache_ops_scenario(ctx) -> dict:
+    """Admission-bookkeeping latency + exact cache-policy counters."""
+    n = 200 if ctx.quick else 1000
+    prefix, kv, samples = run_workload(n, seed=ctx.seed)
+    return {
+        "admission_s": latency(samples),
+        "hit_rate": counter(prefix.hit_rate, higher_is_better=True),
+        "hits": counter(prefix.hits, higher_is_better=True),
+        "tokens_saved": counter(prefix.tokens_saved, unit="tok",
+                                higher_is_better=True),
+        "evictions": counter(prefix.evictions),
+        "cached_pages": counter(prefix.cached_pages(), unit="pages"),
+        "cow_forks": counter(kv.cow_forks),
+        "pages_allocated": counter(kv.pages_allocated, unit="pages"),
+        "high_water_pages": counter(kv.high_water, unit="pages"),
+    }
+
+
+def main() -> None:
+    from repro.bench import BenchContext
+    for name, m in prefix_cache_ops_scenario(BenchContext()).items():
+        print(f"prefix_cache_ops/{name},{m.value:.6g},{m.unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,25 @@
-"""Serving throughput: dense-slot vs paged engine on the tiny config,
-plus the shared-system-prompt scenario for the radix prefix cache.
+"""Serving throughput scenarios: dense-slot vs paged engine on the tiny
+config, plus the shared-system-prompt scenario for the radix prefix
+cache. Registered with the perf-trajectory harness as
+`serve_throughput` and `serve_shared_prefix` (both in the --quick CPU
+subset; see docs/BENCHMARKS.md).
 
-Sweeps request concurrency and reports decode throughput (tokens/s),
-time-to-first-token and time-per-output-token for both cache backends,
-plus the paged pool's page high-water — the number that explains WHY
+`serve_throughput` sweeps request concurrency and reports decode
+throughput (tokens/s), TTFT/TPOT percentiles over per-request samples,
+and the paged pool's page high-water — the number that explains WHY
 paged sustains load: with c concurrent requests the dense engine pins
 c * max_len KV slots while the paged pool's footprint tracks live
 tokens.
 
-The shared-prefix scenario mirrors multi-user traffic behind one system
+`serve_shared_prefix` mirrors multi-user traffic behind one system
 prompt: every request is `system prompt (SHARED_PREFIX tokens) + short
 user turn`. With prefix sharing the engine prefills the system prompt
 once and serves every later request from the radix index, so TTFT and
-prefill token counts drop against the no-sharing paged baseline.
+prefill token counts drop against the no-sharing paged baseline — the
+prefill-token/hit/COW counters are deterministic and gate exactly.
 
-  PYTHONPATH=src python -m benchmarks.serve_throughput
+  PYTHONPATH=src python -m benchmarks.serve_throughput     # standalone
+  PYTHONPATH=src python -m benchmarks.run --quick          # via runner
 """
 from __future__ import annotations
 
@@ -22,6 +27,8 @@ import time
 
 import numpy as np
 
+from repro.bench import (Metric, counter, info, latency, register_scenario,
+                         throughput)
 
 MAX_LEN = 128
 PAGE = 32
@@ -31,6 +38,25 @@ PROMPT_LEN = 16
 SHARED_PREFIX = 64      # system-prompt tokens shared by every request
 SHARED_TAIL = 8         # per-user suffix tokens
 SHARED_MAX_NEW = 12
+
+_MODEL = None
+
+
+def _model():
+    """Tiny trained-free LM shared by every serving scenario in this
+    process (init only — scenario numbers measure serving, not
+    training)."""
+    global _MODEL
+    if _MODEL is None:
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import init_params
+        cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2,
+                                            d_model=128, d_ff=256,
+                                            remat="none")
+        _MODEL = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODEL
 
 
 def _requests(vocab, n):
@@ -51,15 +77,7 @@ def _serve(cfg, params, kind, concurrency):
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0
-    s = eng.stats
-    tok_s = s["tokens"] / max(s["decode_s"], 1e-9)
-    return {
-        "wall_s": wall, "tok_s": tok_s,
-        "ttft_s": s["ttft_avg_s"], "tpot_s": s["tpot_avg_s"],
-        "pages_hw": s["kv_high_water_pages"],
-        "pages_total": s["kv_usable_pages"],
-        "us_per_tok": 1e6 * s["decode_s"] / max(s["tokens"], 1),
-    }
+    return wall, eng.stats_snapshot()
 
 
 def _shared_prefix_requests(vocab, n, wave=0):
@@ -89,87 +107,124 @@ def _serve_shared(cfg, params, sharing, concurrency):
     eng.run(_shared_prefix_requests(cfg.vocab_size, concurrency, wave=0))
     for k in ("prefill_tokens", "tokens"):
         eng.stats[k] = 0
-    base = {k: eng.stats.get(k, 0)
-            for k in ("prefix_hits", "cow_forks", "prefix_tokens_saved")}
+    warm = eng.stats_snapshot()
     eng.stats["decode_s"] = 0.0
     reqs = _shared_prefix_requests(cfg.vocab_size, concurrency, wave=1)
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0
-    s = dict(eng.stats)
-    for k, v in base.items():
-        s[k] = s.get(k, 0) - v
+    snap = eng.stats_snapshot()
     return {
         "wall_s": wall,
-        "tok_s": s["tokens"] / max(s["decode_s"], 1e-9),
-        "ttft_s": s["ttft_avg_s"],
-        "prefill_tokens": s["prefill_tokens"],
-        "saved_tokens": s["prefix_tokens_saved"],
-        "prefix_hits": s["prefix_hits"],
-        "cow_forks": s["cow_forks"],
-        "pages_hw": s["kv_high_water_pages"],
-        "us_per_tok": 1e6 * s["decode_s"] / max(s["tokens"], 1),
+        "tok_s": snap.decode_tok_s,
+        "ttft_s": snap.ttft_avg_s,
+        "ttft_samples_s": snap.ttft_samples_s,
+        "prefill_tokens": snap.prefill_tokens,
+        "saved_tokens": snap.prefix_tokens_saved - warm.prefix_tokens_saved,
+        "prefix_hits": snap.prefix_hits - warm.prefix_hits,
+        "prefix_hit_rate": snap.prefix_hit_rate,
+        "cow_forks": snap.cow_forks - warm.cow_forks,
+        "pages_hw": snap.kv_high_water_pages,
+        "us_per_tok": snap.us_per_token,
     }
 
 
-def main() -> None:
-    from benchmarks.common import emit
-    from repro.configs import get_config
-    from repro.models import init_params
-    import jax
-
-    cfg = get_config("tiny-lm").replace(dtype="float32", n_layers=2,
-                                        d_model=128, d_ff=256, remat="none")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
-    for c in (2, 4, 8):
+@register_scenario("serve_throughput", quick=True, tags=("serving",))
+def serve_throughput_scenario(ctx) -> dict:
+    """Dense vs paged engine across a concurrency sweep."""
+    cfg, params = _model()
+    metrics: dict = {}
+    sweep = (2, 4) if ctx.quick else (2, 4, 8)
+    for c in sweep:
         for kind in ("dense", "paged"):
-            r = _serve(cfg, params, kind, c)
-            emit(f"serve_tput_{kind}_c{c}", r["us_per_tok"],
-                 f"tok_s={r['tok_s']:.1f};ttft_s={r['ttft_s']:.3f};"
-                 f"tpot_s={r['tpot_s']:.4f};pages={r['pages_hw']}/"
-                 f"{r['pages_total']}")
+            wall, s = _serve(cfg, params, kind, c)
+            tag = f"{kind}_c{c}"
+            metrics[f"{tag}/tok_s"] = throughput(s.decode_tok_s)
+            if s.ttft_samples_s:
+                metrics[f"{tag}/ttft_s"] = latency(s.ttft_samples_s)
+            if s.tpot_samples_s:
+                metrics[f"{tag}/tpot_s"] = latency(s.tpot_samples_s)
+            metrics[f"{tag}/pages_high_water"] = counter(
+                s.kv_high_water_pages, unit="pages")
+            metrics[f"{tag}/prefill_tokens"] = counter(
+                s.prefill_tokens, unit="tok")
+            metrics[f"{tag}/tokens"] = info(s.tokens, unit="tok")
+    return metrics
 
-    # shared-system-prompt scenario: prefix sharing vs no-sharing
-    for c in (4, 8):
+
+@register_scenario("serve_shared_prefix", quick=True, tags=("serving",))
+def serve_shared_prefix_scenario(ctx) -> dict:
+    """Radix prefix sharing vs no-sharing under one system prompt."""
+    cfg, params = _model()
+    metrics: dict = {}
+    sweep = (4,) if ctx.quick else (4, 8)
+    for c in sweep:
         base = _serve_shared(cfg, params, False, c)
         shared = _serve_shared(cfg, params, True, c)
+        tag = f"c{c}"
         speedup = base["ttft_s"] / max(shared["ttft_s"], 1e-9)
-        emit(f"serve_shared_prefix_c{c}", shared["us_per_tok"],
-             f"ttft_s={shared['ttft_s']:.3f};ttft_base_s="
-             f"{base['ttft_s']:.3f};ttft_speedup={speedup:.2f}x;"
-             f"tok_s={shared['tok_s']:.1f};tok_s_base={base['tok_s']:.1f};"
-             f"prefill_toks={shared['prefill_tokens']}/"
-             f"{base['prefill_tokens']};hits={shared['prefix_hits']};"
-             f"cow={shared['cow_forks']};pages_hw={shared['pages_hw']}/"
-             f"{base['pages_hw']}")
+        metrics[f"{tag}/ttft_speedup"] = Metric(
+            speedup, unit="x", higher_is_better=True, noise=0.5)
+        if shared["ttft_samples_s"]:
+            metrics[f"{tag}/ttft_s"] = latency(shared["ttft_samples_s"])
+        metrics[f"{tag}/tok_s"] = throughput(shared["tok_s"])
+        # deterministic counters: the sharing win in exact tokens/pages
+        metrics[f"{tag}/prefill_tokens"] = counter(
+            shared["prefill_tokens"], unit="tok")
+        metrics[f"{tag}/prefill_tokens_base"] = counter(
+            base["prefill_tokens"], unit="tok")
+        metrics[f"{tag}/tokens_saved"] = counter(
+            shared["saved_tokens"], unit="tok", higher_is_better=True)
+        metrics[f"{tag}/prefix_hits"] = counter(
+            shared["prefix_hits"], higher_is_better=True)
+        metrics[f"{tag}/prefix_hit_rate"] = counter(
+            shared["prefix_hit_rate"], higher_is_better=True)
+        metrics[f"{tag}/cow_forks"] = counter(shared["cow_forks"])
+        metrics[f"{tag}/pages_high_water"] = counter(
+            shared["pages_hw"], unit="pages")
+    return metrics
 
-    # sharded serving: paged engine over a (data, 1) mesh when the host
-    # exposes >1 device (launch with XLA_FLAGS=
-    # --xla_force_host_platform_device_count=2 to exercise on CPU) —
-    # measures the mesh-partitioned pool + shared compile cache path
-    n_dev = len(jax.devices())
-    if n_dev >= 2:
-        from repro.launch.mesh import make_serve_mesh
-        from repro.serve import ServeEngine
-        mesh = make_serve_mesh(data=2, model=1)
-        for c in (4, 8):
-            eng = ServeEngine(cfg, params, batch_size=c, max_len=MAX_LEN,
-                              dtype="float32", cache_kind="paged",
-                              page_size=PAGE, mesh=mesh)
-            reqs = _requests(cfg.vocab_size, c)
-            t0 = time.time()
-            eng.run(reqs)
-            s = eng.stats
-            emit(f"serve_sharded_d2_c{c}",
-                 1e6 * s["decode_s"] / max(s["tokens"], 1),
-                 f"tok_s={s['tokens'] / max(s['decode_s'], 1e-9):.1f};"
-                 f"wall_s={time.time() - t0:.2f};"
-                 f"shards={eng.kv.n_shards};"
-                 f"pages_per_shard={eng.kv.pages_per_shard}")
-    else:
-        print("# sharded scenario skipped: 1 device (set XLA_FLAGS="
-              "--xla_force_host_platform_device_count=2)")
+
+@register_scenario("serve_sharded", tags=("serving", "sharded"))
+def serve_sharded_scenario(ctx) -> dict:
+    """Paged engine over a (data=2, model=1) mesh — only meaningful when
+    the host exposes >= 2 devices (XLA_FLAGS=
+    --xla_force_host_platform_device_count=2 to exercise on CPU)."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        raise RuntimeError(
+            "serve_sharded needs >= 2 devices (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=2)")
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import ServeEngine
+    cfg, params = _model()
+    mesh = make_serve_mesh(data=2, model=1)
+    metrics: dict = {}
+    for c in ((4,) if ctx.quick else (4, 8)):
+        eng = ServeEngine(cfg, params, batch_size=c, max_len=MAX_LEN,
+                          dtype="float32", cache_kind="paged",
+                          page_size=PAGE, mesh=mesh)
+        eng.run(_requests(cfg.vocab_size, c))
+        s = eng.stats_snapshot()
+        tag = f"d2_c{c}"
+        metrics[f"{tag}/tok_s"] = throughput(s.decode_tok_s)
+        metrics[f"{tag}/us_per_tok"] = Metric(s.us_per_token, unit="us")
+        metrics[f"{tag}/pages_per_shard"] = info(eng.kv.pages_per_shard,
+                                                 unit="pages")
+        metrics[f"{tag}/compile_cache_entries"] = counter(
+            s.compile_cache_entries, unit="entries")
+    return metrics
+
+
+def main() -> None:
+    """Standalone CLI: run both quick scenarios and print their metrics
+    as CSV-ish lines (the registered path writes BENCH_*.json)."""
+    from repro.bench import BenchContext
+    ctx = BenchContext(quick=False)
+    for fn in (serve_throughput_scenario, serve_shared_prefix_scenario):
+        for name, m in fn(ctx).items():
+            print(f"{fn.__name__}/{name},{m.value:.6g},{m.unit}")
 
 
 if __name__ == "__main__":

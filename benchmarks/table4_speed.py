@@ -25,29 +25,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.bench import Metric, info, latency, register_scenario
+from repro.bench.metrics.timers import measure
 from repro.kernels import ref
 from repro.quant.packing import pack_signs
 
 HBM_BW = 819e9
 WIDTHS = [(1024, 4096), (2048, 8192), (4096, 16384)]
+QUICK_WIDTHS = [(1024, 4096)]
 BITS = 3
 GROUP_SIZES = (0, 128, 64)      # 0 = per-channel (G=1)
 
 
-def _bench(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    (out[0] if isinstance(out, tuple) else out).block_until_ready()
-    return (time.time() - t0) / iters
-
-
-def main():
+def collect(widths=None, iters=5):
+    """Measure every (width, representation) cell. Returns rows keyed
+    (K, N); each cell keeps both the historical mean-us fields and the
+    raw per-call second samples (`*_samples_s`) the registered scenario
+    turns into percentiles."""
     rows = {}
     rng = np.random.default_rng(0)
-    for K, N in WIDTHS:
+    for K, N in (widths or WIDTHS):
         x = jnp.asarray(rng.standard_normal((1, K)).astype(np.float32))
         w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
         # GPTQ-style: int codes + per-row scale, dequant then matmul
@@ -63,14 +60,14 @@ def main():
         gptqt_path = jax.jit(
             lambda x, c, a, b: ref.bcq_matmul_ref(x, c, a, b, K))
 
-        t_d = _bench(dense, x, w)
-        t_g = _bench(gptq_path, x, q, s)
+        s_d = measure(dense, x, w, warmup=1, iters=iters)
+        s_g = measure(gptq_path, x, q, s, warmup=1, iters=iters)
+        t_d = float(np.mean(s_d))
+        t_g = float(np.mean(s_g))
 
         bytes_dense = K * N * 2                        # bf16 target bytes
-        emit(f"table4/K{K}N{N}/dense", t_d * 1e6, "1.00x")
-        emit(f"table4/K{K}N{N}/gptq_dequant", t_g * 1e6,
-             f"{t_d / t_g:.2f}x_cpu")
         rows[(K, N)] = {"dense_us": t_d * 1e6, "gptq_us": t_g * 1e6,
+                        "dense_samples_s": s_d, "gptq_samples_s": s_g,
                         "proj_us_dense_v5e": bytes_dense / HBM_BW * 1e6}
 
         # fused path across scale granularities: G = K/gs alpha/beta
@@ -80,13 +77,14 @@ def main():
             tag = f"gptqt_fused_g{gs}" if gs else "gptqt_fused"
             alphas = jnp.asarray(rng.random((G, N, BITS), dtype=np.float32))
             betas = jnp.zeros((G, N), jnp.float32)
-            t_t = _bench(gptqt_path, x, codes, alphas, betas)
+            s_t = measure(gptqt_path, x, codes, alphas, betas,
+                          warmup=1, iters=iters)
+            t_t = float(np.mean(s_t))
             bytes_packed = (BITS * (K // 32) * N * 4
                             + G * N * BITS * 4 + G * N * 4)
             proj_speedup = bytes_dense / bytes_packed  # bandwidth-bound
-            emit(f"table4/K{K}N{N}/{tag}", t_t * 1e6,
-                 f"proj_{proj_speedup:.2f}x_v5e")
             rows[(K, N)][f"{tag}_us"] = t_t * 1e6
+            rows[(K, N)][f"{tag}_samples_s"] = s_t
             rows[(K, N)][f"{tag}_proj_speedup_v5e"] = proj_speedup
             rows[(K, N)][f"{tag}_proj_us_v5e"] = bytes_packed / HBM_BW * 1e6
         rows[(K, N)]["gptqt_us"] = rows[(K, N)]["gptqt_fused_us"]
@@ -95,6 +93,44 @@ def main():
         rows[(K, N)]["proj_us_gptqt_v5e"] = \
             rows[(K, N)]["gptqt_fused_proj_us_v5e"]
     return rows
+
+
+def main(widths=None):
+    """Standalone CSV path (historical shape: name,us_per_call,derived)."""
+    rows = collect(widths)
+    for (K, N), r in rows.items():
+        emit(f"table4/K{K}N{N}/dense", r["dense_us"], "1.00x")
+        emit(f"table4/K{K}N{N}/gptq_dequant", r["gptq_us"],
+             f"{r['dense_us'] / r['gptq_us']:.2f}x_cpu")
+        for gs in GROUP_SIZES:
+            tag = f"gptqt_fused_g{gs}" if gs else "gptqt_fused"
+            emit(f"table4/K{K}N{N}/{tag}", r[f"{tag}_us"],
+                 f"proj_{r[f'{tag}_proj_speedup_v5e']:.2f}x_v5e")
+    return rows
+
+
+@register_scenario("table4_speed", quick=True, tags=("quant", "kernels"))
+def table4_speed_scenario(ctx) -> dict:
+    """Tab. IV decode-matmul timings as gated metrics: per-call latency
+    percentiles for each representation (CPU wall time, wide noise) and
+    the exact bytes-ratio projections (analytic, noise 0)."""
+    rows = collect(QUICK_WIDTHS if ctx.quick else WIDTHS,
+                   iters=8 if ctx.quick else 16)
+    metrics: dict = {}
+    for (K, N), r in rows.items():
+        pre = f"K{K}N{N}"
+        metrics[f"{pre}/dense_s"] = latency(r["dense_samples_s"])
+        metrics[f"{pre}/gptq_dequant_s"] = latency(r["gptq_samples_s"])
+        for gs in GROUP_SIZES:
+            tag = f"gptqt_fused_g{gs}" if gs else "gptqt_fused"
+            metrics[f"{pre}/{tag}_s"] = latency(r[f"{tag}_samples_s"])
+            # analytic bandwidth-bound projection: exact, gates at 0
+            metrics[f"{pre}/{tag}_proj_speedup_v5e"] = Metric(
+                r[f"{tag}_proj_speedup_v5e"], unit="x",
+                higher_is_better=True, noise=0.0)
+        metrics[f"{pre}/proj_us_dense_v5e"] = info(
+            r["proj_us_dense_v5e"], unit="us")
+    return metrics
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Perf-trajectory benchmark subsystem: scenario registry, warmup-aware
+metrics with percentile statistics, versioned BENCH_<name>.json
+documents and the baseline-diff regression gate.
+
+Layers (see docs/BENCHMARKS.md):
+  registry.py  — `@register_scenario` / `get_scenario` (benchmarks/
+                 modules are the built-ins, registered at import)
+  metrics/     — timers (warmup + block_until_ready), percentile stats
+                 and the `Metric` record (unit, direction, noise band)
+  schema.py    — the BENCH document format: machine fingerprint, git
+                 SHA, quant config, per-metric noise bands; versioned,
+                 future versions refused
+  runner.py    — the executor: runs scenarios, captures pass/fail,
+                 writes documents, prints the summary table
+  diff.py      — deterministic baseline-vs-run verdicts; the CLI lives
+                 in tools/bench_diff.py
+"""
+from __future__ import annotations
+
+from repro.bench.metrics import (Metric, Stopwatch, counter, info, latency,
+                                 measure, percentile, summarize, throughput)
+from repro.bench.registry import (Scenario, available_scenarios,
+                                  get_scenario, register_scenario)
+from repro.bench.runner import (BenchContext, ScenarioResult, exit_code,
+                                run_one, run_scenarios)
+from repro.bench.schema import (SCHEMA_VERSION, BenchSchemaError, bench_path,
+                                load_dir, load_doc, make_doc, validate,
+                                write_doc)
+
+__all__ = [
+    "Metric", "Stopwatch", "counter", "info", "latency", "measure",
+    "percentile", "summarize", "throughput",
+    "Scenario", "register_scenario", "get_scenario", "available_scenarios",
+    "BenchContext", "ScenarioResult", "run_one", "run_scenarios",
+    "exit_code",
+    "SCHEMA_VERSION", "BenchSchemaError", "bench_path", "load_dir",
+    "load_doc", "make_doc", "validate", "write_doc",
+]

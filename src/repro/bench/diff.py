@@ -1,0 +1,136 @@
+"""Baseline-diff regression gate over BENCH_*.json documents.
+
+Pure functions from (baseline doc, run doc) to verdicts, so the gate is
+deterministic — the same pair of documents always yields the same
+verdict (pinned by tests/test_bench.py) — and importable by both
+tools/bench_diff.py (the CI entry point) and tests.
+
+Judgment rules, per metric present in the BASELINE (the baseline is
+the contract; metrics only in the run are informational):
+  - metrics with ``noise: null`` are informational, never gated;
+  - the *relative worsening* is computed direction-aware from
+    `higher_is_better`; improvements never fail;
+  - the allowed band is ``noise * noise_scale`` (CI passes a large
+    --noise-scale on shared CPU runners; counters with noise 0 stay
+    exact at any scale) plus a tiny epsilon for float round-trips;
+  - a baseline of exactly 0 gates on any nonzero worsening (counters
+    like cow_forks=0 must not silently start forking);
+  - a scenario or metric missing from the run REGRESSES: coverage must
+    not rot silently. A baseline whose scenario failed (`status:
+    "fail"`) gates nothing but is reported.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class Verdict:
+    scenario: str
+    metric: str                      # "" for scenario-level problems
+    status: str                      # "ok" | "regressed" | "missing" | "info"
+    base_value: Optional[float] = None
+    run_value: Optional[float] = None
+    worse_by: Optional[float] = None   # relative worsening (+ = worse)
+    band: Optional[float] = None       # allowed relative worsening
+
+    @property
+    def failed(self) -> bool:
+        return self.status in ("regressed", "missing")
+
+
+def relative_worsening(base: float, run: float,
+                       higher_is_better: bool) -> float:
+    """Signed relative change in the *bad* direction: positive means
+    the run is worse than the baseline. A zero baseline degenerates to
+    +/-inf on any change (counters that were exactly 0 must stay 0)."""
+    delta = (base - run) if higher_is_better else (run - base)
+    if abs(base) < EPS:
+        return 0.0 if abs(delta) < EPS else float("inf") * (1 if delta > 0
+                                                            else -1)
+    return delta / abs(base)
+
+
+def diff_metric(scenario: str, name: str, base_m: dict, run_m: Optional[dict],
+                *, noise_scale: float = 1.0) -> Verdict:
+    base_v = float(base_m["value"])
+    noise = base_m.get("noise")
+    if run_m is None:
+        return Verdict(scenario, name, "missing", base_value=base_v)
+    run_v = float(run_m["value"])
+    if noise is None:
+        return Verdict(scenario, name, "info", base_v, run_v)
+    worse = relative_worsening(base_v, run_v,
+                               bool(base_m.get("higher_is_better", False)))
+    band = float(noise) * float(noise_scale)
+    status = "regressed" if worse > band + EPS else "ok"
+    return Verdict(scenario, name, status, base_v, run_v, worse, band)
+
+
+def diff_docs(base_doc: dict, run_doc: Optional[dict], *,
+              noise_scale: float = 1.0) -> List[Verdict]:
+    name = base_doc["name"]
+    if run_doc is None:
+        return [Verdict(name, "", "missing")]
+    if base_doc.get("status") != "pass":
+        # a failed baseline holds no numbers worth gating on; surface it
+        return [Verdict(name, "", "info")]
+    if run_doc.get("status") != "pass":
+        return [Verdict(name, "", "missing")]
+    out = []
+    run_metrics = run_doc.get("metrics", {})
+    for mname, base_m in sorted(base_doc.get("metrics", {}).items()):
+        out.append(diff_metric(name, mname, base_m,
+                               run_metrics.get(mname),
+                               noise_scale=noise_scale))
+    return out
+
+
+def diff_all(baselines: Dict[str, dict], runs: Dict[str, dict], *,
+             noise_scale: float = 1.0) -> List[Verdict]:
+    out: List[Verdict] = []
+    for name in sorted(baselines):
+        out.extend(diff_docs(baselines[name], runs.get(name),
+                             noise_scale=noise_scale))
+    return out
+
+
+def fingerprint_mismatches(baselines: Dict[str, dict],
+                           runs: Dict[str, dict]) -> List[str]:
+    """Human-readable warnings when run and baseline machines differ —
+    the trajectory is still gated (that is what noise_scale is for),
+    but the reader should know the hardware moved under the numbers."""
+    warns = []
+    for name in sorted(set(baselines) & set(runs)):
+        b = baselines[name].get("machine", {})
+        r = runs[name].get("machine", {})
+        keys = ("platform", "device_platform", "device_kind", "n_devices")
+        delta = [f"{k}: {b.get(k)!r} -> {r.get(k)!r}"
+                 for k in keys if b.get(k) != r.get(k)]
+        if delta:
+            warns.append(f"{name}: machine fingerprint differs "
+                         f"({'; '.join(delta)})")
+    return warns
+
+
+def format_report(verdicts: Sequence[Verdict]) -> str:
+    rows = [("scenario", "metric", "baseline", "run", "worse_by",
+             "band", "verdict")]
+
+    def fmt(v):
+        return "-" if v is None else f"{v:.6g}"
+
+    for v in verdicts:
+        rows.append((v.scenario, v.metric or "<scenario>",
+                     fmt(v.base_value), fmt(v.run_value),
+                     "-" if v.worse_by is None else f"{v.worse_by:+.1%}",
+                     "-" if v.band is None else f"{v.band:.1%}",
+                     v.status.upper()))
+    widths = [max(len(row[i]) for row in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+             for row in rows]
+    lines.insert(1, "-" * len(lines[0]))
+    return "\n".join(lines)

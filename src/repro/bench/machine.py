@@ -1,0 +1,68 @@
+"""Machine fingerprint + git identity for BENCH_*.json provenance.
+
+Every benchmark document records *where* its numbers came from, because
+a perf trajectory spliced across machines is noise, not signal: the
+diff gate prints a loud warning when the run and baseline fingerprints
+disagree (CI runners vs the workstation that committed the baseline),
+and readers of a BENCH file can always tell a v5e number from a laptop
+number.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import sys
+
+
+def fingerprint() -> dict:
+    """Hashable-ish identity of the benchmarking host: platform, python,
+    jax version and the accelerator jax actually sees. jax import is
+    lazy-by-construction here only in the sense that callers invoke this
+    at emit time, when the scenario has long since imported jax."""
+    out = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count() or 0,
+    }
+    try:
+        import jax
+        devs = jax.devices()
+        out["jax"] = jax.__version__
+        out["device_platform"] = devs[0].platform if devs else "none"
+        out["device_kind"] = getattr(devs[0], "device_kind", "unknown") \
+            if devs else "none"
+        out["n_devices"] = len(devs)
+    except Exception:  # noqa: BLE001 — fingerprinting must never fail a run
+        out["jax"] = "unavailable"
+        out["device_platform"] = "unknown"
+        out["device_kind"] = "unknown"
+        out["n_devices"] = 0
+    return out
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """HEAD commit of the benchmarked tree ("unknown" outside a repo);
+    "-dirty" is appended when the worktree has uncommitted changes, so
+    a baseline can never silently claim to be a committed state."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, text=True,
+            capture_output=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, text=True,
+            capture_output=True, timeout=10, check=True).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def main() -> int:
+    import json
+    print(json.dumps({"machine": fingerprint(), "git_sha": git_sha()},
+                     indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Metrics layer of the perf-trajectory harness.
+
+A scenario returns ``{metric_name: Metric}``. Each Metric carries the
+fields the baseline-diff gate needs to judge it without scenario-
+specific knowledge: direction (`higher_is_better`), a relative noise
+band (`noise`, None = informational / never gated), and optional
+percentile detail for latency-style metrics.
+
+Conventions for the noise band (a *relative* half-width; bench_diff may
+scale it with --noise-scale for noisy CPU runners):
+  - deterministic counters (token counts, page high-waters, COW forks,
+    prefix hits): noise 0.0 — any worsening is a real behavior change;
+  - wall-clock timings / throughputs: noise ~0.5 — CPU CI shares cores;
+  - analytic projections (bytes ratios): noise 0.0 — pure arithmetic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
+
+from repro.bench.metrics.stats import PERCENTILES, percentile, summarize
+from repro.bench.metrics.timers import Stopwatch, block, measure
+
+TIMING_NOISE = 0.5       # default relative band for wall-clock metrics
+
+
+@dataclass
+class Metric:
+    """One gated (or informational) benchmark number."""
+    value: float
+    unit: str = ""
+    higher_is_better: bool = False
+    noise: Optional[float] = TIMING_NOISE   # None = never gated
+    percentiles: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        self.value = float(self.value)
+        if self.noise is not None and self.noise < 0:
+            raise ValueError(f"negative noise band: {self.noise}")
+
+
+def latency(samples_s: Iterable[float], *, unit: str = "s",
+            noise: float = TIMING_NOISE) -> Metric:
+    """Latency metric from raw per-event samples: gate on p50 (robust
+    to a single straggler), keep the full percentile summary."""
+    summary = summarize(samples_s)
+    return Metric(value=summary["p50"], unit=unit, higher_is_better=False,
+                  noise=noise, percentiles=summary)
+
+
+def throughput(value: float, *, unit: str = "tok/s",
+               noise: float = TIMING_NOISE) -> Metric:
+    return Metric(value=value, unit=unit, higher_is_better=True,
+                  noise=noise)
+
+
+def counter(value: float, *, unit: str = "", higher_is_better: bool = False,
+            noise: float = 0.0) -> Metric:
+    """Deterministic count (pages, tokens, forks): exact by default."""
+    return Metric(value=value, unit=unit,
+                  higher_is_better=higher_is_better, noise=noise)
+
+
+def info(value: float, *, unit: str = "") -> Metric:
+    """Recorded for the trajectory, never gated (e.g. totals fixed by
+    the workload definition)."""
+    return Metric(value=value, unit=unit, noise=None)
+
+
+__all__ = [
+    "Metric", "latency", "throughput", "counter", "info",
+    "percentile", "summarize", "PERCENTILES",
+    "measure", "block", "Stopwatch", "TIMING_NOISE",
+]

@@ -1,0 +1,50 @@
+"""Percentile statistics for benchmark samples.
+
+The perf-trajectory harness gates CI on these numbers, so the math is
+deliberately boring and deterministic: sort once, linear interpolation
+between order statistics (the same convention as numpy's default
+``np.percentile(..., method="linear")``), no randomness, no dependence
+on sample order. `tests/test_bench.py` pins the implementation against
+numpy on seeded samples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+PERCENTILES = (50, 90, 99)
+
+
+def percentile(samples: Iterable[float], q: float) -> float:
+    """q-th percentile (0..100) with linear interpolation between the
+    two nearest order statistics — identical to numpy's default method,
+    implemented here so the gate does not drift with numpy versions."""
+    xs: List[float] = sorted(float(x) for x in samples)
+    if not xs:
+        raise ValueError("percentile() of empty sample set")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
+    if len(xs) == 1:
+        return xs[0]
+    pos = q / 100.0 * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def summarize(samples: Iterable[float],
+              percentiles: Iterable[int] = PERCENTILES) -> Dict[str, float]:
+    """Order-independent summary of a sample set: n/mean/min/max plus
+    the requested percentiles (keys ``p50``, ``p90``, ...)."""
+    xs = [float(x) for x in samples]
+    if not xs:
+        raise ValueError("summarize() of empty sample set")
+    out = {
+        "n": float(len(xs)),
+        "mean": sum(xs) / len(xs),
+        "min": min(xs),
+        "max": max(xs),
+    }
+    for q in percentiles:
+        out[f"p{q}"] = percentile(xs, q)
+    return out

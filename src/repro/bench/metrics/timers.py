@@ -1,0 +1,74 @@
+"""Warmup-aware wall-clock timing for benchmark scenarios.
+
+jax makes naive timing lie twice: the first call pays tracing + XLA
+compilation, and every call returns before the device work finishes.
+`measure` runs `warmup` untimed calls first (compilation lands there),
+then `iters` timed calls, blocking on the result pytree each time, and
+returns the raw per-call samples so the metrics layer can report
+percentiles instead of a single mean that hides the tail.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def block(x) -> None:
+    """Wait for every jax array in a result pytree; host values pass
+    through untouched (scenarios also time pure-python paths)."""
+    if x is None:
+        return
+    if hasattr(x, "block_until_ready"):
+        x.block_until_ready()
+        return
+    if isinstance(x, (list, tuple)):
+        for item in x:
+            block(item)
+        return
+    if isinstance(x, dict):
+        for item in x.values():
+            block(item)
+
+
+def measure(fn: Callable, *args, warmup: int = 1,
+            iters: int = 5) -> List[float]:
+    """Per-call wall seconds of ``fn(*args)`` over `iters` timed calls
+    after `warmup` untimed ones. Each timed call blocks on its own
+    result, so the samples include device time, not dispatch time."""
+    assert iters >= 1, iters
+    for _ in range(max(warmup, 0)):
+        block(fn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return samples
+
+
+class Stopwatch:
+    """Accumulates per-event wall-clock samples (e.g. one per request):
+
+        sw = Stopwatch()
+        with sw.lap():
+            serve_one()
+        sw.samples  # [seconds, ...]
+    """
+
+    def __init__(self):
+        self.samples: List[float] = []
+
+    class _Lap:
+        def __init__(self, sw):
+            self._sw = sw
+
+        def __enter__(self):
+            self._t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            self._sw.samples.append(time.perf_counter() - self._t0)
+            return False
+
+    def lap(self) -> "Stopwatch._Lap":
+        return Stopwatch._Lap(self)

@@ -1,0 +1,72 @@
+"""Scenario registry: string names -> benchmark scenario callables.
+
+The same open-registration pattern as quant/registry.py's quantizer
+registry: every benchmark scenario registers itself under a name with
+`@register_scenario("name", ...)`, and the runner dispatches through
+`get_scenario` — there is no suite list hard-coded anywhere. The
+`benchmarks/` modules are the built-ins; importing them (which
+`benchmarks/run.py` does) is what populates the registry, so this
+module stays import-light and repro.bench never depends on benchmarks/
+at import time.
+
+A scenario is a callable ``fn(ctx) -> dict[str, Metric]`` where ctx is
+a runner.BenchContext (quick flag, seed, output dir). The executor
+(runner.py) owns everything around the call: timing, pass/fail capture,
+schema'd emission, the summary table and the process exit code — a
+scenario only measures and returns numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+_REGISTRY: Dict[str, "Scenario"] = {}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One registered benchmark scenario.
+
+    quick: part of the fast CPU subset (`benchmarks/run.py --quick`,
+        the CI regression gate). Quick scenarios must run in interpret-
+        mode Pallas on a few CPU cores in well under a minute each.
+    tags: free-form grouping ("serving", "kernels", "ppl", ...).
+    quant: static description of the quantization config the scenario
+        exercises (recorded in its BENCH document), None for dense.
+    """
+    name: str
+    fn: Callable
+    quick: bool = False
+    tags: Tuple[str, ...] = ()
+    quant: Optional[dict] = None
+
+    def __call__(self, ctx):
+        return self.fn(ctx)
+
+
+def register_scenario(name: str, *, quick: bool = False,
+                      tags: Tuple[str, ...] = (),
+                      quant: Optional[dict] = None):
+    """Function decorator: `@register_scenario("table4_speed", ...)`.
+    Later registrations override (same contract as the quantizer
+    registry — downstream code may re-register a scenario with a
+    different implementation)."""
+    def deco(fn):
+        _REGISTRY[name] = Scenario(name=name, fn=fn, quick=quick,
+                                   tags=tuple(tags), quant=quant)
+        return fn
+    return deco
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _REGISTRY:
+        known = ", ".join(sorted(_REGISTRY)) or "<none registered>"
+        raise KeyError(f"unknown scenario {name!r}; known: {known}")
+    return _REGISTRY[name]
+
+
+def available_scenarios(*, quick_only: bool = False) -> Tuple[str, ...]:
+    names = sorted(_REGISTRY)
+    if quick_only:
+        names = [n for n in names if _REGISTRY[n].quick]
+    return tuple(names)

@@ -1,0 +1,121 @@
+"""Benchmark executor: runs registered scenarios, emits BENCH_*.json.
+
+The executor/runner split (mirroring the scheduler/engine split in
+serve/): scenarios measure, the runner owns the lifecycle — per-
+scenario wall timing, exception capture, schema'd emission, the final
+summary table and the exit code. A scenario that raises is recorded as
+``status: "fail"`` with its traceback *in the JSON document* and the
+run exits nonzero with a summary table; it can no longer vanish into a
+stderr line behind a clean CSV header (the old benchmarks/run.py
+failure mode).
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.bench import schema
+from repro.bench.metrics import Metric
+from repro.bench.registry import Scenario, available_scenarios, get_scenario
+
+DEFAULT_OUT_DIR = "artifacts/bench"
+
+
+@dataclass
+class BenchContext:
+    """What the executor hands each scenario: the run mode and a seed.
+    Scenarios must derive ALL randomness from `seed` so a re-run is an
+    identical workload (the diff gate's counters assume it)."""
+    quick: bool = False
+    seed: int = 0
+    out_dir: Path = Path(DEFAULT_OUT_DIR)
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    status: str                      # "pass" | "fail"
+    wall_s: float
+    metrics: Dict[str, Metric] = field(default_factory=dict)
+    error: Optional[str] = None
+    path: Optional[Path] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "pass"
+
+
+def run_one(scn: Scenario, ctx: BenchContext) -> ScenarioResult:
+    """Execute one scenario, capturing failure instead of propagating:
+    the trajectory must record that a scenario broke, not skip it."""
+    t0 = time.perf_counter()
+    try:
+        metrics = scn(ctx)
+        if not isinstance(metrics, dict) or not all(
+                isinstance(m, Metric) for m in metrics.values()):
+            raise TypeError(
+                f"scenario {scn.name!r} must return dict[str, Metric], "
+                f"got {type(metrics).__name__}")
+        return ScenarioResult(name=scn.name, status="pass",
+                              wall_s=time.perf_counter() - t0,
+                              metrics=metrics)
+    except Exception:  # noqa: BLE001 — recorded, reported, exit nonzero
+        return ScenarioResult(name=scn.name, status="fail",
+                              wall_s=time.perf_counter() - t0,
+                              error=traceback.format_exc())
+
+
+def _emit(result: ScenarioResult, scn: Scenario, ctx: BenchContext) -> Path:
+    doc = schema.make_doc(result.name, result.metrics,
+                          status=result.status, error=result.error,
+                          wall_s=result.wall_s, quick=ctx.quick,
+                          quant=scn.quant)
+    return schema.write_doc(schema.bench_path(ctx.out_dir, result.name),
+                            doc)
+
+
+def _summary_table(results: Sequence[ScenarioResult]) -> str:
+    rows = [("scenario", "status", "wall_s", "metrics", "output")]
+    for r in results:
+        rows.append((r.name, r.status.upper(), f"{r.wall_s:.2f}",
+                     str(len(r.metrics)), str(r.path or "-")))
+    widths = [max(len(row[i]) for row in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+             for row in rows]
+    lines.insert(1, "-" * len(lines[0]))
+    return "\n".join(lines)
+
+
+def run_scenarios(names: Optional[Sequence[str]] = None, *,
+                  quick: bool = False, out_dir=DEFAULT_OUT_DIR,
+                  seed: int = 0) -> List[ScenarioResult]:
+    """Run `names` (default: the quick subset with quick=True, else
+    every registered scenario), write one BENCH_<name>.json each, print
+    the summary table. Callers turn the results into an exit code via
+    `exit_code(results)`."""
+    if names is None:
+        names = available_scenarios(quick_only=quick)
+    ctx = BenchContext(quick=quick, seed=seed, out_dir=Path(out_dir))
+    results: List[ScenarioResult] = []
+    for name in names:
+        scn = get_scenario(name)
+        print(f"[bench] {name} ...", flush=True)
+        r = run_one(scn, ctx)
+        r.path = _emit(r, scn, ctx)
+        if not r.ok:
+            print(f"[bench] {name} FAILED\n{r.error}", flush=True)
+        results.append(r)
+    print(f"\n{_summary_table(results)}")
+    n_fail = sum(not r.ok for r in results)
+    if n_fail:
+        print(f"\n{n_fail}/{len(results)} scenario(s) FAILED")
+    return results
+
+
+def exit_code(results: Sequence[ScenarioResult]) -> int:
+    if not results:
+        return 1                 # an empty run gates nothing: loud, not green
+    return 1 if any(not r.ok for r in results) else 0

@@ -1,0 +1,206 @@
+"""Versioned schema of the BENCH_<name>.json documents.
+
+One document per scenario run. The schema is deliberately flat and
+self-describing: a BENCH file carries everything the diff gate and a
+human reader need — where it ran (machine fingerprint, git SHA), what
+it measured (metrics with units, direction and noise bands), whether
+the scenario even completed (status/error), and which schema version
+wrote it.
+
+Versioning contract:
+  - `bench_schema_version` is required and integral.
+  - documents written by an OLDER version load if their fields still
+    validate (additive evolution is the plan, as with ckpt/packed.py's
+    manifest FORMAT_VERSION).
+  - documents written by a NEWER version are REFUSED with a clear
+    error: silently misreading future fields could pass a regression
+    gate on garbage. `tests/test_bench.py` pins this refusal path.
+
+  python -m repro.bench.schema DIR   # validate every BENCH_*.json in DIR
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict
+
+from repro.bench.metrics import Metric
+
+SCHEMA_VERSION = 1
+PREFIX = "BENCH_"
+STATUSES = ("pass", "fail")
+
+
+class BenchSchemaError(ValueError):
+    """A document does not satisfy the BENCH schema."""
+
+
+def bench_path(out_dir, name: str) -> Path:
+    return Path(out_dir) / f"{PREFIX}{name}.json"
+
+
+# ---------------- metric (de)serialization ----------------
+
+def metric_to_json(m: Metric) -> dict:
+    d = {"value": m.value, "unit": m.unit,
+         "higher_is_better": bool(m.higher_is_better), "noise": m.noise}
+    if m.percentiles is not None:
+        d["percentiles"] = {k: float(v) for k, v in m.percentiles.items()}
+    return d
+
+
+def metric_from_json(d: dict) -> Metric:
+    return Metric(value=d["value"], unit=d.get("unit", ""),
+                  higher_is_better=bool(d.get("higher_is_better", False)),
+                  noise=d.get("noise"),
+                  percentiles=d.get("percentiles"))
+
+
+# ---------------- document construction ----------------
+
+def make_doc(name: str, metrics: Dict[str, Metric], *, status: str = "pass",
+             error: str | None = None, wall_s: float = 0.0,
+             quick: bool = False, quant: dict | None = None,
+             created_unix: float | None = None) -> dict:
+    """Assemble a schema-valid document for one scenario run. `quant`
+    is the quantization config the scenario exercised (a QuantSpec's
+    dict form), None for dense/serving-only scenarios."""
+    import time
+
+    from repro.bench import machine
+    doc = {
+        "bench_schema_version": SCHEMA_VERSION,
+        "name": str(name),
+        "status": status,
+        "error": error,
+        "wall_s": float(wall_s),
+        "quick": bool(quick),
+        "created_unix": float(time.time() if created_unix is None
+                              else created_unix),
+        "git_sha": machine.git_sha(),
+        "machine": machine.fingerprint(),
+        "quant": quant,
+        "metrics": {str(k): metric_to_json(v) for k, v in metrics.items()},
+    }
+    validate(doc)
+    return doc
+
+
+# ---------------- validation ----------------
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise BenchSchemaError(msg)
+
+
+def validate(doc: dict) -> None:
+    """Raise BenchSchemaError unless `doc` is a valid BENCH document of
+    this or an older schema version."""
+    _require(isinstance(doc, dict), f"document is {type(doc).__name__}, "
+             "not an object")
+    v = doc.get("bench_schema_version")
+    _require(isinstance(v, int) and not isinstance(v, bool),
+             "bench_schema_version missing or not an integer")
+    _require(v >= 1, f"bench_schema_version {v} < 1")
+    _require(v <= SCHEMA_VERSION,
+             f"document has bench_schema_version {v} but this tool only "
+             f"understands <= {SCHEMA_VERSION}; refusing to interpret a "
+             f"future format (upgrade the repo instead)")
+    for field, types in (("name", str), ("status", str), ("wall_s", float),
+                         ("quick", bool), ("git_sha", str),
+                         ("machine", dict), ("metrics", dict)):
+        _require(field in doc, f"missing required field '{field}'")
+        val = doc[field]
+        if types is float:
+            _require(isinstance(val, (int, float))
+                     and not isinstance(val, bool),
+                     f"'{field}' must be a number, got {val!r}")
+        else:
+            _require(isinstance(val, types),
+                     f"'{field}' must be {types.__name__}, got {val!r}")
+    _require(doc["status"] in STATUSES,
+             f"status {doc['status']!r} not in {STATUSES}")
+    _require(doc.get("error") is None or isinstance(doc["error"], str),
+             "'error' must be null or a string")
+    _require(doc.get("quant") is None or isinstance(doc["quant"], dict),
+             "'quant' must be null or an object")
+    for mname, m in doc["metrics"].items():
+        ctx = f"metric {mname!r}"
+        _require(isinstance(m, dict), f"{ctx}: not an object")
+        _require("value" in m, f"{ctx}: missing 'value'")
+        _require(isinstance(m["value"], (int, float))
+                 and not isinstance(m["value"], bool),
+                 f"{ctx}: 'value' must be a number")
+        noise = m.get("noise")
+        _require(noise is None or (isinstance(noise, (int, float))
+                                   and not isinstance(noise, bool)
+                                   and noise >= 0),
+                 f"{ctx}: 'noise' must be null or a number >= 0")
+        _require(isinstance(m.get("higher_is_better", False), bool),
+                 f"{ctx}: 'higher_is_better' must be a boolean")
+        pct = m.get("percentiles")
+        if pct is not None:
+            _require(isinstance(pct, dict)
+                     and all(isinstance(x, (int, float)) for x in
+                             pct.values()),
+                     f"{ctx}: 'percentiles' must map names to numbers")
+
+
+# ---------------- file I/O ----------------
+
+def write_doc(path, doc: dict) -> Path:
+    validate(doc)
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    tmp.replace(path)
+    return path
+
+
+def load_doc(path) -> dict:
+    path = Path(path)
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise BenchSchemaError(f"{path}: not valid JSON ({e})") from e
+    try:
+        validate(doc)
+    except BenchSchemaError as e:
+        raise BenchSchemaError(f"{path}: {e}") from e
+    return doc
+
+
+def load_dir(out_dir) -> Dict[str, dict]:
+    """Every BENCH_*.json under `out_dir`, keyed by scenario name."""
+    out = {}
+    for p in sorted(Path(out_dir).glob(f"{PREFIX}*.json")):
+        doc = load_doc(p)
+        out[doc["name"]] = doc
+    return out
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if len(args) != 1:
+        print("usage: python -m repro.bench.schema DIR", file=sys.stderr)
+        return 2
+    paths = sorted(Path(args[0]).glob(f"{PREFIX}*.json"))
+    if not paths:
+        print(f"no {PREFIX}*.json under {args[0]}", file=sys.stderr)
+        return 1
+    bad = 0
+    for p in paths:
+        try:
+            doc = load_doc(p)
+            print(f"ok   {p} ({doc['name']}: {doc['status']}, "
+                  f"{len(doc['metrics'])} metrics)")
+        except BenchSchemaError as e:
+            print(f"FAIL {e}")
+            bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,12 @@ def main():
                     help="run the FineQuant-style sensitivity sweep and "
                          "print a paste-ready OverrideRule tuple instead "
                          "of serving")
+    ap.add_argument("--bytes-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="with --suggest-overrides: spend this many extra "
+                         "checkpoint bytes greedily by error reduction "
+                         "per byte (default: bump the top-quantile "
+                         "sensitive leaves regardless of size)")
     ap.add_argument("--save-quantized", default=None, metavar="DIR",
                     help="write the packed model artifact after quantizing")
     ap.add_argument("--load-quantized", default=None, metavar="DIR",
@@ -96,10 +102,21 @@ def main():
         scores = sensitivity_sweep(cfg, params, calib_batches_for("wiki"),
                                    spec=spec)
         print(format_report(scores))
-        rules = suggest_overrides(scores, base_bits=spec.bits)
-        print(f"\n# most sensitive {len(rules)}/{len(scores)} leaves "
-              f"bumped from w{spec.bits} to w{spec.bits + 1}; paste into "
-              f"QuantSpec(..., overrides=...):")
+        rules = suggest_overrides(scores, base_bits=spec.bits,
+                                  bytes_budget=args.bytes_budget)
+        if args.bytes_budget is not None:
+            from repro.quant.search import bump_cost_bytes
+            spent = sum(bump_cost_bytes(s, spec.bits, spec.bits + 1)
+                        for s in scores
+                        if any(r.pattern == s.path for r in rules))
+            print(f"\n# bytes budget {args.bytes_budget}: bumped "
+                  f"{len(rules)}/{len(scores)} leaves from w{spec.bits} "
+                  f"to w{spec.bits + 1} ({spent} bytes spent); paste "
+                  f"into QuantSpec(..., overrides=...):")
+        else:
+            print(f"\n# most sensitive {len(rules)}/{len(scores)} leaves "
+                  f"bumped from w{spec.bits} to w{spec.bits + 1}; paste "
+                  f"into QuantSpec(..., overrides=...):")
         print(format_overrides(rules))
         return
 

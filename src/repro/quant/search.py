@@ -108,21 +108,67 @@ def sensitivity_sweep(cfg, params, calib_batches, *,
     return tuple(scores)
 
 
+def bump_cost_bytes(score: LeafScore, base_bits: int, bump_to: int) -> int:
+    """Extra checkpoint bytes of raising one leaf from base_bits to
+    bump_to: (bump_to - base_bits) extra sign bitplanes over `params`
+    elements, 1 bit per element per plane (scale overhead is per-group,
+    negligible at leaf granularity and identical for every candidate)."""
+    return max(bump_to - base_bits, 0) * score.params // 8
+
+
 def suggest_overrides(scores: Iterable[LeafScore], *, base_bits: int,
                       bump_frac: float = 0.25,
-                      bump_to: int | None = None) -> Tuple[OverrideRule, ...]:
-    """Top `bump_frac` most-sensitive leaves (at `base_bits`) get an
-    OverrideRule raising them to `bump_to` (default base_bits + 1) —
-    the FineQuant recipe: spend the extra bits where the weighted error
-    concentrates."""
+                      bump_to: int | None = None,
+                      bytes_budget: int | None = None,
+                      ) -> Tuple[OverrideRule, ...]:
+    """Pick which leaves get an OverrideRule raising them to `bump_to`
+    (default base_bits + 1) — the FineQuant recipe: spend the extra bits
+    where the weighted error concentrates.
+
+    Two selection modes:
+      - default: top `bump_frac` most-sensitive leaves at `base_bits`
+        (quantile recipe — size-blind: a tiny norm leaf and a d_ff x
+        d_model matmul cost the same slot).
+      - `bytes_budget`: greedily spend a byte allowance by error
+        reduction *per byte* — candidates are ranked by
+        (err[base] - err[bump_to]) / bump_cost_bytes and taken while
+        they fit, skipping any leaf too large for the remaining budget
+        (greedy knapsack cover). This is the mode the serving CLI's
+        `--bytes-budget` exposes: "I can afford 2 MiB more checkpoint,
+        place it where it buys the most accuracy."
+    """
     scores = list(scores)
     if not scores:
         return ()
     bump_to = bump_to if bump_to is not None else base_bits + 1
-    ranked = sorted(scores, key=lambda s: -s.sensitivity(base_bits))
-    n_bump = max(1, int(round(len(ranked) * bump_frac)))
+    if bytes_budget is None:
+        ranked = sorted(scores, key=lambda s: -s.sensitivity(base_bits))
+        n_bump = max(1, int(round(len(ranked) * bump_frac)))
+        return tuple(OverrideRule(pattern=s.path, bits=bump_to)
+                     for s in ranked[:n_bump])
+
+    if bytes_budget < 0:
+        raise ValueError(f"bytes_budget must be >= 0, got {bytes_budget}")
+
+    def gain_per_byte(s: LeafScore) -> float:
+        cost = bump_cost_bytes(s, base_bits, bump_to)
+        if cost <= 0:
+            return 0.0
+        gain = s.sensitivity(base_bits) - s.sensitivity(bump_to)
+        return max(gain, 0.0) / cost
+
+    ranked = sorted(scores, key=lambda s: -gain_per_byte(s))
+    chosen, remaining = [], int(bytes_budget)
+    for s in ranked:
+        cost = bump_cost_bytes(s, base_bits, bump_to)
+        if cost <= 0 or gain_per_byte(s) <= 0.0:
+            continue                  # bump buys nothing for this leaf
+        if cost > remaining:
+            continue                  # too big — a cheaper leaf may fit
+        chosen.append(s)
+        remaining -= cost
     return tuple(OverrideRule(pattern=s.path, bits=bump_to)
-                 for s in ranked[:n_bump])
+                 for s in chosen)
 
 
 def format_overrides(rules: Iterable[OverrideRule]) -> str:

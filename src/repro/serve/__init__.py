@@ -2,7 +2,8 @@ from repro.serve.engine import DenseSlotPool, Request, ServeEngine
 from repro.serve.kv_cache import OutOfPages, PagedKVCache
 from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.scheduler import RequestMetrics, Scheduler
+from repro.serve.stats import EngineStats
 
 __all__ = ["ServeEngine", "Request", "PagedKVCache", "OutOfPages",
            "Scheduler", "RequestMetrics", "DenseSlotPool",
-           "RadixPrefixCache"]
+           "RadixPrefixCache", "EngineStats"]

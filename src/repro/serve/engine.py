@@ -264,9 +264,21 @@ class ServeEngine:
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
         self._prefill = compile_cache.get("prefill", cfg, mesh)
+        # raw accumulators (hot path); `stats_snapshot()` freezes them
+        # plus the pool/index/compile-cache counters into an EngineStats
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "ticks": 0, "prefill_tokens": 0}
         self._entries = []
+
+    def stats_snapshot(self):
+        """Structured snapshot of every serving counter — engine
+        accumulators, scheduler request metrics (incl. per-request
+        TTFT/TPOT samples), page-pool/prefix-index counters and the
+        process-wide compile-cache stats — as an immutable EngineStats.
+        This is the export the bench scenarios record; the `stats` dict
+        stays the mutable in-flight accumulator."""
+        from repro.serve.stats import EngineStats
+        return EngineStats.capture(self)
 
     def _mesh_ctx(self):
         """The engine's mesh context (no-op single-device): every jitted

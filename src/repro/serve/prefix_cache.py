@@ -20,13 +20,17 @@ Sharing & COW
 
 Refcounts & eviction
   Every node holds exactly one reference on its page (PagedKVCache.ref),
-  taken at insert and dropped at evict. Eviction is leaf-first LRU over
-  nodes whose page has refcount 1 (index-only — no running sequence is
-  using them); a node whose page is referenced by any sequence is
-  pinned, and so are its ancestors, because sequences attach matched
-  chains from the root. The allocator calls `evict` automatically when
-  an allocation would otherwise fail, so cached prefixes are always
-  sacrificed before any running sequence is preempted.
+  taken at insert and dropped at evict. Eviction is leaf-first and
+  *hit-rate-aware*: among nodes whose page has refcount 1 (index-only —
+  no running sequence is using them), cold leaves (fewest lookup hits)
+  go first, least-recently-used within the same hit count — a prefix
+  that keeps earning hits (a hot system prompt) outlives one-shot
+  prompts that merely happen to be recent. A node whose page is
+  referenced by any sequence is pinned, and so are its ancestors,
+  because sequences attach matched chains from the root. The allocator
+  calls `evict` automatically when an allocation would otherwise fail,
+  so cached prefixes are always sacrificed before any running sequence
+  is preempted.
 
 Sharded pools
   Over a sharded PagedKVCache the index is shard-local: a chain's shard
@@ -50,7 +54,7 @@ MAX_TAILS = 8
 
 class _Node:
     __slots__ = ("key", "page", "n_tokens", "children", "tails", "parent",
-                 "last_used", "shard")
+                 "last_used", "shard", "hits")
 
     def __init__(self, key, page, n_tokens, parent, shard=0):
         self.key = key                  # tuple of tokens this page holds
@@ -61,6 +65,7 @@ class _Node:
         self.parent = parent
         self.last_used = 0
         self.shard = shard              # home shard of self.page
+        self.hits = 0                   # lookup matches (eviction warmth)
 
     def is_leaf(self):
         return not self.children and not self.tails
@@ -96,14 +101,25 @@ class RadixPrefixCache:
             else max(kv.usable_pages - kv.max_seqs, 1))
         self._pages = 0           # retained-page count (== node count)
         self._tick = 0
-        self.hits = 0
+        self.hits = 0             # admissions served from the index
+        self.lookups = 0          # lookup() calls (hit-rate denominator)
         self.tokens_saved = 0
         self.evictions = 0
         kv.prefix_index = self
 
-    def _touch(self, node: _Node) -> None:
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of lookups that ended in an attached prefix (the
+        scheduler counts one hit per admission it serves from the
+        index); exported through the bench counters as
+        `prefix_hit_rate`."""
+        return self.hits / max(self.lookups, 1)
+
+    def _touch(self, node: _Node, *, hit: bool = False) -> None:
         self._tick += 1
         node.last_used = self._tick
+        if hit:
+            node.hits += 1
 
     # ---------------- lookup ----------------
     def lookup(self, tokens, *, max_tokens=None, shard=None):
@@ -114,7 +130,9 @@ class RadixPrefixCache:
         before writing). `shard` restricts the match to chains whose
         pages live in that pool shard (the only pages a slot of that
         shard may attach); None matches any single shard's chain.
-        Touches matched nodes (LRU)."""
+        Touches matched nodes (recency) and bumps their hit counts
+        (eviction warmth)."""
+        self.lookups += 1
         toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
         limit = len(toks) if max_tokens is None else min(max_tokens,
                                                         len(toks))
@@ -133,7 +151,7 @@ class RadixPrefixCache:
                 if child is not None:
                     pages.append(child.page)
                     matched += self.page
-                    self._touch(child)
+                    self._touch(child, hit=True)
                     node = child
                     # stay on the matched chain's shard from here on: a
                     # sequence can only attach pages of ONE shard
@@ -152,7 +170,7 @@ class RadixPrefixCache:
             if best is not None:
                 pages.append(best.page)
                 matched += best_lcp
-                self._touch(best)
+                self._touch(best, hit=True)
             break
         return matched, pages
 
@@ -200,7 +218,7 @@ class RadixPrefixCache:
         if len(node.tails) > MAX_TAILS:
             victim = min(node.tails,
                          key=lambda t: (self.kv.refcount(t.page) > 1,
-                                        t.last_used))
+                                        t.hits, t.last_used))
             if self.kv.refcount(victim.page) == 1:
                 node.tails.remove(victim)
                 self.kv.unref(victim.page)
@@ -222,19 +240,25 @@ class RadixPrefixCache:
                 and self.kv.refcount(node.page) == 1)
 
     def evict(self, n_pages: int, shard: int | None = None) -> int:
-        """Free up to n_pages index-only pages, least-recently-used
-        leaves first, restricted to `shard`'s chains when given (the
-        allocator reclaims under per-shard pressure — draining another
-        shard's cache would free nothing useful). One tree walk seeds a
-        heap of evictable leaves; evicting a leaf pushes its parent if
-        that just exposed it, so reclaim is O(tree + freed*log) — it
-        sits on the allocation pressure path. Returns the number of
-        pages actually freed."""
+        """Free up to n_pages index-only pages, coldest leaves first
+        (fewest lookup hits, least-recently-used within a hit tier),
+        restricted to `shard`'s chains when given (the allocator
+        reclaims under per-shard pressure — draining another shard's
+        cache would free nothing useful). One tree walk seeds a heap of
+        evictable leaves; evicting a leaf pushes its parent if that
+        just exposed it, so reclaim is O(tree + freed*log) — it sits on
+        the allocation pressure path. Returns the number of pages
+        actually freed."""
         import heapq
 
         def evictable(node):
             return (self._evictable(node)
                     and (shard is None or node.shard == shard))
+
+        def key(node):
+            # cold-first: a hot system prompt (many hits) outlives
+            # one-shot prompts that merely happen to be recent
+            return (node.hits, node.last_used)
 
         heap, stack = [], [self.root]
         while stack:
@@ -242,11 +266,11 @@ class RadixPrefixCache:
             stack.extend(node.children.values())
             stack.extend(node.tails)
             if evictable(node):
-                heapq.heappush(heap, (node.last_used, id(node), node))
+                heapq.heappush(heap, (*key(node), id(node), node))
         freed = 0
         while freed < n_pages and heap:
-            tick, _, victim = heapq.heappop(heap)
-            if tick != victim.last_used or not evictable(victim):
+            hits, tick, _, victim = heapq.heappop(heap)
+            if (hits, tick) != key(victim) or not evictable(victim):
                 continue              # stale entry (touched since seeded)
             parent = victim.parent
             if victim in parent.tails:
@@ -258,7 +282,7 @@ class RadixPrefixCache:
             self.evictions += 1
             freed += 1
             if evictable(parent):
-                heapq.heappush(heap, (parent.last_used, id(parent), parent))
+                heapq.heappush(heap, (*key(parent), id(parent), parent))
         return freed
 
     def clear(self) -> int:

@@ -269,22 +269,38 @@ class Scheduler:
         e.req.done = True
 
     def metrics_summary(self, entries) -> dict:
+        """Aggregate per-request metrics. Alongside the averages, the
+        raw per-request TTFT/TPOT sample lists are exported so the
+        bench subsystem (repro.bench.metrics) can report percentiles —
+        tail latency is the serving number that matters, and an average
+        hides it."""
         ms = [e.metrics for e in entries]
         done = [m for m in ms if m.t_done]
+        ttft = [m.ttft_s for m in done]
+        tpot = [m.tpot_s for m in done if m.n_generated > 1]
         out = {
             "n_done": len(done),
             "preemptions": self.preemptions,
-            "ttft_avg_s": float(np.mean([m.ttft_s for m in done])) if done else 0.0,
+            "ttft_avg_s": float(np.mean(ttft)) if ttft else 0.0,
             "tpot_avg_s": float(np.mean([m.tpot_s for m in done])) if done else 0.0,
+            "ttft_samples_s": ttft,
+            "tpot_samples_s": tpot,
             "kv_high_water_pages": self.kv.high_water,
             "kv_usable_pages": self.kv.usable_pages,
+            "pages_allocated": getattr(self.kv, "pages_allocated", 0),
             "cow_forks": getattr(self.kv, "cow_forks", 0),
             "prefix_hits": 0,
+            "prefix_lookups": 0,
+            "prefix_hit_rate": 0.0,
             "prefix_tokens_saved": 0,
             "prefix_cached_pages": 0,
+            "prefix_evictions": 0,
         }
         if self.prefix is not None:
             out["prefix_hits"] = self.prefix.hits
+            out["prefix_lookups"] = self.prefix.lookups
+            out["prefix_hit_rate"] = self.prefix.hit_rate
             out["prefix_tokens_saved"] = self.prefix.tokens_saved
             out["prefix_cached_pages"] = self.prefix.cached_pages()
+            out["prefix_evictions"] = self.prefix.evictions
         return out

@@ -1,0 +1,237 @@
+"""Perf-trajectory bench subsystem: percentile statistics, the Metric
+record, the versioned BENCH schema (round-trip + future-version
+refusal), the deterministic noise-band diff gate, and the runner's
+fail-path bookkeeping. Everything here is host-only and fast — these
+tests pin the contracts CI's bench-quick job relies on."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import (BenchContext, Metric, Scenario, SCHEMA_VERSION,
+                         BenchSchemaError, counter, info, latency, make_doc,
+                         percentile, run_one, summarize, throughput,
+                         validate, write_doc)
+from repro.bench.diff import (Verdict, diff_all, diff_docs, diff_metric,
+                              relative_worsening)
+from repro.bench.metrics import TIMING_NOISE
+from repro.bench.schema import load_dir, load_doc
+
+
+# ---------------------------------------------------------------------------
+# percentile statistics
+# ---------------------------------------------------------------------------
+
+def test_percentile_matches_numpy_on_seeded_samples():
+    rng = np.random.default_rng(42)
+    for n in (1, 2, 3, 10, 101, 1000):
+        samples = rng.lognormal(mean=-7, sigma=1.0, size=n).tolist()
+        for q in (0, 10, 50, 90, 99, 100):
+            ours = percentile(samples, q)
+            ref = float(np.percentile(samples, q))  # default: linear interp
+            assert ours == pytest.approx(ref, rel=1e-12), (n, q)
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+
+
+def test_summarize_fields():
+    s = summarize([3.0, 1.0, 2.0])
+    assert s["n"] == 3 and s["min"] == 1.0 and s["max"] == 3.0
+    assert s["mean"] == pytest.approx(2.0)
+    assert s["p50"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Metric helpers
+# ---------------------------------------------------------------------------
+
+def test_metric_helpers_conventions():
+    lat = latency([0.2, 0.1, 0.3])
+    assert lat.value == pytest.approx(0.2)          # p50
+    assert lat.noise == TIMING_NOISE and not lat.higher_is_better
+    assert lat.percentiles["p99"] == pytest.approx(
+        float(np.percentile([0.1, 0.2, 0.3], 99)))
+    tput = throughput(123.0)
+    assert tput.higher_is_better and tput.noise == TIMING_NOISE
+    cnt = counter(7)
+    assert cnt.noise == 0.0                         # exact at any scale
+    inf = info(3.5)
+    assert inf.noise is None                        # never gated
+    with pytest.raises(ValueError):
+        Metric(1.0, noise=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# BENCH schema: round-trip + future-version refusal
+# ---------------------------------------------------------------------------
+
+def _doc(metrics=None, **kw):
+    return make_doc("unit_scenario",
+                    metrics if metrics is not None
+                    else {"lat_s": latency([0.01, 0.02, 0.03]),
+                          "hits": counter(5, higher_is_better=True),
+                          "note": info(1.0)},
+                    **kw)
+
+
+def test_schema_roundtrip(tmp_path):
+    doc = _doc(wall_s=1.5, quick=True, quant={"method": "gptqt", "bits": 3})
+    path = write_doc(tmp_path / "BENCH_unit_scenario.json", doc)
+    loaded = load_doc(path)
+    assert loaded == doc
+    assert loaded["bench_schema_version"] == SCHEMA_VERSION
+    assert loaded["metrics"]["lat_s"]["percentiles"]["p50"] == \
+        doc["metrics"]["lat_s"]["percentiles"]["p50"]
+    assert loaded["metrics"]["note"]["noise"] is None
+    assert loaded["machine"]["platform"] and loaded["git_sha"]
+    by_name = load_dir(tmp_path)
+    assert set(by_name) == {"unit_scenario"}
+
+
+def test_schema_refuses_future_version(tmp_path):
+    doc = _doc()
+    doc["bench_schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(BenchSchemaError, match="future format"):
+        validate(doc)
+    # and via file I/O: a future file on disk must refuse to load
+    p = tmp_path / "BENCH_unit_scenario.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(BenchSchemaError, match="future format"):
+        load_doc(p)
+
+
+def test_schema_rejects_malformed():
+    doc = _doc()
+    for mutate in (
+        lambda d: d.pop("bench_schema_version"),
+        lambda d: d.update(bench_schema_version="1"),     # not an int
+        lambda d: d.update(status="flaky"),
+        lambda d: d.pop("machine"),
+        lambda d: d["metrics"].update(bad={"unit": "s"}),  # no value
+        lambda d: d["metrics"]["hits"].update(noise=-1.0),
+    ):
+        d = json.loads(json.dumps(doc))
+        mutate(d)
+        with pytest.raises(BenchSchemaError):
+            validate(d)
+
+
+# ---------------------------------------------------------------------------
+# diff gate: direction-aware noise bands, deterministic verdicts
+# ---------------------------------------------------------------------------
+
+def test_relative_worsening_direction_aware():
+    # lower is better: run growing is bad
+    assert relative_worsening(10.0, 12.0, False) == pytest.approx(0.2)
+    assert relative_worsening(10.0, 8.0, False) == pytest.approx(-0.2)
+    # higher is better: run shrinking is bad
+    assert relative_worsening(10.0, 8.0, True) == pytest.approx(0.2)
+    # zero baseline: any worsening is infinite, exact zero stays ok
+    assert relative_worsening(0.0, 1.0, False) == float("inf")
+    assert relative_worsening(0.0, 0.0, False) == 0.0
+
+
+def test_diff_metric_bands_and_scale():
+    base = {"value": 100.0, "noise": 0.5, "higher_is_better": False}
+    ok = diff_metric("s", "m", base, {"value": 149.0})
+    assert ok.status == "ok" and not ok.failed
+    bad = diff_metric("s", "m", base, {"value": 151.0})
+    assert bad.status == "regressed" and bad.failed
+    # widening the band (noisy CPU runner) forgives the same delta
+    assert diff_metric("s", "m", base, {"value": 151.0},
+                       noise_scale=2.0).status == "ok"
+    # counters (noise 0) stay exact at ANY scale
+    cnt = {"value": 4.0, "noise": 0.0, "higher_is_better": False}
+    assert diff_metric("s", "m", cnt, {"value": 4.0},
+                       noise_scale=100.0).status == "ok"
+    assert diff_metric("s", "m", cnt, {"value": 5.0},
+                       noise_scale=100.0).status == "regressed"
+    # improvements never fail, even huge ones
+    assert diff_metric("s", "m", base, {"value": 1.0}).status == "ok"
+    # info metrics (noise null) are never gated
+    assert diff_metric("s", "m", {"value": 1.0, "noise": None},
+                       {"value": 99.0}).status == "info"
+    # a metric the run no longer reports is a failure, not a skip
+    assert diff_metric("s", "m", base, None).status == "missing"
+
+
+def _pair(tmp_path, base_metrics, run_metrics):
+    bdir, rdir = tmp_path / "base", tmp_path / "run"
+    write_doc(bdir / "BENCH_s.json", make_doc("s", base_metrics))
+    write_doc(rdir / "BENCH_s.json", make_doc("s", run_metrics))
+    return load_dir(bdir), load_dir(rdir)
+
+
+def test_diff_gate_identical_rerun_passes(tmp_path):
+    metrics = {"lat_s": latency([0.01, 0.02]), "forks": counter(0)}
+    baselines, runs = _pair(tmp_path, metrics, metrics)
+    verdicts = diff_all(baselines, runs)
+    assert verdicts and not any(v.failed for v in verdicts)
+    # determinism: the same document pair always yields the same verdicts
+    assert diff_all(baselines, runs) == verdicts
+
+
+def test_diff_gate_doctored_regression_fails(tmp_path):
+    baselines, runs = _pair(
+        tmp_path,
+        {"forks": counter(0), "lat_s": latency([0.010, 0.011])},
+        {"forks": counter(3), "lat_s": latency([0.010, 0.011])})
+    failed = [v for v in diff_all(baselines, runs) if v.failed]
+    assert [v.metric for v in failed] == ["forks"]
+    assert failed[0].worse_by == float("inf")       # 0 -> 3 counter
+
+
+def test_diff_gate_missing_scenario_and_failed_run(tmp_path):
+    bdir = tmp_path / "base"
+    write_doc(bdir / "BENCH_s.json", make_doc("s", {"x": counter(1)}))
+    baselines = load_dir(bdir)
+    # run directory lost the scenario entirely
+    assert diff_all(baselines, {}) == [Verdict("s", "", "missing")]
+    # run exists but the scenario failed: its numbers gate nothing
+    rdir = tmp_path / "run"
+    write_doc(rdir / "BENCH_s.json",
+              make_doc("s", {}, status="fail", error="boom"))
+    verdicts = diff_docs(baselines["s"], load_dir(rdir)["s"])
+    assert [v.status for v in verdicts] == ["missing"]
+
+
+# ---------------------------------------------------------------------------
+# runner: scenario failure is recorded, not swallowed
+# ---------------------------------------------------------------------------
+
+def test_run_one_records_failure_with_traceback():
+    def boom(ctx):
+        raise RuntimeError("scenario exploded")
+    r = run_one(Scenario(name="boom", fn=boom), BenchContext())
+    assert r.status == "fail" and not r.ok
+    assert "scenario exploded" in r.error and "RuntimeError" in r.error
+    doc = make_doc(r.name, r.metrics, status=r.status, error=r.error,
+                   wall_s=r.wall_s)
+    validate(doc)                        # fail docs are schema-valid too
+    assert doc["status"] == "fail" and "exploded" in doc["error"]
+
+
+def test_run_one_rejects_non_metric_returns():
+    r = run_one(Scenario(name="bad", fn=lambda ctx: {"x": 1.0}),
+                BenchContext())
+    assert r.status == "fail" and "dict[str, Metric]" in r.error
+
+
+def test_exit_code_semantics():
+    from repro.bench import exit_code
+    ok = run_one(Scenario(name="ok", fn=lambda ctx: {"x": counter(1)}),
+                 BenchContext())
+    bad = run_one(Scenario(name="bad", fn=lambda ctx: 1 / 0),
+                  BenchContext())
+    assert exit_code([ok]) == 0
+    assert exit_code([ok, bad]) == 1
+    assert exit_code([]) == 1            # an empty run must not gate green

@@ -248,6 +248,51 @@ def test_radix_eviction_is_leaf_first_lru_and_respects_refcounts():
     assert kv.free_page_count == kv.usable_pages
 
 
+def test_radix_eviction_is_hit_rate_aware_cold_first():
+    kv = _bare_kv()
+    idx = RadixPrefixCache(kv)
+    # chain `hot`: inserted FIRST (older) but earns lookup hits
+    s = kv.alloc_slot()
+    kv.ensure(s, 4)
+    hot = kv.owned_pages(s)
+    idx.insert(np.asarray([1, 2, 3, 4]), hot)
+    kv.release(s)
+    # chain `cold`: inserted later (more recent tick), never looked up
+    s2 = kv.alloc_slot()
+    kv.ensure(s2, 4)
+    cold = kv.owned_pages(s2)
+    idx.insert(np.asarray([50, 51, 52, 53]), cold)
+    kv.release(s2)
+    for _ in range(3):                       # warm the hot chain
+        assert idx.lookup(np.asarray([1, 2, 3, 4]))[0] == 4
+    # re-insert cold so its last_used tick is the newest of all nodes:
+    # pure LRU would now evict `hot`; hit-aware eviction must not
+    idx.insert(np.asarray([50, 51, 52, 53]), cold)
+    assert idx.cached_pages() == 2
+    assert idx.evict(1) == 1
+    # cold-first: the recent-but-never-hit chain dies, the hot one lives
+    assert idx.lookup(np.asarray([1, 2, 3, 4]))[0] == 4
+    assert idx.lookup(np.asarray([50, 51, 52, 53]))[0] == 0
+    assert idx.evictions >= 1
+
+
+def test_radix_hit_rate_counters():
+    kv = _bare_kv()
+    idx = RadixPrefixCache(kv)
+    s = kv.alloc_slot()
+    kv.ensure(s, 4)
+    idx.insert(np.asarray([1, 2, 3, 4]), kv.owned_pages(s))
+    kv.release(s)
+    assert idx.lookups == 0 and idx.hit_rate == 0.0
+    idx.lookup(np.asarray([1, 2, 3, 4]))     # match
+    idx.lookup(np.asarray([9, 9, 9, 9]))     # miss
+    assert idx.lookups == 2
+    # `hits` counts admissions the scheduler served from the index; the
+    # miss lookup must not move it
+    idx.hits += 1                            # scheduler contract for the match
+    assert idx.hit_rate == pytest.approx(0.5)
+
+
 def test_radix_survives_compact_remap():
     cfg = _tiny_cfg()
     kv = PagedKVCache(cfg, n_pages=9, page_size=4, max_seqs=2,

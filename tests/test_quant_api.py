@@ -254,6 +254,44 @@ def test_sensitivity_sweep_scores_and_suggests():
     assert rules5 and all(r.bits == 6 for r in rules5)
 
 
+def test_suggest_overrides_bytes_budget_greedy():
+    from repro.quant import suggest_overrides
+    from repro.quant.search import LeafScore, bump_cost_bytes
+
+    def leaf(path, err3, err4, params):
+        return LeafScore(path=path, err={2: err3 + 1, 3: err3, 4: err4},
+                         params=params)
+
+    # bumping w3 -> w4 costs params/8 bytes (one extra sign bitplane)
+    big = leaf("blocks.L0.ffn.w1", 0.40, 0.10, 8192)    # cost 1024, gain .30
+    mid = leaf("blocks.L0.attn.wq", 0.20, 0.02, 2048)   # cost  256, gain .18
+    tiny = leaf("blocks.L0.attn.wv", 0.09, 0.01, 512)   # cost   64, gain .08
+    flat = leaf("blocks.L0.attn.wo", 0.05, 0.05, 512)   # gain 0: never picked
+    scores = [big, mid, tiny, flat]
+    assert bump_cost_bytes(big, 3, 4) == 1024
+
+    # gain/byte ranks mid (7.0e-4) > tiny (1.25e-3? no: .08/64=1.25e-3)
+    # tiny: .08/64 = 1.25e-3, mid: .18/256 = 7.0e-4, big: .30/1024 = 2.9e-4
+    rules = suggest_overrides(scores, base_bits=3, bytes_budget=320)
+    assert [r.pattern for r in rules] == [tiny.path, mid.path]
+    assert all(r.bits == 4 for r in rules)
+
+    # a leaf too large for the remaining budget is skipped, not blocking:
+    # budget 1100 takes tiny (64) + mid (256) then still fits big? 320
+    # spent, 780 left < 1024 -> big skipped, nothing else fits
+    rules = suggest_overrides(scores, base_bits=3, bytes_budget=1100)
+    assert [r.pattern for r in rules] == [tiny.path, mid.path]
+
+    # big budget takes every leaf with positive gain, never the flat one
+    rules = suggest_overrides(scores, base_bits=3, bytes_budget=10_000)
+    assert {r.pattern for r in rules} == {big.path, mid.path, tiny.path}
+
+    # zero budget buys nothing; negative budget is an error
+    assert suggest_overrides(scores, base_bits=3, bytes_budget=0) == ()
+    with pytest.raises(ValueError):
+        suggest_overrides(scores, base_bits=3, bytes_budget=-1)
+
+
 # ---------------------------------------------------------------------------
 # streaming calibration
 # ---------------------------------------------------------------------------

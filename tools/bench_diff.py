@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""CI regression gate: diff a benchmark run against committed baselines.
+
+Compares every BENCH_<name>.json under --baseline (the committed
+trajectory, artifacts/bench_baselines/) against the same scenario's
+document under --run, metric by metric, using each baseline metric's
+own noise band scaled by --noise-scale (CI uses a wide scale on shared
+CPU runners; deterministic counters carry a 0 band and stay exact at
+any scale). Exits nonzero on any regression past its band, on a
+scenario/metric that disappeared from the run, or on schema-invalid
+documents. The verdict logic lives in src/repro/bench/diff.py and is
+pure, so the same inputs always produce the same exit code.
+
+  python tools/bench_diff.py --run artifacts/bench \\
+      --baseline artifacts/bench_baselines [--noise-scale 4]
+
+  # adopt the current run as the new committed baseline (re-baselining
+  # after an intentional perf change; commit the result)
+  python tools/bench_diff.py --run artifacts/bench --update
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.bench import diff as bdiff  # noqa: E402
+from repro.bench import schema  # noqa: E402
+
+DEFAULT_BASELINE = ROOT / "artifacts" / "bench_baselines"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_*.json runs against committed baselines")
+    ap.add_argument("--run", required=True, metavar="DIR",
+                    help="directory holding the fresh BENCH_*.json run")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    metavar="DIR", help="committed baseline directory "
+                    "(default artifacts/bench_baselines)")
+    ap.add_argument("--noise-scale", type=float, default=1.0,
+                    help="multiply every baseline noise band (use > 1 on "
+                    "noisy shared-CPU runners; 0-band counters stay exact)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the run's documents over the baselines "
+                    "instead of gating (intentional re-baseline)")
+    args = ap.parse_args(argv)
+
+    try:
+        runs = schema.load_dir(args.run)
+    except schema.BenchSchemaError as e:
+        print(f"invalid run document: {e}", file=sys.stderr)
+        return 1
+    if not runs:
+        print(f"no {schema.PREFIX}*.json under {args.run}", file=sys.stderr)
+        return 1
+
+    if args.update:
+        dest = Path(args.baseline)
+        dest.mkdir(parents=True, exist_ok=True)
+        for name in sorted(runs):
+            src = schema.bench_path(args.run, name)
+            shutil.copy2(src, dest / src.name)
+            print(f"baselined {name} -> {dest / src.name}")
+        print(f"{len(runs)} baseline(s) updated; review + commit "
+              f"{dest} to adopt them")
+        return 0
+
+    try:
+        baselines = schema.load_dir(args.baseline)
+    except schema.BenchSchemaError as e:
+        print(f"invalid baseline document: {e}", file=sys.stderr)
+        return 1
+    if not baselines:
+        print(f"no baselines under {args.baseline}; run with --update "
+              f"to create them", file=sys.stderr)
+        return 1
+
+    for w in bdiff.fingerprint_mismatches(baselines, runs):
+        print(f"WARNING: {w}")
+
+    verdicts = bdiff.diff_all(baselines, runs,
+                              noise_scale=args.noise_scale)
+    print(bdiff.format_report(verdicts))
+    failed = [v for v in verdicts if v.failed]
+    gated = sum(1 for v in verdicts if v.status in ("ok", "regressed"))
+    if failed:
+        print(f"\n{len(failed)} regression(s) past the noise band "
+              f"(noise_scale={args.noise_scale:g}):")
+        for v in failed:
+            where = f"{v.scenario}/{v.metric}" if v.metric else v.scenario
+            if v.status == "missing":
+                print(f"  {where}: missing from the run")
+            else:
+                print(f"  {where}: {v.base_value:.6g} -> "
+                      f"{v.run_value:.6g} (worse by {v.worse_by:+.1%}, "
+                      f"band {v.band:.1%})")
+        return 1
+    print(f"\nno regressions ({gated} gated metric(s) across "
+          f"{len(baselines)} scenario(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
