@@ -20,8 +20,8 @@ import argparse
 import sys
 
 # importing the suite modules populates the scenario registry
-from benchmarks import (prefix_cache_ops, serve_throughput,  # noqa: F401
-                        table4_speed)
+from benchmarks import (kv_capacity, prefix_cache_ops,  # noqa: F401
+                        serve_throughput, table4_speed)
 from repro.bench import (Metric, available_scenarios, exit_code,
                          register_scenario, run_scenarios)
 

@@ -198,6 +198,19 @@ def cache_pspec(cfg, path, leaf, mesh) -> P:
         # (G, P, page, H, hd): pages across data, kv heads across model
         return _guard(shape, P(None, data_ax, None, model_ax, None), sizes)
 
+    # binary-coded pool leaves (quant/kv.py layout): same placement —
+    # pages ride the data axis, kv heads the model axis — applied to the
+    # codes and both scale leaves so a page's codes and scales always
+    # land on the same devices
+    if name in ("k_codes", "v_codes", "k_alphas", "v_alphas") \
+            and len(shape) == 6:
+        # (G, P, page, H, bits, hd/32) / (G, P, page, H, Gk, bits)
+        return _guard(shape, P(None, data_ax, None, model_ax, None, None),
+                      sizes)
+    if name in ("k_betas", "v_betas") and len(shape) == 5:
+        # (G, P, page, H, Gk)
+        return _guard(shape, P(None, data_ax, None, model_ax, None), sizes)
+
     if name in ("k", "v") and len(shape) == 5:
         G, B, H, S, hd = shape
         batch_ax = data_ax if _div(B, data_ax, sizes) else None

@@ -3,6 +3,8 @@
 (paged_attention), and ref.py oracles."""
 from repro.kernels import ops, ref
 from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_quant)
 
-__all__ = ["ops", "ref", "bcq_matmul", "bcq_gemv", "paged_attention"]
+__all__ = ["ops", "ref", "bcq_matmul", "bcq_gemv", "paged_attention",
+           "paged_attention_quant"]

@@ -29,10 +29,36 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+WORD = 32
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
+
+
+def _fold(t, ctx, q, k, v, m_ref, l_ref, acc_ref, *, page_size, scale,
+          window, cap):
+    """Fold one page of fp32 K/V into the flash accumulator scratch.
+    q (Hkv, rep, hd); k/v (page, Hkv, hd)."""
+    logits = jnp.einsum("hrd,phd->hrp", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    j = t * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, page_size), 2)
+    ok = j < ctx
+    if window is not None:
+        ok &= (ctx - 1 - j) < window
+    logits = jnp.where(ok, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    r = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[..., None])
+    l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * r[..., None] + jnp.einsum(
+        "hrp,phd->hrd", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
 
 
 def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
@@ -51,28 +77,61 @@ def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     @pl.when(t * page_size < ctx)
     def _fold_page():
-        q = q_ref[0].astype(jnp.float32)                  # (Hkv, rep, hd)
-        k = k_ref[0].astype(jnp.float32)                  # (page, Hkv, hd)
-        v = v_ref[0].astype(jnp.float32)
-        logits = jnp.einsum("hrd,phd->hrp", q, k,
-                            preferred_element_type=jnp.float32) * scale
-        if cap is not None:
-            logits = cap * jnp.tanh(logits / cap)
-        j = t * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (1, 1, page_size), 2)
-        ok = j < ctx
-        if window is not None:
-            ok &= (ctx - 1 - j) < window
-        logits = jnp.where(ok, logits, NEG_INF)
+        _fold(t, ctx, q_ref[0].astype(jnp.float32),
+              k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
+              m_ref, l_ref, acc_ref, page_size=page_size, scale=scale,
+              window=window, cap=cap)
 
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
-        r = jnp.exp(m_prev - m_new)
-        p = jnp.exp(logits - m_new[..., None])
-        l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=-1)
-        acc_ref[...] = acc_ref[...] * r[..., None] + jnp.einsum(
-            "hrp,phd->hrd", p, v, preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+    @pl.when(t == pages_per_seq - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _expand_page(codes, alphas, betas, hd: int):
+    """VMEM dequant of one binary-coded page (the bcq_matmul expand,
+    re-oriented for the KV layout): codes (page, Hkv, bits, hd/32) u32,
+    alphas (page, Hkv, G, bits), betas (page, Hkv, G) -> fp32
+    (page, Hkv, hd). Shift-unpack the sign bitplanes, then a statically
+    unrolled per-bit multiply-add over the group-broadcast alphas."""
+    page, Hkv, bits, hdw = codes.shape
+    G = betas.shape[-1]
+    gs = hd // G
+    shifts = jax.lax.broadcasted_iota(jnp.uint32,
+                                      (1, 1, 1, 1, WORD), 4)
+    planes = (codes[..., None] >> shifts) & jnp.uint32(1)
+    signs = (2.0 * planes.astype(jnp.float32) - 1.0).reshape(
+        page, Hkv, bits, G, gs)
+    acc = jnp.broadcast_to(betas[..., None].astype(jnp.float32),
+                           (page, Hkv, G, gs))
+    for i in range(bits):
+        acc = acc + alphas[..., i, None].astype(jnp.float32) * \
+            signs[:, :, i]
+    return acc.reshape(page, Hkv, hd)
+
+
+def _kernel_quant(bt_ref, cl_ref, q_ref, kc_ref, ka_ref, kb_ref, vc_ref,
+                  va_ref, vb_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  page_size: int, pages_per_seq: int, scale: float,
+                  window, cap, hd: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = cl_ref[b]
+
+    @pl.when(t * page_size < ctx)
+    def _fold_page():
+        k = _expand_page(kc_ref[0], ka_ref[0], kb_ref[0], hd)
+        v = _expand_page(vc_ref[0], va_ref[0], vb_ref[0], hd)
+        _fold(t, ctx, q_ref[0].astype(jnp.float32), k, v,
+              m_ref, l_ref, acc_ref, page_size=page_size, scale=scale,
+              window=window, cap=cap)
 
     @pl.when(t == pages_per_seq - 1)
     def _flush():
@@ -121,3 +180,64 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(block_tables, ctx_lens, q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "cap", "interpret"))
+def paged_attention_quant(q, k_codes, k_alphas, k_betas, v_codes,
+                          v_alphas, v_betas, block_tables, ctx_lens, *,
+                          window=None, cap=None, interpret=False):
+    """Fused-dequant paged decode over a binary-coded page pool
+    (quant/kv.py layout): q (B, Hkv, rep, hd); codes
+    (P, page, Hkv, bits, hd/32) u32; alphas (P, page, Hkv, G, bits);
+    betas (P, page, Hkv, G); block_tables (B, T); ctx_lens (B,).
+
+    Same grid/flash structure as `paged_attention`, but each grid step
+    streams a page's *codes + scales* HBM->VMEM (bits/8 + scale bytes
+    per entry instead of 2-4) and expands them to fp32 inside the
+    accumulator loop — the bcq_matmul fusion argument applied to the KV
+    pool: decode is bandwidth-bound, so shrinking the pages shrinks the
+    time. Returns (B, Hkv, rep, hd) in q.dtype."""
+    B, Hkv, rep, hd = q.shape
+    _, page_size, _, bits, hdw = k_codes.shape
+    G = k_betas.shape[-1]
+    T = block_tables.shape[1]
+    scale = hd ** -0.5
+
+    def page_spec(shape):
+        return pl.BlockSpec((1,) + shape,
+                            lambda b, t, bt, cl:
+                            (bt[b, t],) + (0,) * len(shape))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, Hkv, rep, hd),
+                         lambda b, t, bt, cl: (b, 0, 0, 0)),
+            page_spec((page_size, Hkv, bits, hdw)),   # k codes
+            page_spec((page_size, Hkv, G, bits)),     # k alphas
+            page_spec((page_size, Hkv, G)),           # k betas
+            page_spec((page_size, Hkv, bits, hdw)),   # v codes
+            page_spec((page_size, Hkv, G, bits)),     # v alphas
+            page_spec((page_size, Hkv, G)),           # v betas
+        ],
+        out_specs=pl.BlockSpec((1, Hkv, rep, hd),
+                               lambda b, t, bt, cl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, rep), jnp.float32),       # running max
+            pltpu.VMEM((Hkv, rep), jnp.float32),       # running denom
+            pltpu.VMEM((Hkv, rep, hd), jnp.float32),   # weighted acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_quant, page_size=page_size,
+                          pages_per_seq=T, scale=scale, window=window,
+                          cap=cap, hd=hd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, ctx_lens, q, k_codes, k_alphas, k_betas,
+      v_codes, v_alphas, v_betas)

@@ -42,6 +42,25 @@ def bcq_matmul_ref(x, codes, alphas, betas, k_in: int):
     return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w).astype(x.dtype)
 
 
+def _paged_attend(q, k, v, ctx_lens, *, window, cap):
+    """Decode-time masked softmax over already-gathered K/V:
+    q (B, Hkv, rep, hd); k/v (B, Hkv, K, hd); ctx_lens (B,)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    j = jnp.arange(k.shape[2])[None, :]
+    ok = j < ctx_lens[:, None]
+    if window is not None:
+        ok &= (ctx_lens[:, None] - 1 - j) < window
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhrk,bhkd->bhrd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
                         window=None, cap=None):
     """q (B, Hkv, rep, hd); k_pages/v_pages (P, page, Hkv, hd);
@@ -52,21 +71,32 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
     # gather: (B, T, page, Hkv, hd) -> (B, Hkv, T*page, hd)
     k = k_pages[block_tables].reshape(B, T * page, Hkv, hd)
     v = v_pages[block_tables].reshape(B, T * page, Hkv, hd)
-    k = k.transpose(0, 2, 1, 3)
-    v = v.transpose(0, 2, 1, 3)
-    logits = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) * hd ** -0.5
-    if cap is not None:
-        logits = cap * jnp.tanh(logits / cap)
-    j = jnp.arange(T * page)[None, :]
-    ok = j < ctx_lens[:, None]
-    if window is not None:
-        ok &= (ctx_lens[:, None] - 1 - j) < window
-    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
-    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
-    w = w / jnp.sum(w, axis=-1, keepdims=True)
-    out = jnp.einsum("bhrk,bhkd->bhrd", w, v.astype(jnp.float32))
-    return out.astype(q.dtype)
+    return _paged_attend(q, k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), ctx_lens,
+                         window=window, cap=cap)
+
+
+def paged_attention_quant_ref(q, k_codes, k_alphas, k_betas, v_codes,
+                              v_alphas, v_betas, block_tables, ctx_lens,
+                              *, window=None, cap=None):
+    """Oracle for the fused-dequant kernel, and the non-TPU execution
+    path for quantized paged decode: gather each sequence's binary-coded
+    pages through the block table, expand codes -> fp32 K/V
+    (quant/kv.py layout: codes (P, page, Hkv, bits, hd/32) u32, alphas
+    (P, page, Hkv, G, bits), betas (P, page, Hkv, G)), then the same
+    masked softmax as paged_attention_ref."""
+    from repro.quant.kv import kv_dequantize
+
+    B, Hkv, rep, hd = q.shape
+    page = k_codes.shape[1]
+    T = block_tables.shape[1]
+    k = kv_dequantize(k_codes[block_tables], k_alphas[block_tables],
+                      k_betas[block_tables])       # (B, T, page, Hkv, hd)
+    v = kv_dequantize(v_codes[block_tables], v_alphas[block_tables],
+                      v_betas[block_tables])
+    k = k.reshape(B, T * page, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T * page, Hkv, hd).transpose(0, 2, 1, 3)
+    return _paged_attend(q, k, v, ctx_lens, window=window, cap=cap)
 
 
 def bcq_matmul_bitplane_ref(x, codes, alphas, betas, k_in: int):

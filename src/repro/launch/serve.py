@@ -67,6 +67,13 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--batch-size", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="binary-code the KV page pool at this many bits "
+                         "per coefficient (0 = raw fp pages); implies "
+                         "the paged cache backend")
+    ap.add_argument("--kv-group-size", type=int, default=0,
+                    help="head_dim entries per KV scale group (0 = one "
+                         "group per head vector); must divide head_dim")
     args = ap.parse_args()
 
     if args.devices:
@@ -171,10 +178,21 @@ def main():
             batch = -(-batch // d) * d
             print(f"batch_size rounded {args.batch_size} -> {batch} "
                   f"(must split over {d} data shards)")
+    paged = mesh is not None or args.kv_bits > 0
     eng = ServeEngine(cfg, params, batch_size=batch,
                       max_len=160, dtype="float32",
-                      cache_kind="paged" if mesh is not None else "dense",
-                      mesh=mesh)
+                      cache_kind="paged" if paged else "dense",
+                      mesh=mesh, kv_bits=args.kv_bits,
+                      kv_group_size=args.kv_group_size)
+    if args.kv_bits:
+        kv = eng.kv
+        raw = kv.__class__(cfg, n_pages=kv.n_pages,
+                           page_size=kv.page_size, max_seqs=kv.max_seqs,
+                           dtype="float32",
+                           create_pool=False).bytes_per_page()
+        print(f"quantized KV cache: {args.kv_bits}-bit binary-coded "
+              f"pages, {kv.bytes_per_page()} B/page vs {raw} B/page raw "
+              f"({raw / kv.bytes_per_page():.1f}x capacity)")
     if mesh is not None:
         kv = eng.kv
         print(f"sharded page pool: {kv.n_shards} shards x "

@@ -169,13 +169,49 @@ def init_kv_cache(cfg, spec, batch, max_len, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def init_paged_kv(cfg, n_pages, page_size, dtype):
+def init_paged_kv(cfg, n_pages, page_size, dtype, kv_bits=0,
+                  kv_group_size=0):
     """Global page pool for one attention layer: every sequence's K/V
     pages live here; ownership is the block table's concern
-    (serve/kv_cache.py). Page 0 is the allocator's null page."""
+    (serve/kv_cache.py). Page 0 is the allocator's null page.
+
+    With `kv_bits > 0` pages store binary-coded K/V (quant/kv.py): sign
+    bitplanes packed along head_dim plus per-(token, head, group) alpha/
+    beta scales, quantized on-write by the decode/extend/scatter paths
+    and expanded inside the attention kernels. The presence of the
+    "k_codes" leaf is what selects the quantized path downstream."""
     hd = cfg.resolved_head_dim
-    shape = (n_pages, page_size, cfg.n_kv_heads, hd)
-    return {"k_pages": jnp.zeros(shape, dtype), "v_pages": jnp.zeros(shape, dtype)}
+    if not kv_bits:
+        shape = (n_pages, page_size, cfg.n_kv_heads, hd)
+        return {"k_pages": jnp.zeros(shape, dtype),
+                "v_pages": jnp.zeros(shape, dtype)}
+    from repro.quant.kv import kv_layout
+    G, hdw = kv_layout(hd, kv_bits, kv_group_size)
+    Hkv = cfg.n_kv_heads
+    lead = (n_pages, page_size, Hkv)
+    pool = {}
+    for side in ("k", "v"):
+        pool[f"{side}_codes"] = jnp.zeros(lead + (kv_bits, hdw),
+                                          jnp.uint32)
+        pool[f"{side}_alphas"] = jnp.zeros(lead + (G, kv_bits),
+                                           jnp.float32)
+        pool[f"{side}_betas"] = jnp.zeros(lead + (G,), jnp.float32)
+    return pool
+
+
+def paged_kv_page_bytes(cfg, page_size, dtype, kv_bits=0,
+                        kv_group_size=0) -> int:
+    """Device bytes one page id costs across the whole model: every
+    attention layer (x the n_groups scan stack) holds a K and a V page
+    of `page_size` tokens per KV head. The single owner of the
+    bytes-per-page arithmetic (EngineStats, the capacity bench and the
+    serve CLI all read it)."""
+    from repro.quant.kv import kv_bytes_per_token_head
+    itemsize = jnp.dtype(dtype or cfg.dtype).itemsize
+    per_vec = kv_bytes_per_token_head(cfg.resolved_head_dim, kv_bits,
+                                      kv_group_size, itemsize)
+    n_attn = sum(1 for s in cfg.pattern if s.kind == "attn") * cfg.n_groups
+    return 2 * page_size * cfg.n_kv_heads * per_vec * n_attn
 
 
 # None = auto (Pallas kernel iff backend is TPU; the pure-jnp gather
@@ -189,49 +225,121 @@ def _use_paged_kernel() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def paged_kv_bits(cache) -> int:
+    """kv_bits of a paged layer cache (0 = unquantized). The layout is
+    self-describing: bits/groups are leaf shapes, so jit wrappers need
+    no extra static arguments to dispatch."""
+    return cache["k_codes"].shape[-2] if "k_codes" in cache else 0
+
+
+def _quant_scatter(cache, side, new, pid, off, mask=None):
+    """Quantize-on-write: binary-code `new` K or V vectors (..., hd) and
+    scatter codes+scales into the pool at (pid, off). With `mask`
+    (matching new's leading dims), False rows re-write the null page's
+    slot-0 content instead (the extend path's padding trick)."""
+    from repro.quant.kv import kv_quantize
+    bits = cache[f"{side}_codes"].shape[-2]
+    G = cache[f"{side}_betas"].shape[-1]
+    gs = new.shape[-1] // G
+    codes, alphas, betas = kv_quantize(new, bits, gs)
+    out = dict(cache)
+    for name, val in ((f"{side}_codes", codes),
+                      (f"{side}_alphas", alphas),
+                      (f"{side}_betas", betas)):
+        pool = cache[name]
+        if mask is not None:
+            m = mask.reshape(mask.shape + (1,) * (val.ndim - mask.ndim))
+            null = pool[0, 0].reshape(
+                (1,) * mask.ndim + pool.shape[2:])
+            val = jnp.where(m, val, null)
+        out[name] = pool.at[pid, off].set(val.astype(pool.dtype))
+    return out
+
+
+def _gather_dequant(cache, side, block_tables, hd):
+    """Gather + expand a sequence's binary-coded pages:
+    -> (B, T*page, Hkv, hd) fp32 (the extend path's dense view)."""
+    from repro.quant.kv import kv_dequantize
+    bt = block_tables
+    B, T = bt.shape
+    page = cache[f"{side}_codes"].shape[1]
+    Hkv = cache[f"{side}_codes"].shape[2]
+    x = kv_dequantize(cache[f"{side}_codes"][bt],
+                      cache[f"{side}_alphas"][bt],
+                      cache[f"{side}_betas"][bt])
+    return x.reshape(B, T * page, Hkv, hd)
+
+
 def attn_decode_paged(cfg, spec, p, x, cache, block_tables, pos):
     """Single-token decode against a paged KV pool.
 
-    x: (B, 1, D); cache: {"k_pages","v_pages"} (P, page, Hkv, hd);
-    block_tables: (B, T) int32 page ids; pos: (B,) absolute positions.
-    Writes the new K/V into page block_tables[b, pos//page] at offset
-    pos%page, then attends over the sequence's gathered pages. Window
-    layers mask by absolute position (no rolling buffer — pages beyond
-    the window stay allocated; the scheduler may reclaim them later).
-    Returns (y, cache)."""
+    x: (B, 1, D); cache: {"k_pages","v_pages"} (P, page, Hkv, hd) — or
+    the binary-coded layout {"k_codes","k_alphas","k_betas","v_..."}
+    (init_paged_kv(kv_bits=...)), where the new token's K/V is quantized
+    before the scatter and the kernel dequantizes inside its accumulator
+    loop; block_tables: (B, T) int32 page ids; pos: (B,) absolute
+    positions. Writes the new K/V into page block_tables[b, pos//page]
+    at offset pos%page, then attends over the sequence's gathered pages.
+    Window layers mask by absolute position (no rolling buffer — pages
+    beyond the window stay allocated; the scheduler may reclaim them
+    later). Returns (y, cache)."""
     B = x.shape[0]
     hd = cfg.resolved_head_dim
     q, k, v = _project_qkv(cfg, p, x)          # (B,1,H,hd)
     q = rope(q, pos[:, None], cfg.rope_theta)
     k = rope(k, pos[:, None], cfg.rope_theta)
 
-    kp, vp = cache["k_pages"], cache["v_pages"]
-    page = kp.shape[1]
+    quant = paged_kv_bits(cache) > 0
+    page = (cache["k_codes"] if quant else cache["k_pages"]).shape[1]
     b_idx = jnp.arange(B)
     pid = block_tables[b_idx, pos // page]
     off = pos % page
-    kp = kp.at[pid, off].set(k[:, 0].astype(kp.dtype))
-    vp = vp.at[pid, off].set(v[:, 0].astype(vp.dtype))
+    if quant:
+        cache = _quant_scatter(cache, "k", k[:, 0], pid, off)
+        cache = _quant_scatter(cache, "v", v[:, 0], pid, off)
+    else:
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        kp = kp.at[pid, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[pid, off].set(v[:, 0].astype(vp.dtype))
+        cache = {"k_pages": kp, "v_pages": vp}
 
     qg = q[:, 0].reshape(B, cfg.n_kv_heads,
                          cfg.n_heads // cfg.n_kv_heads, hd)
     ctx = pos + 1
-    if _use_paged_kernel():
+    interpret = jax.default_backend() != "tpu"
+    if quant:
+        if _use_paged_kernel():
+            from repro.kernels.paged_attention import paged_attention_quant
+            out = paged_attention_quant(
+                qg, cache["k_codes"], cache["k_alphas"], cache["k_betas"],
+                cache["v_codes"], cache["v_alphas"], cache["v_betas"],
+                block_tables, ctx, window=spec.window,
+                cap=cfg.attn_softcap, interpret=interpret)
+        else:
+            from repro.kernels.ref import paged_attention_quant_ref
+            out = paged_attention_quant_ref(
+                qg, cache["k_codes"], cache["k_alphas"], cache["k_betas"],
+                cache["v_codes"], cache["v_alphas"], cache["v_betas"],
+                block_tables, ctx, window=spec.window,
+                cap=cfg.attn_softcap)
+    elif _use_paged_kernel():
         from repro.kernels.paged_attention import paged_attention
-        out = paged_attention(qg, kp, vp, block_tables, ctx,
+        out = paged_attention(qg, cache["k_pages"], cache["v_pages"],
+                              block_tables, ctx,
                               window=spec.window, cap=cfg.attn_softcap,
-                              interpret=jax.default_backend() != "tpu")
+                              interpret=interpret)
     else:
         # gather path: the kernel's oracle doubles as the non-TPU
         # execution path (same fp32 masked softmax the dense attn_decode
         # computes, so paged and dense engines agree token-for-token on
         # the fp32 CPU tests)
         from repro.kernels.ref import paged_attention_ref
-        out = paged_attention_ref(qg, kp, vp, block_tables, ctx,
+        out = paged_attention_ref(qg, cache["k_pages"], cache["v_pages"],
+                                  block_tables, ctx,
                                   window=spec.window, cap=cfg.attn_softcap)
     out = out.reshape(B, 1, cfg.n_heads * hd)
     y = linear(out, p["wo"])
-    return y, {"k_pages": kp, "v_pages": vp}
+    return y, cache
 
 
 def attn_extend_paged(cfg, spec, p, h, cache, block_tables, start_pos,
@@ -248,23 +356,30 @@ def attn_extend_paged(cfg, spec, p, h, cache, block_tables, start_pos,
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
-    kp, vp = cache["k_pages"], cache["v_pages"]
-    page = kp.shape[1]
+    quant = paged_kv_bits(cache) > 0
+    page = (cache["k_codes"] if quant else cache["k_pages"]).shape[1]
     pid = jnp.take_along_axis(block_tables, positions // page, axis=1)
     off = positions % page
     # masked scatter: padding tokens write to the null page (id 0) slot 0,
     # re-writing its current content (a no-op by construction)
     pid = jnp.where(chunk_mask, pid, 0)
     off = jnp.where(chunk_mask, off, 0)
-    m4 = chunk_mask[:, :, None, None]
-    kw = jnp.where(m4, k.astype(kp.dtype), kp[0, 0][None, None])
-    vw = jnp.where(m4, v.astype(vp.dtype), vp[0, 0][None, None])
-    kp = kp.at[pid, off].set(kw)
-    vp = vp.at[pid, off].set(vw)
-
     T = block_tables.shape[1]
-    ck = kp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
-    cv = vp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
+    if quant:
+        cache = _quant_scatter(cache, "k", k, pid, off, mask=chunk_mask)
+        cache = _quant_scatter(cache, "v", v, pid, off, mask=chunk_mask)
+        ck = _gather_dequant(cache, "k", block_tables, hd)
+        cv = _gather_dequant(cache, "v", block_tables, hd)
+    else:
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        m4 = chunk_mask[:, :, None, None]
+        kw = jnp.where(m4, k.astype(kp.dtype), kp[0, 0][None, None])
+        vw = jnp.where(m4, v.astype(vp.dtype), vp[0, 0][None, None])
+        kp = kp.at[pid, off].set(kw)
+        vp = vp.at[pid, off].set(vw)
+        cache = {"k_pages": kp, "v_pages": vp}
+        ck = kp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
+        cv = vp[block_tables].reshape(B, T * page, cfg.n_kv_heads, hd)
     ck = ck.transpose(0, 2, 1, 3)
     cv = cv.transpose(0, 2, 1, 3)
     qg = q.reshape(B, C, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, hd)
@@ -281,7 +396,7 @@ def attn_extend_paged(cfg, spec, p, h, cache, block_tables, start_pos,
     out = jnp.einsum("bhrqk,bhkd->bqhrd", w, cv.astype(q.dtype))
     out = out.reshape(B, C, cfg.n_heads * hd)
     y = linear(out, p["wo"])
-    return y, {"k_pages": kp, "v_pages": vp}
+    return y, cache
 
 
 def attn_decode(cfg, spec, p, x, cache, pos):

@@ -241,11 +241,17 @@ def init_cache(cfg, batch, max_len, dtype=None):
     return cache
 
 
-def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None):
+def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None,
+                     kv_bits=0, kv_group_size=0):
     """Paged cache pytree: attention layers get a global K/V page pool
     (n_pages, page_size, Hkv, hd) shared by all sequences; mamba layers
     keep per-slot constant-size state (max_seqs rows — recurrent state
-    doesn't page). Same (n_groups,)-stacked layout as init_cache."""
+    doesn't page). Same (n_groups,)-stacked layout as init_cache.
+
+    `kv_bits > 0` stores pages binary-coded (quant/kv.py): packed sign
+    bitplanes + per-(token, head, K-group) alpha/beta scale leaves
+    instead of raw K/V — 4-8x fewer pool bytes per page at serving
+    accuracy (see docs/SERVING.md §Quantized KV cache)."""
     dtype = jnp.dtype(dtype or cfg.dtype)
     if cfg.mla is not None:
         raise NotImplementedError(
@@ -254,7 +260,9 @@ def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None):
     cache = {}
     for i, spec in enumerate(cfg.pattern):
         if spec.kind == "attn":
-            one = attn.init_paged_kv(cfg, n_pages, page_size, dtype)
+            one = attn.init_paged_kv(cfg, n_pages, page_size, dtype,
+                                     kv_bits=kv_bits,
+                                     kv_group_size=kv_group_size)
         else:
             one = mam.init_mamba_cache(cfg, max_seqs, dtype)
         cache[f"L{i}"] = jax.tree.map(
@@ -262,14 +270,25 @@ def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None):
     return cache
 
 
+def is_page_leaf(leaf, n_pages) -> bool:
+    """A paged-pool leaf: page axis at dim 1 after the group stack. Both
+    the raw layout (ndim 5) and the quantized code/alpha/beta leaves
+    (ndim 5-6) match; mamba per-slot state (G, max_seqs, ...) does not
+    (its dim 1 is max_seqs, never n_pages in practice)."""
+    return leaf.ndim >= 5 and leaf.shape[1] == n_pages
+
+
 def copy_pages(cache, src, dst, n_pages):
     """Copy-on-write fork: duplicate page src[i] -> dst[i] in every
     attention layer's K/V pool (paged-cache layout, page axis at dim 1
-    after the group stack; mamba per-slot state is left alone). src/dst
-    are (n,) int32 page ids; (0, 0) pairs are harmless null-page no-ops,
-    used by the engine to pad the copy list to a fixed trace shape."""
+    after the group stack; mamba per-slot state is left alone). On a
+    quantized pool the codes AND the alpha/beta scale leaves all copy —
+    a fork that missed the scales would decode the old page's
+    magnitudes under the new page's signs. src/dst are (n,) int32 page
+    ids; (0, 0) pairs are harmless null-page no-ops, used by the engine
+    to pad the copy list to a fixed trace shape."""
     def move(leaf):
-        if leaf.ndim == 5 and leaf.shape[1] == n_pages:
+        if is_page_leaf(leaf, n_pages):
             return leaf.at[:, dst].set(leaf[:, src])
         return leaf
     return jax.tree.map(move, cache)
@@ -407,7 +426,9 @@ def scatter_prefill_cache(cfg, paged_cache, row_cache, slot, page_ids,
     padded row: attn leaves (G, 1, Hkv, S_pad, hd)) into the paged cache.
     page_ids: (S_pad // page_size,) int32 pages owned by the sequence;
     n_valid: true prompt length (padding K/V is masked out — pages only
-    ever hold live tokens). Mamba state rows land at `slot`."""
+    ever hold live tokens). Mamba state rows land at `slot`. On a
+    binary-coded pool the dense prefill K/V is quantized page-by-page
+    here (quantize-on-write), so pages never hold raw values."""
     out = {}
     for i, spec in enumerate(cfg.pattern):
         key = f"L{i}"
@@ -417,17 +438,44 @@ def scatter_prefill_cache(cfg, paged_cache, row_cache, slot, page_ids,
                 lambda pool, one: pool.at[:, slot].set(one[:, 0]),
                 pooled, row)
             continue
-        page = pooled["k_pages"].shape[2]
+        quant = "k_codes" in pooled
+        page = (pooled["k_codes"] if quant else pooled["k_pages"]).shape[2]
         npg = page_ids.shape[0]
 
-        def put(pool, one):
+        def paged_rows(one):
             # one (G, 1, Hkv, S_pad, hd) -> (G, npg, page, Hkv, hd)
             G, _, Hkv, S_pad, hd = one.shape
             r = one[:, 0].transpose(0, 2, 1, 3)            # (G,S_pad,Hkv,hd)
             pad = npg * page - S_pad
             if pad:
                 r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            r = r.reshape(G, npg, page, Hkv, hd)
+            return r.reshape(G, npg, page, Hkv, hd)
+
+        if quant:
+            from repro.quant.kv import kv_quantize
+
+            bits = pooled["k_codes"].shape[-2]
+            Gk = pooled["k_betas"].shape[-1]
+
+            def put_q(side, one):
+                hd = one.shape[-1]
+                r = paged_rows(one)
+                vals = kv_quantize(r, bits, hd // Gk)
+                keep = (jnp.arange(npg * page) < n_valid).reshape(npg, page)
+                leaves = {}
+                for suffix, val in zip(("codes", "alphas", "betas"), vals):
+                    pool = pooled[f"{side}_{suffix}"]
+                    km = keep.reshape((1, npg, page) + (1,) * (val.ndim - 3))
+                    cur = pool[:, page_ids]
+                    leaves[f"{side}_{suffix}"] = pool.at[:, page_ids].set(
+                        jnp.where(km, val.astype(pool.dtype), cur))
+                return leaves
+
+            out[key] = {**put_q("k", row["k"]), **put_q("v", row["v"])}
+            continue
+
+        def put(pool, one):
+            r = paged_rows(one)
             keep = (jnp.arange(npg * page) < n_valid).reshape(npg, page)
             cur = pool[:, page_ids]
             return pool.at[:, page_ids].set(

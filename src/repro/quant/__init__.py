@@ -1,4 +1,7 @@
-from repro.quant.packing import pack_signs, padded_k, unpack_signs
+from repro.quant.kv import (kv_bytes_per_token_head, kv_dequantize,
+                            kv_layout, kv_quantize)
+from repro.quant.packing import (pack_signs, pack_signs_last, padded_k,
+                                 unpack_signs, unpack_signs_last)
 from repro.quant.qlinear import QuantizedTensor
 from repro.quant.registry import (QuantResult, Quantizer,
                                   available_quantizers, get_quantizer,
@@ -10,6 +13,8 @@ from repro.quant.spec import (QUANTIZABLE, LeafPlan, OverrideRule,
 
 __all__ = [
     "pack_signs", "unpack_signs", "padded_k", "QuantizedTensor",
+    "pack_signs_last", "unpack_signs_last",
+    "kv_quantize", "kv_dequantize", "kv_layout", "kv_bytes_per_token_head",
     "QuantSpec", "OverrideRule", "LeafPlan", "QUANTIZABLE",
     "is_quantizable", "Quantizer", "QuantResult", "register_quantizer",
     "get_quantizer", "available_quantizers", "LeafScore",

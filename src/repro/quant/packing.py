@@ -37,3 +37,24 @@ def unpack_signs(codes, k_in: int):
     b = (codes[..., :, None, :] >> shifts[:, None]) & jnp.uint32(1)
     b = b.reshape(*lead, bits, KW * WORD, N)[..., :k_in, :]
     return (2.0 * b - 1.0).astype(jnp.float32)
+
+
+def pack_signs_last(signs):
+    """Pack along the LAST axis: signs (..., K) bool/int (truthy = +1)
+    -> uint32 (..., K/32). K must be a multiple of 32 (the KV-cache
+    layout pads nothing: head_dim is required to divide WORD). Bit j of
+    word w covers index w*32 + j, matching `pack_signs`."""
+    s = (signs > 0) if signs.dtype != jnp.bool_ else signs
+    *lead, K = s.shape
+    assert K % WORD == 0, f"pack_signs_last needs K % {WORD} == 0, got {K}"
+    s = s.reshape(*lead, K // WORD, WORD).astype(jnp.uint32)
+    shifts = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return jnp.sum(s * shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs_last(codes):
+    """codes (..., K/32) uint32 -> float32 signs (..., K)."""
+    *lead, KW = codes.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    b = (codes[..., None] >> shifts) & jnp.uint32(1)
+    return (2.0 * b - 1.0).astype(jnp.float32).reshape(*lead, KW * WORD)

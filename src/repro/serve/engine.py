@@ -144,8 +144,14 @@ class ServeEngine:
                  dtype=None, greedy=True, cache_kind="dense",
                  page_size=64, n_pages=None, prefill_chunk=None,
                  bucket_prompts=True, watermark=1, prefix_sharing=True,
-                 prefix_max_pages=None, mesh=None):
+                 prefix_max_pages=None, mesh=None, kv_bits=0,
+                 kv_group_size=0):
         assert cache_kind in ("dense", "paged"), cache_kind
+        if kv_bits and cache_kind != "paged":
+            raise ValueError(
+                "kv_bits requires cache_kind='paged': the binary-coded "
+                "KV layout lives in the page pool (quantize-on-write "
+                "needs page-granular scatter)")
         if cache_kind == "paged" and cfg.mla is not None:
             raise NotImplementedError(
                 "cache_kind='paged' does not support MLA latent caches "
@@ -157,6 +163,7 @@ class ServeEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.cache_kind = cache_kind
+        self.kv_bits = int(kv_bits)
         self.mesh = mesh
         # pool shards = the mesh's data-axis size: page blocks land on
         # the same devices as the batch rows whose sequences use them
@@ -206,7 +213,9 @@ class ServeEngine:
                                    page_size=page_size,
                                    max_seqs=batch_size,
                                    max_pages_per_seq=pages_per_seq,
-                                   dtype=dtype, n_shards=n_shards)
+                                   dtype=dtype, n_shards=n_shards,
+                                   kv_bits=kv_bits,
+                                   kv_group_size=kv_group_size)
             self.page_size = page_size
             # prefix sharing skips matched prefill via the extend path,
             # so it has the same attention-only requirement

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.models.model import init_paged_cache
+from repro.models.model import init_paged_cache, is_page_leaf
 
 
 class OutOfPages(Exception):
@@ -70,7 +70,7 @@ class OutOfPages(Exception):
 class PagedKVCache:
     def __init__(self, cfg, *, n_pages, page_size, max_seqs,
                  max_pages_per_seq=None, dtype=None, create_pool=True,
-                 n_shards=1):
+                 n_shards=1, kv_bits=0, kv_group_size=0):
         assert n_pages >= 2, "need at least the null page + one real page"
         assert n_shards >= 1
         assert n_pages % n_shards == 0, \
@@ -86,13 +86,27 @@ class PagedKVCache:
         self.n_shards = int(n_shards)
         self.pages_per_shard = self.n_pages // self.n_shards
         self.seqs_per_shard = self.max_seqs // self.n_shards
-        self.max_pages_per_seq = (int(max_pages_per_seq)
-                                  if max_pages_per_seq
-                                  else self.pages_per_shard - 1)
+        if max_pages_per_seq is None:
+            self.max_pages_per_seq = self.pages_per_shard - 1
+        else:
+            # explicit `is None` test: a falsy 0 must not silently fall
+            # back to the pool-wide default (a sequence that may own
+            # zero pages is a config bug, not a "use the default" ask)
+            self.max_pages_per_seq = int(max_pages_per_seq)
+            if self.max_pages_per_seq < 1:
+                raise ValueError(
+                    f"max_pages_per_seq={max_pages_per_seq!r}: must be "
+                    ">= 1 (omit it or pass None for the per-shard "
+                    "default)")
+        self.kv_bits = int(kv_bits)
+        self.kv_group_size = int(kv_group_size)
+        self._dtype = dtype
         # the property-based allocator tests exercise the accounting
         # without paying for a device pool
         self.pool = (init_paged_cache(cfg, n_pages, page_size, max_seqs,
-                                      dtype) if create_pool else None)
+                                      dtype, kv_bits=self.kv_bits,
+                                      kv_group_size=self.kv_group_size)
+                     if create_pool else None)
         self._created_pool = bool(create_pool)
         self._pool_taken = False
         self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
@@ -127,6 +141,25 @@ class PagedKVCache:
         """The shard's reserve page: masked/inactive rows of that shard
         write there (page 0 for shard 0 and for unsharded pools)."""
         return shard * self.pages_per_shard
+
+    def is_reserve_page(self, pid: int) -> bool:
+        """True for every shard's reserve page — page 0 and each
+        shard block's first page. These are never allocated, so they
+        must never gain references; `pid != 0` alone misses the
+        shard > 0 reserves."""
+        return pid % self.pages_per_shard == 0
+
+    def bytes_per_page(self) -> int:
+        """Device bytes one page id costs across all attention layers
+        (K + V, codes + scales when binary-coded). Host-side math — no
+        pool needed."""
+        from repro.models.attention import paged_kv_page_bytes
+        return paged_kv_page_bytes(
+            self.cfg, self.page_size, self._dtype,
+            kv_bits=self.kv_bits, kv_group_size=self.kv_group_size)
+
+    def pool_bytes(self) -> int:
+        return self.bytes_per_page() * self.n_pages
 
     def take_pool(self):
         """Hand the device pool to the caller (the engine functionally
@@ -264,7 +297,8 @@ class PagedKVCache:
         assert len(page_ids) <= self.max_pages_per_seq
         shard = self.shard_of_slot(slot)
         for idx, pid in enumerate(page_ids):
-            assert pid != 0 and self._refcount[pid] > 0, pid
+            assert not self.is_reserve_page(int(pid)) \
+                and self._refcount[pid] > 0, pid
             assert self.shard_of_page(int(pid)) == shard, \
                 (slot, pid, "cross-shard prefix attach")
             self._owned[slot].append(int(pid))
@@ -315,7 +349,8 @@ class PagedKVCache:
     # ---------------- prefix-index references ----------------
     def ref(self, pid: int) -> None:
         """Take a prefix-index reference on a live page."""
-        assert pid != 0 and self._refcount[pid] > 0, pid
+        assert not self.is_reserve_page(int(pid)) \
+            and self._refcount[pid] > 0, pid
         self._refcount[pid] += 1
 
     def unref(self, pid: int) -> None:
@@ -394,8 +429,9 @@ class PagedKVCache:
         if pool is not None:
             def move(leaf):
                 # page pools have the page axis at dim 1 (after the group
-                # stack); per-slot state (mamba) is left alone
-                if leaf.ndim == 5 and leaf.shape[1] == self.n_pages:
+                # stack); per-slot state (mamba) is left alone. On a
+                # binary-coded pool this moves codes AND scale leaves.
+                if is_page_leaf(leaf, self.n_pages):
                     return leaf[:, jnp.asarray(src)]
                 return leaf
 

@@ -122,7 +122,7 @@ class RadixPrefixCache:
             node.hits += 1
 
     # ---------------- lookup ----------------
-    def lookup(self, tokens, *, max_tokens=None, shard=None):
+    def lookup(self, tokens, *, max_tokens=None, shard=None, count=True):
         """Longest cached prefix of `tokens`, capped at max_tokens.
         Returns (n_matched, [page_ids]) where the pages cover tokens
         [0, n_matched) in order; the last page is partially matched when
@@ -131,8 +131,13 @@ class RadixPrefixCache:
         pages live in that pool shard (the only pages a slot of that
         shard may attach); None matches any single shard's chain.
         Touches matched nodes (recency) and bumps their hit counts
-        (eviction warmth)."""
-        self.lookups += 1
+        (eviction warmth). `count=False` is the scheduler's reclaim-loop
+        retry path: the match is redone (an eviction may have dropped
+        pages) but it is the SAME admission, so the lookup counter and
+        the nodes' warmth stay where the first round put them — the
+        recency touch still happens, since the node really was walked."""
+        if count:
+            self.lookups += 1
         toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
         limit = len(toks) if max_tokens is None else min(max_tokens,
                                                         len(toks))
@@ -151,7 +156,7 @@ class RadixPrefixCache:
                 if child is not None:
                     pages.append(child.page)
                     matched += self.page
-                    self._touch(child, hit=True)
+                    self._touch(child, hit=count)
                     node = child
                     # stay on the matched chain's shard from here on: a
                     # sequence can only attach pages of ONE shard
@@ -170,7 +175,7 @@ class RadixPrefixCache:
             if best is not None:
                 pages.append(best.page)
                 matched += best_lcp
-                self._touch(best, hit=True)
+                self._touch(best, hit=count)
             break
         return matched, pages
 

@@ -151,11 +151,17 @@ class Scheduler:
         if shard is None:
             return None
         free_pages = lambda: self._free_in_shard(shard)
+        # one admission == one lookup in the hit-rate stats, however
+        # many reclaim rounds re-run the match (count=False retries keep
+        # the result fresh without inflating lookups / node hit counters)
+        count = True
         while True:
             shared_tokens, shared_pages = 0, []
             if self.prefix is not None and len(e.prompt) > 1:
                 shared_tokens, shared_pages = self.prefix.lookup(
-                    e.prompt, max_tokens=len(e.prompt) - 1, shard=shard)
+                    e.prompt, max_tokens=len(e.prompt) - 1, shard=shard,
+                    count=count)
+                count = False
             need = self.admission_need(len(e.prompt), resumed=resumed,
                                        shared_tokens=shared_tokens)
             if need > self._usable_in_shard(shard):
@@ -282,7 +288,11 @@ class Scheduler:
             "n_done": len(done),
             "preemptions": self.preemptions,
             "ttft_avg_s": float(np.mean(ttft)) if ttft else 0.0,
-            "tpot_avg_s": float(np.mean([m.tpot_s for m in done])) if done else 0.0,
+            # average over the same filtered sample list as the
+            # percentile export: single-token requests have no
+            # after-first-token interval, and counting their 0.0s
+            # deflated the average the percentiles didn't see
+            "tpot_avg_s": float(np.mean(tpot)) if tpot else 0.0,
             "ttft_samples_s": ttft,
             "tpot_samples_s": tpot,
             "kv_high_water_pages": self.kv.high_water,

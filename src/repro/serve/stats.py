@@ -40,6 +40,11 @@ class EngineStats:
     pages_allocated: int = 0
     cow_forks: int = 0
 
+    # binary-coded KV (0 bits == raw fp pages)
+    kv_bits: int = 0
+    kv_bytes_per_page: int = 0
+    kv_pool_bytes: int = 0
+
     # radix prefix index
     prefix_hits: int = 0
     prefix_lookups: int = 0
@@ -99,6 +104,13 @@ class EngineStats:
             "kv_usable_pages": int(s.get("kv_usable_pages", 0)),
             "pages_allocated": int(s.get("pages_allocated", 0)),
             "cow_forks": int(s.get("cow_forks", 0)),
+            "kv_bits": int(getattr(engine, "kv_bits", 0)),
+            "kv_bytes_per_page": (
+                int(engine.kv.bytes_per_page())
+                if hasattr(engine.kv, "bytes_per_page") else 0),
+            "kv_pool_bytes": (
+                int(engine.kv.pool_bytes())
+                if hasattr(engine.kv, "pool_bytes") else 0),
             "prefix_hits": int(s.get("prefix_hits", 0)),
             "prefix_lookups": int(s.get("prefix_lookups", 0)),
             "prefix_hit_rate": float(s.get("prefix_hit_rate", 0.0)),

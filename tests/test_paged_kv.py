@@ -282,3 +282,11 @@ def test_paged_sustains_more_concurrency_than_dense_budget():
     assert all(len(r.out) == 6 for r in reqs)
     assert max(seen) > dense_slots                 # more live than dense fits
     assert eng.kv.high_water <= budget_tokens // page  # within the budget
+
+
+def test_max_pages_per_seq_zero_raises():
+    """0 is a configuration error (no sequence could ever hold a page),
+    not a request for the default cap — the falsy-fallback regression."""
+    with pytest.raises(ValueError, match="max_pages_per_seq"):
+        PagedKVCache(None, n_pages=8, page_size=4, max_seqs=2,
+                     max_pages_per_seq=0, create_pool=False)

@@ -317,3 +317,47 @@ def test_radix_survives_compact_remap():
     copies = kv.cow_for_write(s2, 2, 6)
     assert len(copies) == 1 and copies[0][0] == pages[0]
     assert kv.refcount(kv.owned_pages(s2)[0]) == 1
+
+
+def test_lookup_count_false_keeps_hit_rate_counters():
+    kv = _bare_kv()
+    idx = RadixPrefixCache(kv)
+    s = kv.alloc_slot()
+    kv.ensure(s, 8)
+    idx.insert(np.asarray([1, 2, 3, 4, 5, 6, 7, 8]), kv.owned_pages(s))
+    kv.release(s)
+    n, _ = idx.lookup(np.asarray([1, 2, 3, 4]))
+    node = idx.root.children[(0, (1, 2, 3, 4))]   # (shard, edge tokens)
+    assert n == 4 and idx.lookups == 1 and node.hits == 1
+    tick = node.last_used
+    n, _ = idx.lookup(np.asarray([1, 2, 3, 4]), count=False)
+    assert n == 4
+    # the retry is the same admission: counters frozen, recency moves
+    assert idx.lookups == 1 and node.hits == 1
+    assert node.last_used > tick
+
+
+def test_reclaim_rounds_count_one_lookup_per_admission():
+    """try_admit re-runs the prefix match after every reclaim round; a
+    two-round admission must still be ONE lookup in the hit-rate stats
+    (the old per-round counting inflated the denominator and the node
+    warmth)."""
+    from repro.serve.scheduler import Scheduler
+
+    cfg = _tiny_cfg()
+    kv = PagedKVCache(cfg, n_pages=5, page_size=4, max_seqs=2,
+                      dtype="float32")
+    idx = RadixPrefixCache(kv)
+    sched = Scheduler(kv, prefix=idx)
+    s = kv.alloc_slot()
+    kv.ensure(s, 8)
+    idx.insert(np.asarray([1, 2, 3, 4, 5, 6, 7, 8]), kv.owned_pages(s))
+    kv.release(s)
+    assert kv.free_page_count == 2          # 4 usable, 2 index-retained
+    # 11 unmatched tokens need 4 pages (prompt+decode+watermark) > 2
+    # free -> the index is reclaimed, then the match re-runs before
+    # admission succeeds
+    sched.submit(Request(prompt=np.arange(100, 111).astype(np.int32),
+                         max_new_tokens=2))
+    assert sched.try_admit() is not None
+    assert idx.lookups == 1

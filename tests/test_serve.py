@@ -124,3 +124,28 @@ def test_system_end_to_end_train_quantize_serve(tmp_path):
     assert len(text) > 0
     # decoded bytes must be printable ascii-ish (the corpus alphabet)
     assert all(32 <= b < 127 for b in tok.encode(text))
+
+
+def test_tpot_average_skips_single_token_requests():
+    """TPOT has no after-first-token interval for a 1-token generation;
+    the average must cover the same filtered sample list the percentile
+    export sees, not be deflated by structural 0.0s."""
+    from repro.serve.kv_cache import PagedKVCache
+    from repro.serve.scheduler import RequestMetrics, Scheduler, _Entry
+
+    kv = PagedKVCache(None, n_pages=8, page_size=4, max_seqs=2,
+                      create_pool=False)
+    sched = Scheduler(kv)
+
+    def entry(n_gen, t_done):
+        m = RequestMetrics(t_submit=0.0, t_first_token=1.0, t_done=t_done,
+                           n_generated=n_gen)
+        return _Entry(req=None, prompt=np.zeros(1, np.int32), metrics=m)
+
+    entries = [entry(1, 1.0),       # single token: no TPOT sample
+               entry(5, 9.0),       # 2.0 s/token
+               entry(3, 3.0)]       # 1.0 s/token
+    s = sched.metrics_summary(entries)
+    assert s["tpot_samples_s"] == [2.0, 1.0]
+    assert s["tpot_avg_s"] == pytest.approx(1.5)
+    assert s["n_done"] == 3

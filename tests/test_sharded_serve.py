@@ -324,3 +324,20 @@ def test_packed_artifact_loads_onto_mesh_and_serves(tmp_path):
     got = mk()
     ServeEngine(cfg, lp, mesh=mesh, **kw).run(got)
     assert [r.out for r in got] == [r.out for r in want]
+
+
+def test_reserve_page_guards_cover_every_shard():
+    """share()/ref() must reject each shard's reserve page, not just
+    global pid 0: shard s's reserve lives at s * pages_per_shard."""
+    kv = _kv(n_pages=8, page_size=4, n_shards=2)
+    reserve1 = kv.null_page_of_shard(1)
+    assert reserve1 == kv.pages_per_shard and reserve1 != 0
+    # a corrupt refcount on the reserve must not legitimize it — the
+    # old `pid != 0` guard waved shard 1's reserve straight through
+    kv._refcount[reserve1] = 1
+    with pytest.raises(AssertionError):
+        kv.ref(reserve1)
+    s = kv.alloc_slot()
+    with pytest.raises(AssertionError):
+        kv.share(s, [reserve1])
+    kv._refcount[reserve1] = 0
