@@ -1,0 +1,18 @@
+"""repro-lint: repo-specific static analysis for the invariants the
+test suite can't see (see docs/ANALYSIS.md for the rule catalog).
+
+  finding.py   — the Finding record and its deterministic ordering
+  registry.py  — @register_rule / run_rules (same open-registration
+                 pattern as the quantizer and bench registries)
+  context.py   — AnalysisContext: cached file lists / texts / ASTs
+  baseline.py  — committed suppression baseline (load/render/partition)
+  astutil.py   — shared AST pattern-matching helpers
+  rules/       — the built-in rules (R001..R008)
+
+Entry point: tools/repro_lint.py (CI-gated; exits non-zero on any
+finding not in the committed baseline, and on stale baseline entries).
+"""
+from repro.analysis.context import AnalysisContext  # noqa: F401
+from repro.analysis.finding import Finding, sort_findings  # noqa: F401
+from repro.analysis.registry import (available_rules, get_rule,  # noqa: F401
+                                     register_rule, run_rules)

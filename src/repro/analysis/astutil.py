@@ -1,0 +1,105 @@
+"""Small AST helpers shared by the repro-lint rules.
+
+Everything here is resolution-free and syntactic: dotted-name
+rendering, alias tracking for `jax.jit`-style references, and literal
+classification. Rules stay readable because the fiddly pattern matching
+lives in one place.
+"""
+from __future__ import annotations
+
+import ast
+
+
+def dotted(node) -> str:
+    """Render a Name/Attribute chain as 'a.b.c' ('' when not a chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def func_name(call: ast.Call) -> str:
+    """Last component of a call's function ('init_mla' for
+    `mod.init_mla(...)`, 'jnp.zeros' -> 'zeros')."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def module_functions(tree) -> dict:
+    """Module-level FunctionDefs by name (no nested defs)."""
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def is_literal(node) -> bool:
+    """Constant, or a tuple/list of (nested) literals — what a
+    static_argnums/static_argnames value is allowed to be."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_literal(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return is_literal(node.operand)
+    return False
+
+
+def identifiers(tree) -> set:
+    """Every Name id and Attribute attr in a tree — the cheap 'does this
+    module mention X' test R001 uses on test files."""
+    out = set()
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            out.update(a.name for a in n.names)
+    return out
+
+
+def identifier_strings(tree):
+    """(string, lineno) for every identifier-like string constant —
+    how R006 reads the leaf names dist/sharding.py knows about.
+    Docstrings and prose don't match (they contain spaces)."""
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            s = n.value.lstrip(".")
+            if s.isidentifier():
+                yield s, n.lineno
+
+
+class CallRefs:
+    """Alias-aware reference finder for `<module>.<attr>` call targets.
+
+    Tracks `import jax`, `import jax as j`, and `from jax import jit
+    [as J]`, then classifies expression nodes: `refs.is_ref(node,
+    "jax", "jit")` is True for `jax.jit`, `j.jit` and bare `J`/`jit`.
+    """
+
+    def __init__(self, tree):
+        self._mod_aliases: dict = {}     # alias -> real module name
+        self._attr_aliases: dict = {}    # alias -> (module, attr)
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Import):
+                for a in n.names:
+                    self._mod_aliases[a.asname or a.name] = a.name
+            elif isinstance(n, ast.ImportFrom) and n.module:
+                for a in n.names:
+                    self._attr_aliases[a.asname or a.name] = (n.module,
+                                                              a.name)
+
+    def is_ref(self, node, module: str, attr: str) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr == attr \
+                and isinstance(node.value, ast.Name):
+            return self._mod_aliases.get(node.value.id) == module
+        if isinstance(node, ast.Name):
+            return self._attr_aliases.get(node.id) == (module, attr)
+        return False

@@ -1,0 +1,80 @@
+"""The suppression baseline: grandfathered findings, committed to git.
+
+Each line is one suppressed finding key (rule id, file, message — tab
+separated, exactly `Finding.key()`), optionally followed by a fourth
+tab-separated field: the one-line justification for why the finding is
+allowed to stand. Blank lines and `#` comment lines are ignored.
+
+The contract the CLI enforces (and tests/test_lint.py pins):
+
+  - a finding NOT in the baseline fails the run (new violation);
+  - a baseline entry that no longer fires ALSO fails the run (stale
+    suppression — run `--update-baseline` and commit the shrink);
+  - `--update-baseline` output is deterministic (sorted by key) and
+    preserves justifications of entries that survive, so the diff of a
+    baseline update is reviewable line by line.
+
+The goal state is an *empty* baseline: suppressions exist so the lint
+can land while real fixes are split out, not as a place for findings
+to retire.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.finding import sort_findings
+
+_HEADER = """\
+# repro-lint suppression baseline (tools/repro_lint.py --update-baseline)
+# one grandfathered finding per line: rule<TAB>file<TAB>message[<TAB>why]
+# every entry should carry a one-line justification as its final field
+"""
+
+
+def load_baseline(path) -> dict:
+    """path -> {finding_key: justification} (empty when file missing)."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    out = {}
+    for raw in p.read_text().splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("#"):
+            continue
+        parts = line.split("\t")
+        if len(parts) < 3:
+            raise ValueError(
+                f"{p}: malformed baseline line (need rule<TAB>file<TAB>"
+                f"message): {raw!r}")
+        key = "\t".join(parts[:3])
+        out[key] = parts[3] if len(parts) > 3 else ""
+    return out
+
+
+def render_baseline(findings, old: dict | None = None) -> str:
+    """Deterministic baseline text for the given findings, carrying
+    forward justifications from `old` for keys that survive."""
+    old = old or {}
+    lines = [_HEADER]
+    seen = set()
+    for f in sort_findings(findings):
+        key = f.key()
+        if key in seen:
+            continue
+        seen.add(key)
+        just = old.get(key, "")
+        lines.append(key + ("\t" + just if just else ""))
+    return "\n".join(lines) + "\n"
+
+
+def partition(findings, baseline: dict):
+    """Split a run's findings against the baseline.
+
+    Returns (new, suppressed, stale_keys): findings whose key is not
+    baselined, findings that are, and baseline keys that no longer
+    fire (sorted)."""
+    keys = {f.key() for f in findings}
+    new = [f for f in findings if f.key() not in baseline]
+    suppressed = [f for f in findings if f.key() in baseline]
+    stale = sorted(k for k in baseline if k not in keys)
+    return new, suppressed, stale

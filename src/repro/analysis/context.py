@@ -1,0 +1,86 @@
+"""AnalysisContext: the parsed view of one tree that every rule reads.
+
+Rules never open files themselves — they ask the context for file
+lists, source text and ASTs (all cached, each file parsed at most once
+per run no matter how many rules look at it). Rooting the context at an
+arbitrary directory is what makes rules testable: tests/test_lint.py
+builds throwaway mini-trees with one bad snippet and runs a single rule
+against them.
+
+A file that fails to parse yields a single file-level parse-error
+finding (via `parse_failures`) instead of crashing the run — the lint
+must keep reporting the rest of the tree while someone is mid-edit.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.finding import Finding
+
+# directories that never contain repo code
+_SKIP_DIRS = {"__pycache__", ".git", ".github", "artifacts", ".claude"}
+
+
+class AnalysisContext:
+    def __init__(self, root):
+        self.root = Path(root).resolve()
+        self._trees: dict = {}
+        self._texts: dict = {}
+        self._parse_failures: dict = {}
+
+    # -- file discovery ---------------------------------------------------
+
+    def rel(self, path) -> str:
+        return Path(path).resolve().relative_to(self.root).as_posix()
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).exists()
+
+    def py_files(self, *subdirs) -> list:
+        """Sorted .py files under the given repo-relative subdirs (repo
+        root when none given); missing subdirs contribute nothing."""
+        out = []
+        for sub in subdirs or ("",):
+            base = self.root / sub
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                if not _SKIP_DIRS.intersection(p.parts):
+                    out.append(p)
+        return out
+
+    def md_files(self, *subdirs) -> list:
+        out = []
+        for sub in subdirs or ("",):
+            base = self.root / sub
+            if not base.is_dir():
+                continue
+            glob = base.glob("*.md") if sub == "" else base.rglob("*.md")
+            out.extend(sorted(glob))
+        return out
+
+    # -- cached parsing ---------------------------------------------------
+
+    def text(self, path) -> str:
+        key = self.rel(path)
+        if key not in self._texts:
+            self._texts[key] = (self.root / key).read_text()
+        return self._texts[key]
+
+    def tree(self, path):
+        """Parsed AST for one file, or None if it does not parse (the
+        failure is recorded and surfaced once via `parse_failures`)."""
+        key = self.rel(path)
+        if key not in self._trees:
+            try:
+                self._trees[key] = ast.parse(self.text(path), filename=key)
+            except SyntaxError as e:
+                self._trees[key] = None
+                self._parse_failures[key] = Finding(
+                    rule_id="R000", file=key, line=int(e.lineno or 0),
+                    message=f"does not parse: {e.msg}")
+        return self._trees[key]
+
+    def parse_failures(self) -> list:
+        return [self._parse_failures[k] for k in sorted(self._parse_failures)]

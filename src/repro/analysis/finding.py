@@ -1,0 +1,44 @@
+"""The unit of repro-lint output: one `Finding` per violated invariant.
+
+A finding is keyed for the suppression baseline by (rule_id, file,
+message) — deliberately *without* the line number, so unrelated edits
+that shift a grandfathered finding up or down the file do not churn the
+baseline. The line still prints, for jumping to the site.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one site."""
+    rule_id: str
+    file: str          # repo-relative, "/"-separated
+    line: int          # 1-based; 0 when the finding is file-level
+    message: str
+    severity: str = "error"
+
+    def key(self) -> str:
+        """Baseline identity: stable across line churn. Tabs separate
+        the parts (messages never contain tabs — `validate` enforces)."""
+        return f"{self.rule_id}\t{self.file}\t{self.message}"
+
+    def render(self) -> str:
+        loc = f"{self.file}:{self.line}" if self.line else self.file
+        return f"{self.rule_id} {loc}: {self.message}"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+        if "\t" in self.message or "\n" in self.message:
+            raise ValueError("finding messages must be tab/newline-free "
+                             "(they key the baseline)")
+
+
+def sort_findings(findings) -> list:
+    """Deterministic report/baseline order: rule, file, line, message."""
+    return sorted(findings,
+                  key=lambda f: (f.rule_id, f.file, f.line, f.message))

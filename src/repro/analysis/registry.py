@@ -1,0 +1,95 @@
+"""Rule registry: rule ids -> checker implementations.
+
+The same open-registration pattern as the quantizer registry
+(quant/registry.py) and the bench scenario registry (bench/registry.py):
+every rule registers itself under its id with `@register_rule("R001",
+title=...)`, the runner dispatches through `get_rule`/`run_rules`, and
+there is no rule list hard-coded anywhere. The built-in rules live in
+repro/analysis/rules/; importing that package (which `run_rules` does
+lazily) is what populates the registry, so this module stays
+import-light.
+
+A rule is a callable ``fn(ctx) -> Iterable[Finding]`` where ctx is a
+context.AnalysisContext rooted at the tree under analysis — rules never
+touch the filesystem directly, which is what makes them testable on
+synthetic fixture trees (tests/test_lint.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.analysis.finding import Finding, sort_findings
+
+_REGISTRY: dict = {}
+_BUILTINS_LOADED = False
+_RULE_ID = re.compile(r"^R\d{3}$")
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered invariant check.
+
+    title: one line, what the invariant is (docs/ANALYSIS.md catalog).
+    rationale: why violating it hurts (shown by `--list-rules`).
+    """
+    rule_id: str
+    title: str
+    rationale: str
+    fn: Callable
+
+    def run(self, ctx) -> list:
+        out = []
+        for f in self.fn(ctx):
+            if f.rule_id != self.rule_id:
+                raise ValueError(
+                    f"{self.rule_id} emitted a finding tagged {f.rule_id}")
+            out.append(f)
+        return sort_findings(out)
+
+
+def register_rule(rule_id: str, *, title: str, rationale: str = ""):
+    """Function decorator: `@register_rule("R001", title=...)`. Later
+    registrations override (downstream trees may re-register a rule
+    with a stricter implementation)."""
+    if not _RULE_ID.match(rule_id):
+        raise ValueError(f"rule id must look like R001, got {rule_id!r}")
+
+    def deco(fn):
+        _REGISTRY[rule_id] = Rule(rule_id=rule_id, title=title,
+                                  rationale=rationale, fn=fn)
+        return fn
+    return deco
+
+
+def _ensure_builtins():
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        import repro.analysis.rules  # noqa: F401  (registers built-ins)
+        _BUILTINS_LOADED = True      # only after a successful import
+
+
+def get_rule(rule_id: str) -> Rule:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[rule_id]
+    except KeyError:
+        raise KeyError(f"unknown rule {rule_id!r}; registered: "
+                       f"{', '.join(available_rules())}") from None
+
+
+def available_rules() -> list:
+    _ensure_builtins()
+    return sorted(_REGISTRY)
+
+
+def run_rules(ctx, rule_ids=None) -> list:
+    """Run the selected rules (all by default) over one context and
+    return the merged, deterministically ordered finding list."""
+    _ensure_builtins()
+    ids = list(rule_ids) if rule_ids else available_rules()
+    findings: list = []
+    for rid in ids:
+        findings.extend(get_rule(rid).run(ctx))
+    return sort_findings(findings)

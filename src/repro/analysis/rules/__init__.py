@@ -1,0 +1,14 @@
+"""Built-in repro-lint rules. Importing this package registers them
+(registry._ensure_builtins does so lazily); rule catalog in
+docs/ANALYSIS.md.
+
+  kernels.py       R001 kernel/oracle parity
+                   R003 tracer hygiene
+                   R004 tiling contracts
+  jit.py           R002 jit ownership
+  completeness.py  R005 registry/docs + EngineStats completeness
+                   R006 sharding coverage
+                   R008 no test shims
+  docs.py          R007 docs link integrity
+"""
+from repro.analysis.rules import completeness, docs, jit, kernels  # noqa: F401

@@ -1,0 +1,248 @@
+"""Completeness rules: the cross-file contracts that drift silently.
+
+R005 — every registered quantizer/scenario name is documented, and every
+EngineStats field is populated by the snapshot path. R006 — every param/
+cache leaf models/ constructs resolves to a placement decision in
+dist/sharding.py. R008 — no import-substitution shims in tests/.
+
+These are exactly the invariants a reviewer cannot check from a diff:
+adding `@register_quantizer("foo")` touches one file, the docs table
+lives in another, and nothing fails when they disagree — until a reader
+follows the docs.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import func_name, identifier_strings
+from repro.analysis.finding import Finding
+from repro.analysis.registry import register_rule
+
+# registry decorator -> the doc page that must table the name
+REGISTRY_DOCS = {
+    "register_quantizer": "docs/QUANT.md",
+    "register_scenario": "docs/BENCHMARKS.md",
+}
+REGISTRY_SCAN_DIRS = ("src", "benchmarks")
+STATS_FILE = "src/repro/serve/stats.py"
+
+
+@register_rule(
+    "R005", title="every registered quantizer/scenario is documented and "
+    "every EngineStats field is populated by the snapshot",
+    rationale="the registries are the public surface of the repro — an "
+    "undocumented name is invisible to users, and an EngineStats field "
+    "capture() never sets is a permanently-zero counter that benchmarks "
+    "will happily record as truth")
+def registry_docs_completeness(ctx):
+    findings = []
+    doc_texts = {doc: (ctx.text(ctx.root / doc) if ctx.exists(doc) else None)
+                 for doc in set(REGISTRY_DOCS.values())}
+
+    for path in ctx.py_files(*REGISTRY_SCAN_DIRS):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                continue
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                deco = func_name(dec)
+                if deco not in REGISTRY_DOCS or not dec.args:
+                    continue
+                name_node = dec.args[0]
+                if not (isinstance(name_node, ast.Constant)
+                        and isinstance(name_node.value, str)):
+                    continue  # dynamic names can't be checked statically
+                name, doc = name_node.value, REGISTRY_DOCS[deco]
+                text = doc_texts[doc]
+                if text is None:
+                    findings.append(Finding(
+                        "R005", rel, dec.lineno,
+                        f"`{name}` registered but {doc} does not exist"))
+                elif f"`{name}`" not in text:
+                    findings.append(Finding(
+                        "R005", rel, dec.lineno,
+                        f"registered name `{name}` not documented in "
+                        f"{doc} (add a table row)"))
+    findings.extend(_stats_findings(ctx))
+    return findings
+
+
+def _stats_findings(ctx):
+    """Every EngineStats dataclass field must appear as a string key in
+    `capture()` — the only constructor `stats_snapshot` uses."""
+    path = ctx.root / STATS_FILE
+    if not path.exists():
+        return []
+    tree = ctx.tree(path)
+    if tree is None:
+        return []
+    cls = next((n for n in tree.body if isinstance(n, ast.ClassDef)
+                and n.name == "EngineStats"), None)
+    if cls is None:
+        return []
+    fields = {(n.target.id, n.lineno) for n in cls.body
+              if isinstance(n, ast.AnnAssign)
+              and isinstance(n.target, ast.Name)}
+    capture = next((n for n in cls.body
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n.name == "capture"), None)
+    if capture is None:
+        return [Finding("R005", STATS_FILE, cls.lineno,
+                        "EngineStats has no capture() classmethod")]
+    keys = set()
+    for n in ast.walk(capture):
+        if isinstance(n, ast.Dict):
+            keys.update(k.value for k in n.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str))
+        elif isinstance(n, ast.Call):
+            keys.update(k.arg for k in n.keywords if k.arg)
+    return [Finding("R005", STATS_FILE, line,
+                    f"EngineStats.{name} is never populated by capture() "
+                    f"(would read as a constant default)")
+            for name, line in sorted(fields) if name not in keys]
+
+
+# --------------------------------------------------------------------------
+# R006 — sharding coverage
+# --------------------------------------------------------------------------
+
+MODELS_DIR = "src/repro/models"
+SHARDING_FILE = "src/repro/dist/sharding.py"
+_INIT_PREFIXES = ("init_", "_init_", "abstract_", "_abstract_")
+# leaf initializers: a call to one of these *is* a leaf value; a call to
+# any other init_* returns a subtree whose own keys are checked where
+# it is defined
+_LEAF_INITS = {"init_linear"}
+
+
+@register_rule(
+    "R006", title="every param/cache leaf name constructed in models/ "
+    "resolves to a rule in dist/sharding.py",
+    rationale="the sharding rules are total functions with a replicate "
+    "fallback, so an unknown leaf silently replicates onto every device "
+    "— correct but quadratically expensive; forcing the name into "
+    "sharding.py (a rule or REPLICATED_LEAVES) makes placement a "
+    "reviewed decision")
+def sharding_coverage(ctx):
+    spath = ctx.root / SHARDING_FILE
+    if not spath.exists():
+        return [Finding("R006", SHARDING_FILE, 0,
+                        "sharding rule module missing")]
+    stree = ctx.tree(spath)
+    if stree is None:
+        return []
+    known = {s for s, _ in identifier_strings(stree)}
+
+    findings = []
+    for path in ctx.py_files(MODELS_DIR):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and fn.name.startswith(_INIT_PREFIXES):
+                for name, line in _leaf_names(fn):
+                    if not (name.startswith("w") or name in known):
+                        findings.append(Finding(
+                            "R006", rel, line,
+                            f"leaf `{name}` (built by `{fn.name}`) has no "
+                            f"rule in dist/sharding.py — add a placement "
+                            f"rule or declare it in REPLICATED_LEAVES"))
+    return findings
+
+
+def _is_subtree(value) -> bool:
+    """Values that are containers (their own keys are checked where they
+    are built) or unresolvable names — not leaf arrays."""
+    if isinstance(value, (ast.Dict, ast.DictComp, ast.ListComp,
+                          ast.SetComp, ast.Name)):
+        return True
+    if isinstance(value, ast.Call):
+        fname = func_name(value)
+        if fname.startswith(("init_", "abstract_")) \
+                and fname not in _LEAF_INITS:
+            return True
+        if not fname:       # e.g. jax.vmap(init_one)(...) — nested call
+            return True
+    return False
+
+
+def _leaf_names(fn):
+    """(name, lineno) for statically-known leaf keys built inside fn:
+    string keys of dict literals and `tree["name"] = value` subscript
+    assignments, excluding subtree values and dynamic (f-string) keys."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if isinstance(k, ast.Constant) and isinstance(k.value, str) \
+                        and not _is_subtree(v):
+                    yield k.value, k.lineno
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Subscript):
+            sl = node.targets[0].slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str) \
+                    and not _is_subtree(node.value):
+                yield sl.value, node.lineno
+
+
+# --------------------------------------------------------------------------
+# R008 — no import-substitution shims in tests/
+# --------------------------------------------------------------------------
+
+SHIM_MODULE = "_hypothesis_fallback"
+
+
+@register_rule(
+    "R008", title="tests/ contains no import-substitution shims "
+    "(fallback modules, sys.modules patching)",
+    rationale="a stand-in module that satisfies imports makes property "
+    "tests silently degrade to single-example smoke tests; the honest "
+    "pattern is `except ImportError: given = None` with the tests "
+    "skipped visibly and CI running the real dependency under "
+    "REQUIRE_HYPOTHESIS=1")
+def no_test_shims(ctx):
+    findings = []
+    for path in ctx.py_files("tests"):
+        rel = ctx.rel(path)
+        if "fallback" in path.stem or "_shim" in path.stem:
+            findings.append(Finding(
+                "R008", rel, 1,
+                "fallback/shim module in tests/ (import-substitution "
+                "stand-ins are banned; gate on ImportError instead)"))
+            continue
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Subscript) \
+                            and _dotted_is(t.value, "sys.modules"):
+                        findings.append(Finding(
+                            "R008", rel, node.lineno,
+                            "assigns into sys.modules (import "
+                            "substitution) in tests/"))
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                mods = [a.name for a in node.names]
+                if isinstance(node, ast.ImportFrom) and node.module:
+                    mods.append(node.module)
+                if any(SHIM_MODULE in (m or "") for m in mods):
+                    findings.append(Finding(
+                        "R008", rel, node.lineno,
+                        f"imports the removed {SHIM_MODULE} shim"))
+    return findings
+
+
+def _dotted_is(node, dotted_name: str) -> bool:
+    from repro.analysis.astutil import dotted
+    return dotted(node) == dotted_name

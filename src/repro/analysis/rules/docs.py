@@ -1,0 +1,59 @@
+"""R007 — docs link integrity (absorbs tools/check_doc_links.py).
+
+Every relative markdown link and every slash-containing backticked file
+reference in docs/*.md and the root *.md must resolve to a real file.
+Previously a standalone CI step; folding it into repro-lint means one
+framework, one suppression baseline and one CI gate for every repo
+invariant.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import register_rule
+
+# [text](relative/target.md#anchor) — external schemes are skipped
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/with/slash.ext` possibly followed by ":symbol" or " --flags"
+CODE_REF = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+                      r"\.(?:py|md|yml|yaml|json|txt))[:\s`]")
+_SCHEME = re.compile(r"^[a-z][a-z0-9+.-]*:")
+# a backticked path resolves against these bases (first hit wins);
+# refs without a "/" (artifact members like `manifest.json`) are not
+# checked at all
+SEARCH_ROOTS = ("", "src", "src/repro", "docs")
+
+
+@register_rule(
+    "R007", title="markdown links and backticked file references in "
+    "docs/ and root *.md resolve to real files",
+    rationale="docs rot silently when the tree is refactored; a "
+    "dangling `serve/engine.py` reference costs every future reader a "
+    "search for a file that moved")
+def doc_links(ctx):
+    findings = []
+    for doc in ctx.md_files("", "docs"):
+        text = ctx.text(doc)
+        rel = ctx.rel(doc)
+
+        def lineno(pos):
+            return text.count("\n", 0, pos) + 1
+
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if _SCHEME.match(target) or target.startswith("#"):
+                continue                      # external / in-page
+            path = (doc.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                findings.append(Finding(
+                    "R007", rel, lineno(m.start()),
+                    f"dangling link ({target})"))
+        for m in CODE_REF.finditer(text):
+            ref = m.group(1)
+            if not any((ctx.root / base / ref).exists()
+                       for base in SEARCH_ROOTS):
+                findings.append(Finding(
+                    "R007", rel, lineno(m.start()),
+                    f"stale file reference `{ref}`"))
+    return findings

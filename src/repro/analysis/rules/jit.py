@@ -1,0 +1,93 @@
+"""R002 — jit ownership.
+
+PR 5 made `serve/compile_cache.py` the process-wide owner of serving
+jit closures: executables are keyed by (kind, cfg, mesh fingerprint) so
+two engines with the same config share one XLA compilation. A stray
+`jax.jit` anywhere else silently re-grows the compile count the cache
+exists to bound — and never shows up in `compile_cache.stats()`, so the
+regression is invisible to the bench counters too.
+
+A small allowlist names the sites that legitimately own their own jit
+(module-level kernel entries, the offline GPTQ solver, training steps,
+lowering probes) with a one-line justification each. Everything else
+must go through `compile_cache.get(...)`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import CallRefs, func_name, is_literal
+from repro.analysis.finding import Finding
+from repro.analysis.registry import register_rule
+
+JIT_OWNER = "src/repro/serve/compile_cache.py"
+
+# file -> why it may call jax.jit directly
+JIT_ALLOWLIST = {
+    "src/repro/kernels/bcq_matmul.py":
+        "module-level kernel entry: one jit per (shape, block config), "
+        "process-wide by construction",
+    "src/repro/kernels/paged_attention.py":
+        "module-level kernel entry: same module-level-closure ownership "
+        "as bcq_matmul",
+    "src/repro/core/gptq.py":
+        "offline quantization solver, never on the serving path the "
+        "compile cache manages",
+    "src/repro/train/trainer.py":
+        "QAT training step: per-Trainer donated buffers, not a shared "
+        "serving closure",
+    "src/repro/launch/train.py":
+        "sharded train step jitted once per launch with in_shardings "
+        "baked in",
+    "src/repro/launch/dryrun.py":
+        "AOT lowering probes: jit is the product (inspecting HLO), "
+        "nothing is executed or cached",
+}
+
+
+@register_rule(
+    "R002", title="jax.jit appears only in serve/compile_cache.py or an "
+    "allowlisted module; static_argnums/static_argnames are literals",
+    rationale="the compile cache is the single owner of serving "
+    "executables; a stray jit re-duplicates XLA compilations invisibly, "
+    "and a computed static_argnums defeats static review of what is "
+    "traced vs baked in")
+def jit_ownership(ctx):
+    findings = []
+    for path in ctx.py_files("src"):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        refs = CallRefs(tree)
+        jit_nodes = [n for n in ast.walk(tree)
+                     if refs.is_ref(n, "jax", "jit")]
+        if jit_nodes and rel != JIT_OWNER and rel not in JIT_ALLOWLIST:
+            findings.append(Finding(
+                "R002", rel, min(n.lineno for n in jit_nodes),
+                f"references jax.jit outside {JIT_OWNER}; route through "
+                f"compile_cache.get(...) or allowlist with justification"))
+        findings.extend(_static_arg_findings(rel, tree, refs))
+    return findings
+
+
+def _static_arg_findings(rel, tree, refs):
+    """static_argnums/static_argnames must be literal tuples/strings —
+    applies everywhere, including the owner and allowlisted files."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_jit = refs.is_ref(node.func, "jax", "jit")
+        is_partial_jit = func_name(node) == "partial" and node.args \
+            and refs.is_ref(node.args[0], "jax", "jit")
+        if not (is_jit or is_partial_jit):
+            continue
+        for k in node.keywords:
+            if k.arg in ("static_argnums", "static_argnames") \
+                    and not is_literal(k.value):
+                out.append(Finding(
+                    "R002", rel, node.lineno,
+                    f"{k.arg} is not a literal (computed static args "
+                    f"hide what gets baked into the executable)"))
+    return out

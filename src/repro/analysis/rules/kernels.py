@@ -1,0 +1,432 @@
+"""Kernel-facing rules: oracle parity (R001), tracer hygiene (R003)
+and tiling contracts (R004).
+
+These are the contracts that fail *silently* when broken: a kernel
+without a jnp oracle has no off-TPU execution path and no independent
+ground truth; a Python `if` on a traced value either crashes at trace
+time or — worse — bakes one branch into the compiled program; a tile
+size that is not a sublane/lane/pack-word multiple quietly falls off
+the fast path (or corrupts the packed layout) on real hardware.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import (CallRefs, dotted, func_name, is_literal,
+                                    identifiers, module_functions)
+from repro.analysis.finding import Finding
+from repro.analysis.registry import register_rule
+from repro.hw import LANE, SUBLANE, WORD
+
+KERNELS_DIR = "src/repro/kernels"
+ORACLE_FILE = "src/repro/kernels/ref.py"
+TESTS_DIR = "tests"
+# modules in kernels/ that are not kernel entry points: the oracles
+# themselves and the dispatch layer (whose contract is "calls a kernel
+# or its oracle", covered by the kernels it routes to)
+NON_KERNEL_MODULES = {"__init__.py", "ref.py", "ops.py"}
+# kw-only params that tune execution rather than change the math — the
+# oracle intentionally does not take them
+TUNING_PARAM_PREFIXES = ("block_",)
+TUNING_PARAMS = {"interpret"}
+
+
+# --------------------------------------------------------------------------
+# R001 — kernel/oracle parity
+# --------------------------------------------------------------------------
+
+@register_rule(
+    "R001", title="every public kernel has a matching ref.py oracle and a "
+    "kernel-vs-oracle test",
+    rationale="ref.py is the only off-TPU execution path and the only "
+    "independent ground truth; a kernel without an oracle (or without a "
+    "test comparing the two) can drift numerically with no signal")
+def kernel_oracle_parity(ctx):
+    findings = []
+    ref_path = ctx.root / ORACLE_FILE
+    ref_tree = ctx.tree(ref_path) if ref_path.exists() else None
+    oracles = module_functions(ref_tree) if ref_tree else {}
+
+    test_idents = {}
+    for tf in ctx.py_files(TESTS_DIR):
+        tt = ctx.tree(tf)
+        if tt is not None:
+            test_idents[ctx.rel(tf)] = identifiers(tt)
+
+    for path in ctx.py_files(KERNELS_DIR):
+        if path.name in NON_KERNEL_MODULES:
+            continue
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        for name, fn in module_functions(tree).items():
+            if name.startswith("_"):
+                continue
+            oname = f"{name}_ref"
+            if ref_tree is None:
+                findings.append(Finding(
+                    "R001", rel, fn.lineno,
+                    f"public kernel `{name}` has no oracle module "
+                    f"({ORACLE_FILE} missing)"))
+                continue
+            oracle = oracles.get(oname)
+            if oracle is None:
+                findings.append(Finding(
+                    "R001", rel, fn.lineno,
+                    f"public kernel `{name}` has no `{oname}` oracle in "
+                    f"{ORACLE_FILE}"))
+                continue
+            findings.extend(_signature_findings(rel, name, fn, oracle))
+            if not any(name in ids and oname in ids
+                       for ids in test_idents.values()):
+                findings.append(Finding(
+                    "R001", rel, fn.lineno,
+                    f"no test module references both `{name}` and "
+                    f"`{oname}` (kernel-vs-oracle test missing)"))
+    return findings
+
+
+def _signature_findings(rel, name, fn, oracle):
+    kpos = [a.arg for a in fn.args.args]
+    opos = [a.arg for a in oracle.args.args]
+    out = []
+    if opos[:len(kpos)] != kpos:
+        out.append(Finding(
+            "R001", rel, fn.lineno,
+            f"kernel `{name}` positional args {kpos} are not a prefix of "
+            f"oracle `{oracle.name}` args {opos}"))
+    tune = lambda p: p in TUNING_PARAMS or \
+        p.startswith(TUNING_PARAM_PREFIXES)
+    kkw = {a.arg for a in fn.args.kwonlyargs if not tune(a.arg)}
+    okw = {a.arg for a in oracle.args.kwonlyargs}
+    missing = sorted(kkw - okw)
+    if missing:
+        out.append(Finding(
+            "R001", rel, fn.lineno,
+            f"kernel `{name}` kw-only args {missing} missing from oracle "
+            f"`{oracle.name}` (tuning params block_*/interpret exempt)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# R003 — tracer hygiene
+# --------------------------------------------------------------------------
+
+# attribute reads that are static under tracing (shape metadata)
+_BARRIER_ATTRS = {"shape", "dtype", "ndim", "size", "sharding", "aval",
+                  "weak_type"}
+# calls whose result is static even on traced inputs
+_BARRIER_CALLS = {"len", "range", "isinstance", "type", "hasattr",
+                  "getattr"}
+_BARRIER_DOTTED = {"pl.program_id", "pl.num_programs"}
+# calls that force a concrete value out of a tracer
+_FORCING_CALLS = {"int", "bool", "float"}
+
+
+@register_rule(
+    "R003", title="no Python control flow or int()/bool()/.item() on "
+    "values derived from traced kernel parameters",
+    rationale="inside jit or a pallas_call body, a Python `if`/`while` "
+    "on a tracer either raises ConcretizationError at trace time or "
+    "silently bakes one branch into the compiled program; shape/dtype "
+    "metadata is static and exempt")
+def tracer_hygiene(ctx):
+    findings = []
+    for path in ctx.py_files("src"):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        for fn, traced in _traced_functions(tree):
+            findings.extend(_taint_check(rel, fn, traced))
+    return findings
+
+
+def _traced_functions(tree):
+    """Yield (FunctionDef, traced_param_names) for module-level functions
+    that are jitted (decorator `jax.jit` / `functools.partial(jax.jit,
+    ...)`) or passed to `pl.pallas_call` (directly or via
+    functools.partial). Static argnums/argnames and partial-bound
+    keywords are excluded from the traced set; pallas kw-only params are
+    compile-time config by convention and also excluded."""
+    refs = CallRefs(tree)
+    funcs = module_functions(tree)
+    out = []
+
+    for fn in funcs.values():
+        for dec in fn.decorator_list:
+            jit_call = _as_jit_call(dec, refs)
+            if jit_call is not None or refs.is_ref(dec, "jax", "jit"):
+                statics = _static_params(fn, jit_call)
+                pos = [a.arg for a in fn.args.args]
+                kw = [a.arg for a in fn.args.kwonlyargs]
+                traced = [p for p in pos + kw if p not in statics]
+                out.append((fn, set(traced)))
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and dotted(node.func).endswith("pallas_call")
+                and node.args):
+            continue
+        target, bound = node.args[0], set()
+        if isinstance(target, ast.Call) \
+                and func_name(target) == "partial" and target.args:
+            bound = {k.arg for k in target.keywords if k.arg}
+            target = target.args[0]
+        if isinstance(target, ast.Name) and target.id in funcs:
+            fn = funcs[target.id]
+            kw = {a.arg for a in fn.args.kwonlyargs}
+            traced = {a.arg for a in fn.args.args} - bound - kw
+            out.append((fn, traced))
+    return out
+
+
+def _as_jit_call(dec, refs):
+    """The jax.jit Call node behind a decorator, or None: matches
+    `@jax.jit(...)` and `@functools.partial(jax.jit, ...)`."""
+    if not isinstance(dec, ast.Call):
+        return None
+    if refs.is_ref(dec.func, "jax", "jit"):
+        return dec
+    if func_name(dec) == "partial" and dec.args \
+            and refs.is_ref(dec.args[0], "jax", "jit"):
+        return dec
+    return None
+
+
+def _static_params(fn, jit_call):
+    statics = set()
+    if jit_call is None:
+        return statics
+    for k in jit_call.keywords:
+        if k.arg == "static_argnames" and is_literal(k.value):
+            v = ast.literal_eval(k.value)
+            statics.update([v] if isinstance(v, str) else v)
+        elif k.arg == "static_argnums" and is_literal(k.value):
+            v = ast.literal_eval(k.value)
+            pos = [a.arg for a in fn.args.args]
+            for i in ([v] if isinstance(v, int) else v):
+                if 0 <= i < len(pos):
+                    statics.add(pos[i])
+    return statics
+
+
+def _expr_tainted(node, tainted) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _BARRIER_ATTRS:
+            return False
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        fname = func_name(node)
+        if fname in _BARRIER_CALLS or dotted(node.func) in _BARRIER_DOTTED:
+            return False
+        return any(_expr_tainted(a, tainted) for a in node.args) \
+            or any(_expr_tainted(k.value, tainted) for k in node.keywords) \
+            or _expr_tainted(node.func, tainted)
+    if isinstance(node, ast.Constant):
+        return False
+    return any(_expr_tainted(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _target_names(target):
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        return [n for e in target.elts for n in _target_names(e)]
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def _taint_check(rel, fn, traced):
+    """One forward dataflow pass (iterated to fixpoint) over fn's body:
+    start from the traced params, propagate through assignments, flag
+    Python control flow / value-forcing calls on tainted expressions."""
+    tainted = set(traced)
+    findings = []
+
+    def flag(line, msg):
+        findings.append(Finding("R003", rel, line,
+                                f"in `{fn.name}`: {msg}"))
+
+    def visit_block(stmts, tainted):
+        for s in stmts:
+            if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = s.value
+                if value is not None and _expr_tainted(value, tainted):
+                    targets = s.targets if isinstance(s, ast.Assign) \
+                        else [s.target]
+                    for t in targets:
+                        tainted.update(_target_names(t))
+            elif isinstance(s, ast.If):
+                if _expr_tainted(s.test, tainted):
+                    flag(s.lineno, "Python `if` on a value derived from a "
+                         "traced parameter")
+                visit_block(s.body, tainted)
+                visit_block(s.orelse, tainted)
+            elif isinstance(s, ast.While):
+                if _expr_tainted(s.test, tainted):
+                    flag(s.lineno, "Python `while` on a value derived "
+                         "from a traced parameter")
+                visit_block(s.body, tainted)
+                visit_block(s.orelse, tainted)
+            elif isinstance(s, ast.For):
+                if _expr_tainted(s.iter, tainted):
+                    flag(s.lineno, "Python `for` iterates a value derived "
+                         "from a traced parameter")
+                    tainted.update(_target_names(s.target))
+                visit_block(s.body, tainted)
+                visit_block(s.orelse, tainted)
+            elif isinstance(s, (ast.With, ast.Try)):
+                for blk in (getattr(s, "body", []),
+                            getattr(s, "finalbody", []),
+                            getattr(s, "orelse", [])):
+                    visit_block(blk, tainted)
+            elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested def: params shadow the outer taint
+                inner = tainted - {a.arg for a in
+                                   s.args.args + s.args.kwonlyargs}
+                visit_block(s.body, inner)
+            elif isinstance(s, ast.Return) and s.value is not None:
+                pass
+
+    # fixpoint: later statements can taint names used earlier in loops
+    for _ in range(4):
+        before = set(tainted)
+        findings.clear()
+        visit_block(fn.body, tainted)
+        if tainted == before:
+            break
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = func_name(node)
+        if isinstance(node.func, ast.Name) and fname in _FORCING_CALLS \
+                and any(_expr_tainted(a, tainted) for a in node.args):
+            findings.append(Finding(
+                "R003", rel, node.lineno,
+                f"in `{fn.name}`: {fname}() forces a concrete value out "
+                f"of a traced parameter"))
+        elif isinstance(node.func, ast.Attribute) and fname == "item" \
+                and _expr_tainted(node.func.value, tainted):
+            findings.append(Finding(
+                "R003", rel, node.lineno,
+                f"in `{fn.name}`: .item() forces a concrete value out "
+                f"of a traced parameter"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R004 — tiling contracts
+# --------------------------------------------------------------------------
+
+TILING_DIRS = ("src/repro/kernels", "src/repro/quant")
+SIZE_PARAMS = {"block_m", "block_n", "block_k", "group_size",
+               "kv_group_size", "page_size"}
+# sentinel values that mean "disabled/auto", not a tile size
+_SENTINELS = {None, 0, 1, -1}
+LAYOUT_CONSTANTS = {"WORD", "SUBLANE", "LANE"}
+HW_MODULE = "src/repro/hw.py"
+
+
+@register_rule(
+    "R004", title="tile/group sizes in kernels/ and quant/ are named "
+    "constants satisfying the sublane/lane/pack-word multiples",
+    rationale="a magic 256 in a BlockSpec works until someone edits it "
+    "to 250; naming the constant and checking the gs%32 / bm%8 / bn%128 "
+    "family statically keeps the packed layout and the MXU tiling legal "
+    "without waiting for a TPU run to fail")
+def tiling_contracts(ctx):
+    findings = []
+    for path in ctx.py_files(*TILING_DIRS):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        rel = ctx.rel(path)
+        findings.extend(_literal_size_findings(rel, tree))
+        findings.extend(_constant_value_findings(rel, tree))
+        if rel != HW_MODULE:
+            findings.extend(_layout_redefinition_findings(rel, tree))
+    return findings
+
+
+def _bad_size_literal(node) -> bool:
+    return isinstance(node, ast.Constant) \
+        and isinstance(node.value, int) \
+        and not isinstance(node.value, bool) \
+        and node.value not in _SENTINELS
+
+
+def _literal_size_findings(rel, tree):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pairs = list(zip(args.args[len(args.args)
+                                       - len(args.defaults):],
+                             args.defaults))
+            pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                             args.kw_defaults)
+                      if d is not None]
+            for a, d in pairs:
+                if a.arg in SIZE_PARAMS and _bad_size_literal(d):
+                    out.append(Finding(
+                        "R004", rel, node.lineno,
+                        f"magic literal {d.value} as default of "
+                        f"`{a.arg}` in `{node.name}` (promote to a "
+                        f"named module constant)"))
+        elif isinstance(node, ast.Call):
+            for k in node.keywords:
+                if k.arg in SIZE_PARAMS and _bad_size_literal(k.value):
+                    out.append(Finding(
+                        "R004", rel, node.lineno,
+                        f"magic literal {k.value.value} passed as "
+                        f"`{k.arg}` (use a named constant)"))
+    return out
+
+
+def _constant_value_findings(rel, tree):
+    """Named tile constants must satisfy the hardware multiples."""
+    out = []
+    checks = (("_M", SUBLANE, "SUBLANE"), ("_N", LANE, "LANE"),
+              ("_K", WORD, "WORD"))
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        name = node.targets[0].id
+        if not (name.isupper() and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, int)):
+            continue
+        val = node.value.value
+        if "GROUP_SIZE" in name and val % WORD:
+            out.append(Finding(
+                "R004", rel, node.lineno,
+                f"{name} = {val} is not a multiple of the {WORD}-bit "
+                f"pack word"))
+            continue
+        for suffix, mult, mname in checks:
+            if (name.endswith(suffix) or f"{suffix}_" in name) \
+                    and val % mult:
+                out.append(Finding(
+                    "R004", rel, node.lineno,
+                    f"{name} = {val} is not a {mname} ({mult}) multiple"))
+    return out
+
+
+def _layout_redefinition_findings(rel, tree):
+    out = []
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id in LAYOUT_CONSTANTS \
+                and isinstance(node.value, ast.Constant):
+            out.append(Finding(
+                "R004", rel, node.lineno,
+                f"redefines layout constant {node.targets[0].id}; import "
+                f"it from repro.hw (the single source the lint checks)"))
+    return out

@@ -7,12 +7,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import forward
+from repro.serve import compile_cache
 
 
 def perplexity(cfg, params, batch_iter, *, max_batches=None) -> float:
-    """Token-level perplexity over deterministic eval windows."""
-    fwd = jax.jit(lambda p, x: forward(cfg, p, x)[0])
+    """Token-level perplexity over deterministic eval windows.
+
+    The jitted forward comes from the process-wide compile cache
+    (serve/compile_cache.py, kind "eval_forward"): repeated perplexity
+    calls on the same config — every method/bits sweep — reuse one
+    compiled program instead of re-tracing per call."""
+    fwd = compile_cache.get("eval_forward", cfg)
     total_nll, total_tok = 0.0, 0
     for bi, batch in enumerate(batch_iter):
         if max_batches is not None and bi >= max_batches:

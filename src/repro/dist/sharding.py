@@ -35,6 +35,16 @@ _CONTRACT = {"wo", "wd", "out_proj"}
 _MATMUL_EXTRA = {"in_proj", "x_proj", "dt_w", "out_proj", "router",
                  "embed", "lm_head"}
 _QT_LEAVES = {".codes", ".alphas", ".betas"}
+# Leaves models/ constructs that intentionally replicate (norm scales,
+# per-channel vectors, SSM decay params). repro-lint rule R006 checks
+# every leaf name models/ constructs against this module: a new leaf
+# must either match a placement rule below or be declared here, so
+# replication is always a decision, never a silent default.
+REPLICATED_LEAVES = frozenset({
+    "ln", "ln2", "post_ln", "post_ln2", "final_ln",   # rmsnorm scales
+    "qn", "kn", "q_a_norm", "kv_a_norm",              # qk / latent norms
+    "conv_w", "conv_b", "dt_b", "A_log", "D",         # mamba per-channel
+})
 
 
 def _is_matmul(name: str) -> bool:

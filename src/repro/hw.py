@@ -1,0 +1,24 @@
+"""TPU layout constants — the single home for the tile/pack numbers the
+kernels and the packed representations are built around.
+
+Every block/tile/group size in `kernels/` and `quant/` must trace back
+to these (repro-lint rule R004 enforces it): a tile height that is not a
+SUBLANE multiple or a lane width that is not a LANE multiple silently
+falls off the fast path on real hardware, and a group size that is not a
+WORD multiple breaks the 32-signs-per-uint32 packing invariant. Defining
+them once — instead of a `WORD = 32` per module — is what lets the lint
+check the *values* as well as the names.
+
+  SUBLANE  second-minor (sublane) tile height for fp32 operands; block
+           heights (BM and friends) must be multiples of this.
+  LANE     minor-dim lane width and MXU systolic dimension; block widths
+           (BN) must be multiples of this.
+  WORD     sign bits packed per uint32 word along K; K-blocks and scale
+           group sizes must be multiples of this so groups never split a
+           pack word.
+"""
+from __future__ import annotations
+
+SUBLANE = 8
+LANE = 128
+WORD = 32

@@ -41,7 +41,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-WORD = 32
+from repro.hw import SUBLANE, WORD
+
+# default tile sizes (repro-lint R004: named, and multiples of the
+# SUBLANE/LANE/WORD family — callers override per shape, the kernel
+# re-derives legal BK from group_size below)
+BLOCK_M = 128
+BLOCK_N = 256
+BLOCK_K = 256
+# decode-shaped (gemv) defaults: wider N/K tiles, 8-row M tile
+GEMV_BLOCK_N = 512
+GEMV_BLOCK_K = 512
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
@@ -87,8 +97,8 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
-               block_k=256, interpret=False):
+def bcq_matmul(x, codes, alphas, betas, *, block_m=BLOCK_M, block_n=BLOCK_N,
+               block_k=BLOCK_K, interpret=False):
     """x (M, K) with K % 32 == 0; codes (bits, K/32, N); alphas
     (G, N, bits); betas (G, N) with G == 1 (per-channel) or G dividing K
     into contiguous groups whose size is a multiple of 32. Returns
@@ -123,7 +133,7 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
 
     # block height must stay a multiple of the 8-sublane tile: round the
     # small-M shortcut up (e.g. M=100 -> bm=104, not 100)
-    bm = min(block_m, -(-max(8, M) // 8) * 8)
+    bm = min(block_m, -(-max(SUBLANE, M) // SUBLANE) * SUBLANE)
     Mp = -(-M // bm) * bm
     Np = -(-N // block_n) * block_n
     Kp = -(-K // block_k) * block_k
@@ -172,10 +182,10 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=128, block_n=256,
     return out[:M, :N]
 
 
-def bcq_gemv(x, codes, alphas, betas, *, block_n=512, block_k=512,
-             interpret=False):
+def bcq_gemv(x, codes, alphas, betas, *, block_n=GEMV_BLOCK_N,
+             block_k=GEMV_BLOCK_K, interpret=False):
     """Decode-shaped variant: tiny M (1..8 rows). Pads M to the 8-sublane
     tile and uses wider N/K blocks (the op is bandwidth-bound: the packed
     codes dominate bytes; x and y are negligible)."""
-    return bcq_matmul(x, codes, alphas, betas, block_m=8,
+    return bcq_matmul(x, codes, alphas, betas, block_m=SUBLANE,
                       block_n=block_n, block_k=block_k, interpret=interpret)

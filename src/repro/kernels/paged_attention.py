@@ -28,8 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.hw import WORD
+
 NEG_INF = -1e30
-WORD = 32
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \

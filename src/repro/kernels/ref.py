@@ -42,6 +42,12 @@ def bcq_matmul_ref(x, codes, alphas, betas, k_in: int):
     return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w).astype(x.dtype)
 
 
+def bcq_gemv_ref(x, codes, alphas, betas, k_in: int):
+    """Oracle for the decode-shaped kernel entry: same math as the GEMM
+    (the gemv only retiles), so the reference is shared."""
+    return bcq_matmul_ref(x, codes, alphas, betas, k_in)
+
+
 def _paged_attend(q, k, v, ctx_lens, *, window, cap):
     """Decode-time masked softmax over already-gathered K/V:
     q (B, Hkv, rep, hd); k/v (B, Hkv, K, hd); ctx_lens (B,)."""

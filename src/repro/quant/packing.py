@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-WORD = 32
+from repro.hw import WORD
 
 
 def padded_k(k: int) -> int:

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import (copy_pages, decode_step, decode_step_paged,
-                                extend_paged, prefill,
+                                extend_paged, forward, prefill,
                                 scatter_prefill_cache)
 
 _CACHE: dict = {}
@@ -77,6 +77,11 @@ def _build(kind, cfg):
     if kind == "bt_update":
         return jax.jit(lambda bt, idx, rows: bt.at[idx].set(rows),
                        donate_argnums=(0,))
+    if kind == "eval_forward":
+        # logits-only forward for perplexity eval (data/evaluate.py):
+        # repeated evals of the same config — the GPTQ sweeps run dozens
+        # — share one trace instead of re-jitting per perplexity() call
+        return jax.jit(lambda p, x: forward(cfg, p, x)[0])
     raise KeyError(kind)
 
 

@@ -11,8 +11,12 @@ jax.config.update("jax_default_matmul_precision", "highest")
 # Hypothesis example budgets: PR/tier-1 runs stay fast on the "ci"
 # profile; the nightly workflow passes --hypothesis-profile=nightly
 # (or HYPOTHESIS_PROFILE=nightly) to crank the property suites up.
-# Images without hypothesis fall back to tests/_hypothesis_fallback.py,
-# which runs a small fixed number of deterministic examples.
+# Without hypothesis the property suites are gated out entirely (each
+# test module guards them behind `if given is not None:`); environments
+# that are supposed to run them for real — the CI images — set
+# REQUIRE_HYPOTHESIS=1 so a broken install fails loudly here instead
+# of silently shrinking the suite. Import-substitution shims are banned
+# (repro-lint R008).
 try:
     from hypothesis import settings as _hyp_settings
 
@@ -21,4 +25,5 @@ try:
                                    deadline=None)
     _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 except ImportError:
-    pass
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise

@@ -16,8 +16,8 @@ import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # CPU CI image without hypothesis
-    from _hypothesis_fallback import given, settings, st
+except ImportError:  # not installed: property tests below are gated out
+    given = settings = st = None
 
 from repro.serve import OutOfPages, PagedKVCache
 
@@ -47,175 +47,178 @@ def _check(kv, index_refs):
         assert kv.refcount(pid) == rows.get(pid, 0) + index_refs.get(pid, 0)
 
 
-@settings(deadline=None)
-@given(st.integers(0, 10**9))
-def test_allocator_refcount_conservation_under_random_interleavings(seed):
-    rng = random.Random(seed)
-    page = rng.choice([2, 4, 8])
-    n_pages = rng.randint(4, 20)
-    seqs = rng.randint(1, 4)
-    kv = PagedKVCache(None, n_pages=n_pages, page_size=page,
-                      max_seqs=seqs, create_pool=False)
-    index_refs: dict[int, int] = {}   # simulated radix-index references
+if given is not None:
+    @settings(deadline=None)
+    @given(st.integers(0, 10**9))
+    def test_allocator_refcount_conservation_under_random_interleavings(seed):
+        rng = random.Random(seed)
+        page = rng.choice([2, 4, 8])
+        n_pages = rng.randint(4, 20)
+        seqs = rng.randint(1, 4)
+        kv = PagedKVCache(None, n_pages=n_pages, page_size=page,
+                          max_seqs=seqs, create_pool=False)
+        index_refs: dict[int, int] = {}   # simulated radix-index references
 
-    for _ in range(rng.randint(20, 80)):
-        op = rng.choice(OPS)
-        active = kv.active_slots()
-        if op == "alloc":
-            kv.alloc_slot()
-        elif op == "ensure" and active:
-            slot = rng.choice(active)
-            want = rng.randint(1, kv.usable_pages * page + page)
-            try:
-                kv.ensure(slot, want)
-            except OutOfPages:
-                pass                          # must allocate nothing
-        elif op == "share" and active:
-            # attach a live chain to a fresh (page-less) slot, the way
-            # admission attaches a matched prefix
-            fresh = [s for s in active if not kv.owned_pages(s)]
-            donors = [s for s in active if kv.owned_pages(s)]
-            pool = ([kv.owned_pages(rng.choice(donors))] if donors else []) \
-                + ([sorted(index_refs)] if index_refs else [])
-            if fresh and pool:
-                chain = rng.choice(pool)
-                k = rng.randint(1, min(len(chain), kv.max_pages_per_seq))
-                kv.share(rng.choice(fresh), chain[:k])
-        elif op == "cow" and active:
-            owners = [s for s in active if kv.owned_pages(s)]
-            if owners:
-                slot = rng.choice(owners)
-                cap = len(kv.owned_pages(slot)) * page
-                start = rng.randint(0, cap - 1)
-                end = rng.randint(start + 1, cap)
+        for _ in range(rng.randint(20, 80)):
+            op = rng.choice(OPS)
+            active = kv.active_slots()
+            if op == "alloc":
+                kv.alloc_slot()
+            elif op == "ensure" and active:
+                slot = rng.choice(active)
+                want = rng.randint(1, kv.usable_pages * page + page)
                 try:
-                    copies = kv.cow_for_write(slot, start, end)
+                    kv.ensure(slot, want)
                 except OutOfPages:
-                    copies = None             # must fork nothing
-                if copies is not None:
-                    # COW postcondition: nothing in the written range is
-                    # shared, and every fork came off a shared page
-                    owned = kv.owned_pages(slot)
-                    for i in range(start // page, (end - 1) // page + 1):
-                        assert kv.refcount(owned[i]) == 1
-                    for src, dst in copies:
-                        assert kv.refcount(src) >= 1 and dst in owned
-        elif op in ("release", "preempt") and active:
-            kv.release(rng.choice(active))    # preemption == release
-        elif op == "index_ref":
-            live = [pid for pid in range(1, kv.n_pages)
-                    if kv.refcount(pid) > 0 and pid not in index_refs]
-            if live:
-                pid = rng.choice(live)
-                kv.ref(pid)
-                index_refs[pid] = 1
-        elif op == "index_unref" and index_refs:
-            pid = rng.choice(sorted(index_refs))
+                    pass                          # must allocate nothing
+            elif op == "share" and active:
+                # attach a live chain to a fresh (page-less) slot, the way
+                # admission attaches a matched prefix
+                fresh = [s for s in active if not kv.owned_pages(s)]
+                donors = [s for s in active if kv.owned_pages(s)]
+                pool = ([kv.owned_pages(rng.choice(donors))] if donors else []) \
+                    + ([sorted(index_refs)] if index_refs else [])
+                if fresh and pool:
+                    chain = rng.choice(pool)
+                    k = rng.randint(1, min(len(chain), kv.max_pages_per_seq))
+                    kv.share(rng.choice(fresh), chain[:k])
+            elif op == "cow" and active:
+                owners = [s for s in active if kv.owned_pages(s)]
+                if owners:
+                    slot = rng.choice(owners)
+                    cap = len(kv.owned_pages(slot)) * page
+                    start = rng.randint(0, cap - 1)
+                    end = rng.randint(start + 1, cap)
+                    try:
+                        copies = kv.cow_for_write(slot, start, end)
+                    except OutOfPages:
+                        copies = None             # must fork nothing
+                    if copies is not None:
+                        # COW postcondition: nothing in the written range is
+                        # shared, and every fork came off a shared page
+                        owned = kv.owned_pages(slot)
+                        for i in range(start // page, (end - 1) // page + 1):
+                            assert kv.refcount(owned[i]) == 1
+                        for src, dst in copies:
+                            assert kv.refcount(src) >= 1 and dst in owned
+            elif op in ("release", "preempt") and active:
+                kv.release(rng.choice(active))    # preemption == release
+            elif op == "index_ref":
+                live = [pid for pid in range(1, kv.n_pages)
+                        if kv.refcount(pid) > 0 and pid not in index_refs]
+                if live:
+                    pid = rng.choice(live)
+                    kv.ref(pid)
+                    index_refs[pid] = 1
+            elif op == "index_unref" and index_refs:
+                pid = rng.choice(sorted(index_refs))
+                kv.unref(pid)
+                del index_refs[pid]
+            _check(kv, index_refs)
+
+        # drain everything: all pages must come home
+        for slot in kv.active_slots():
+            kv.release(slot)
+        for pid in list(index_refs):
             kv.unref(pid)
-            del index_refs[pid]
-        _check(kv, index_refs)
-
-    # drain everything: all pages must come home
-    for slot in kv.active_slots():
-        kv.release(slot)
-    for pid in list(index_refs):
-        kv.unref(pid)
-    assert kv.free_page_count == kv.usable_pages
-    assert kv.live_pages == 0
+        assert kv.free_page_count == kv.usable_pages
+        assert kv.live_pages == 0
 
 
-@settings(deadline=None)
-@given(st.integers(0, 10**9))
-def test_sharded_allocator_invariants_under_random_interleavings(seed):
-    """The same random-op soup over a 2-shard pool: conservation holds
-    globally AND within each shard, every slot's pages stay in its
-    shard, reserve pages never circulate, and cross-shard share()
-    attempts are rejected without mutating anything."""
-    rng = random.Random(seed)
-    page = rng.choice([2, 4])
-    pages_per_shard = rng.randint(3, 8)
-    kv = PagedKVCache(None, n_pages=2 * pages_per_shard, page_size=page,
-                      max_seqs=4, n_shards=2, create_pool=False)
+if given is not None:
+    @settings(deadline=None)
+    @given(st.integers(0, 10**9))
+    def test_sharded_allocator_invariants_under_random_interleavings(seed):
+        """The same random-op soup over a 2-shard pool: conservation holds
+        globally AND within each shard, every slot's pages stay in its
+        shard, reserve pages never circulate, and cross-shard share()
+        attempts are rejected without mutating anything."""
+        rng = random.Random(seed)
+        page = rng.choice([2, 4])
+        pages_per_shard = rng.randint(3, 8)
+        kv = PagedKVCache(None, n_pages=2 * pages_per_shard, page_size=page,
+                          max_seqs=4, n_shards=2, create_pool=False)
 
-    def check():
-        assert kv.live_pages + kv.free_page_count == kv.usable_pages
-        for sh in range(kv.n_shards):
-            assert kv.live_in_shard(sh) + kv.free_in_shard(sh) \
-                == kv.usable_in_shard(sh)
-            reserve = kv.null_page_of_shard(sh)
-            assert kv.refcount(reserve) == 0 and reserve not in kv._free
-        for s in range(kv.max_seqs):
-            for pid in kv.owned_pages(s):
-                assert kv.shard_of_page(pid) == kv.shard_of_slot(s)
+        def check():
+            assert kv.live_pages + kv.free_page_count == kv.usable_pages
+            for sh in range(kv.n_shards):
+                assert kv.live_in_shard(sh) + kv.free_in_shard(sh) \
+                    == kv.usable_in_shard(sh)
+                reserve = kv.null_page_of_shard(sh)
+                assert kv.refcount(reserve) == 0 and reserve not in kv._free
+            for s in range(kv.max_seqs):
+                for pid in kv.owned_pages(s):
+                    assert kv.shard_of_page(pid) == kv.shard_of_slot(s)
 
-    for _ in range(rng.randint(20, 60)):
-        op = rng.choice(OPS)
-        active = kv.active_slots()
-        if op == "alloc":
-            kv.alloc_slot(shard=rng.choice([None, 0, 1]))
-        elif op == "ensure" and active:
-            try:
-                kv.ensure(rng.choice(active),
-                          rng.randint(1, kv.usable_in_shard(0) * page
-                                      + page))
-            except OutOfPages:
-                pass
-        elif op == "share" and active:
-            fresh = [s for s in active if not kv.owned_pages(s)]
-            donors = [s for s in active if kv.owned_pages(s)]
-            if fresh and donors:
-                f, d = rng.choice(fresh), rng.choice(donors)
-                chain = kv.owned_pages(d)
-                k = rng.randint(1, min(len(chain), kv.max_pages_per_seq))
-                if kv.shard_of_slot(f) == kv.shard_of_slot(d):
-                    kv.share(f, chain[:k])
-                else:
-                    # cross-shard attach is rejected before any mutation
-                    before = kv._refcount.copy()
-                    with pytest.raises(AssertionError):
-                        kv.share(f, chain[:k])
-                    assert (kv._refcount == before).all()
-                    assert not kv.owned_pages(f)
-        elif op == "cow" and active:
-            owners = [s for s in active if kv.owned_pages(s)]
-            if owners:
-                slot = rng.choice(owners)
-                cap = len(kv.owned_pages(slot)) * page
-                start = rng.randint(0, cap - 1)
+        for _ in range(rng.randint(20, 60)):
+            op = rng.choice(OPS)
+            active = kv.active_slots()
+            if op == "alloc":
+                kv.alloc_slot(shard=rng.choice([None, 0, 1]))
+            elif op == "ensure" and active:
                 try:
-                    kv.cow_for_write(slot, start, rng.randint(start + 1,
-                                                              cap))
+                    kv.ensure(rng.choice(active),
+                              rng.randint(1, kv.usable_in_shard(0) * page
+                                          + page))
                 except OutOfPages:
                     pass
-        elif op in ("release", "preempt") and active:
-            kv.release(rng.choice(active))
-        check()
+            elif op == "share" and active:
+                fresh = [s for s in active if not kv.owned_pages(s)]
+                donors = [s for s in active if kv.owned_pages(s)]
+                if fresh and donors:
+                    f, d = rng.choice(fresh), rng.choice(donors)
+                    chain = kv.owned_pages(d)
+                    k = rng.randint(1, min(len(chain), kv.max_pages_per_seq))
+                    if kv.shard_of_slot(f) == kv.shard_of_slot(d):
+                        kv.share(f, chain[:k])
+                    else:
+                        # cross-shard attach is rejected before any mutation
+                        before = kv._refcount.copy()
+                        with pytest.raises(AssertionError):
+                            kv.share(f, chain[:k])
+                        assert (kv._refcount == before).all()
+                        assert not kv.owned_pages(f)
+            elif op == "cow" and active:
+                owners = [s for s in active if kv.owned_pages(s)]
+                if owners:
+                    slot = rng.choice(owners)
+                    cap = len(kv.owned_pages(slot)) * page
+                    start = rng.randint(0, cap - 1)
+                    try:
+                        kv.cow_for_write(slot, start, rng.randint(start + 1,
+                                                                  cap))
+                    except OutOfPages:
+                        pass
+            elif op in ("release", "preempt") and active:
+                kv.release(rng.choice(active))
+            check()
 
-    for slot in kv.active_slots():
-        kv.release(slot)
-    assert kv.free_page_count == kv.usable_pages
-    for sh in range(kv.n_shards):
-        assert kv.free_in_shard(sh) == kv.usable_in_shard(sh)
+        for slot in kv.active_slots():
+            kv.release(slot)
+        assert kv.free_page_count == kv.usable_pages
+        for sh in range(kv.n_shards):
+            assert kv.free_in_shard(sh) == kv.usable_in_shard(sh)
 
 
-@settings(deadline=None)
-@given(st.integers(0, 10**9))
-def test_failed_allocations_are_atomic(seed):
-    """ensure()/cow_for_write() that raise OutOfPages must leave the
-    allocator exactly as it was (no partial allocation)."""
-    rng = random.Random(seed)
-    page = rng.choice([2, 4])
-    kv = PagedKVCache(None, n_pages=rng.randint(4, 8), page_size=page,
-                      max_seqs=2, create_pool=False)
-    s0 = kv.alloc_slot()
-    kv.ensure(s0, rng.randint(1, (kv.usable_pages - 1) * page))
-    before = (list(kv._free), kv.owned_pages(s0),
-              kv.block_tables.copy(), kv._refcount.copy())
-    s1 = kv.alloc_slot()
-    with pytest.raises(OutOfPages):
-        kv.ensure(s1, kv.usable_pages * page + page)
-    after = (list(kv._free), kv.owned_pages(s0),
-             kv.block_tables.copy(), kv._refcount.copy())
-    assert before[0] == after[0] and before[1] == after[1]
-    assert (before[2] == after[2]).all() and (before[3] == after[3]).all()
-    assert not kv.owned_pages(s1)
+if given is not None:
+    @settings(deadline=None)
+    @given(st.integers(0, 10**9))
+    def test_failed_allocations_are_atomic(seed):
+        """ensure()/cow_for_write() that raise OutOfPages must leave the
+        allocator exactly as it was (no partial allocation)."""
+        rng = random.Random(seed)
+        page = rng.choice([2, 4])
+        kv = PagedKVCache(None, n_pages=rng.randint(4, 8), page_size=page,
+                          max_seqs=2, create_pool=False)
+        s0 = kv.alloc_slot()
+        kv.ensure(s0, rng.randint(1, (kv.usable_pages - 1) * page))
+        before = (list(kv._free), kv.owned_pages(s0),
+                  kv.block_tables.copy(), kv._refcount.copy())
+        s1 = kv.alloc_slot()
+        with pytest.raises(OutOfPages):
+            kv.ensure(s1, kv.usable_pages * page + page)
+        after = (list(kv._free), kv.owned_pages(s0),
+                 kv.block_tables.copy(), kv._refcount.copy())
+        assert before[0] == after[0] and before[1] == after[1]
+        assert (before[2] == after[2]).all() and (before[3] == after[3]).all()
+        assert not kv.owned_pages(s1)

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # CPU CI image without hypothesis
-    from _hypothesis_fallback import given, settings, st
+except ImportError:  # not installed: property tests below are gated out
+    given = settings = st = None
 
 from repro.data import (ByteTokenizer, batches, calibration_slices,
                         eval_batches, generate_corpus, token_stream)
@@ -28,13 +28,14 @@ def test_tokenizer_roundtrip():
     assert tok.vocab_size == 258
 
 
-@given(st.integers(1, 16), st.integers(8, 64), st.integers(0, 10 ** 6))
-@settings(max_examples=10, deadline=None)
-def test_calibration_slices_shape_and_range(n, L, seed):
-    toks = token_stream("wiki", 30_000)
-    sl = calibration_slices(toks, n, L, seed=seed)
-    assert sl.shape == (n, L)
-    assert sl.min() >= 0 and sl.max() < 256
+if given is not None:
+    @given(st.integers(1, 16), st.integers(8, 64), st.integers(0, 10 ** 6))
+    @settings(max_examples=10, deadline=None)
+    def test_calibration_slices_shape_and_range(n, L, seed):
+        toks = token_stream("wiki", 30_000)
+        sl = calibration_slices(toks, n, L, seed=seed)
+        assert sl.shape == (n, L)
+        assert sl.min() >= 0 and sl.max() < 256
 
 
 def test_batches_are_shifted_labels():

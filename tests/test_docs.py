@@ -1,6 +1,8 @@
 """Documentation hygiene: docs/*.md (and the root *.md) must not carry
-dangling relative links or references to files that no longer exist —
-the same check CI runs as a dedicated step (tools/check_doc_links.py)."""
+dangling relative links or references to files that no longer exist.
+The check itself is repro-lint rule R007 (docs/ANALYSIS.md); this runs
+it through the legacy tools/check_doc_links.py entry point so the shim
+stays honest too. The full-lint gate lives in tests/test_lint.py."""
 import subprocess
 import sys
 from pathlib import Path

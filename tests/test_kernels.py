@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # CPU CI image without hypothesis
-    from _hypothesis_fallback import given, settings, st
+except ImportError:  # not installed: property tests below are gated out
+    given = settings = st = None
 
 from repro.kernels import ref
 from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
@@ -54,6 +54,16 @@ def test_bcq_gemv_matches_matmul():
                                atol=1e-5)
 
 
+def test_bcq_gemv_matches_ref():
+    rng = np.random.default_rng(7)
+    codes, alphas, betas = _rand_qt(rng, 512, 384, 2)
+    x = jnp.asarray(rng.standard_normal((1, 512)).astype(np.float32))
+    want = ref.bcq_gemv_ref(x, codes, alphas, betas, 512)
+    got = bcq_gemv(x, codes, alphas, betas, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_bitplane_reassociation_equivalent():
     """GPU-LUT-GEMM-style per-bitplane formulation == dequant-fused (the
     DESIGN.md §2 equivalence that justifies the TPU adaptation)."""
@@ -70,16 +80,17 @@ def test_bitplane_reassociation_equivalent():
 # packing properties
 # ---------------------------------------------------------------------------
 
-@given(st.integers(1, 4), st.integers(1, 80), st.integers(1, 9),
-       st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=25, deadline=None)
-def test_pack_unpack_roundtrip(bits, K, N, seed):
-    rng = np.random.default_rng(seed)
-    signs = rng.integers(0, 2, (bits, K, N)).astype(bool)
-    packed = pack_signs(jnp.asarray(signs))
-    assert packed.shape == (bits, -(-K // 32), N)
-    un = np.asarray(unpack_signs(packed, K))
-    np.testing.assert_array_equal(un > 0, signs)
+if given is not None:
+    @given(st.integers(1, 4), st.integers(1, 80), st.integers(1, 9),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pack_unpack_roundtrip(bits, K, N, seed):
+        rng = np.random.default_rng(seed)
+        signs = rng.integers(0, 2, (bits, K, N)).astype(bool)
+        packed = pack_signs(jnp.asarray(signs))
+        assert packed.shape == (bits, -(-K // 32), N)
+        un = np.asarray(unpack_signs(packed, K))
+        np.testing.assert_array_equal(un > 0, signs)
 
 
 def test_quantized_tensor_pytree_and_scan():

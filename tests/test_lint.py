@@ -1,0 +1,411 @@
+"""repro-lint framework tests: one positive (fires) and one negative
+(stays quiet) fixture tree per rule, the baseline round-trip, and the
+pin that the real tree matches the committed baseline exactly.
+
+Fixture trees are built under tmp_path with the same layout the rules
+expect (src/repro/kernels, docs/, tests/ ...) — AnalysisContext is
+rooted at an arbitrary directory precisely so rules are testable on
+synthetic mini-trees.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.baseline import (load_baseline, partition,
+                                     render_baseline)
+from repro.analysis.context import AnalysisContext
+from repro.analysis.finding import Finding, sort_findings
+from repro.analysis.registry import available_rules, get_rule, run_rules
+
+REPO = Path(__file__).resolve().parents[1]
+BASELINE = REPO / "tools" / "repro_lint_baseline.txt"
+
+
+def tree(root, files: dict):
+    """Materialize {relpath: source} under root, return a context."""
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return AnalysisContext(root)
+
+
+def run(rule_id, ctx):
+    return get_rule(rule_id).run(ctx)
+
+
+# ---------------------------------------------------------------------------
+# framework basics
+# ---------------------------------------------------------------------------
+
+def test_all_builtin_rules_registered():
+    assert available_rules() == ["R001", "R002", "R003", "R004",
+                                 "R005", "R006", "R007", "R008"]
+
+
+def test_finding_ordering_and_key():
+    a = Finding("R002", "b.py", 9, "zzz")
+    b = Finding("R001", "a.py", 1, "mmm")
+    assert sort_findings([a, b]) == [b, a]
+    assert a.key() == "R002\tb.py\tzzz"          # line-free: move-stable
+    assert "b.py:9" in a.render()
+
+
+def test_parse_failure_is_a_finding_not_a_crash(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/kernels/bad.py": "def f(:\n"})
+    assert run("R001", ctx) == []
+    fails = ctx.parse_failures()
+    assert len(fails) == 1 and fails[0].rule_id == "R000"
+
+
+# ---------------------------------------------------------------------------
+# R001 kernel/oracle parity
+# ---------------------------------------------------------------------------
+
+_KERNEL = "def my_kernel(x, codes, *, block_m=None, acc=None):\n    return x\n"
+
+
+def test_r001_missing_oracle_fires(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/kernels/foo.py": _KERNEL,
+        "src/repro/kernels/ref.py": "def other_ref(x):\n    return x\n",
+    })
+    msgs = [f.message for f in run("R001", ctx)]
+    assert any("no `my_kernel_ref` oracle" in m for m in msgs)
+
+
+def test_r001_oracle_and_test_satisfy(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/kernels/foo.py": _KERNEL,
+        "src/repro/kernels/ref.py":
+            "def my_kernel_ref(x, codes, *, acc=None):\n    return x\n",
+        "tests/test_foo.py":
+            "from repro.kernels.foo import my_kernel\n"
+            "from repro.kernels.ref import my_kernel_ref\n",
+    })
+    assert run("R001", ctx) == []
+
+
+def test_r001_signature_drift_fires(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/kernels/foo.py": _KERNEL,
+        # positional order swapped and a non-tuning kwarg dropped
+        "src/repro/kernels/ref.py":
+            "def my_kernel_ref(codes, x):\n    return x\n",
+        "tests/test_foo.py": "import my_kernel, my_kernel_ref\n",
+    })
+    msgs = [f.message for f in run("R001", ctx)]
+    assert any("not a prefix" in m for m in msgs)
+    assert any("missing from oracle" in m for m in msgs)
+
+
+def test_r001_missing_test_fires(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/kernels/foo.py": "def my_kernel(x):\n    return x\n",
+        "src/repro/kernels/ref.py":
+            "def my_kernel_ref(x):\n    return x\n",
+    })
+    msgs = [f.message for f in run("R001", ctx)]
+    assert any("kernel-vs-oracle test missing" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# R002 jit ownership
+# ---------------------------------------------------------------------------
+
+def test_r002_stray_jit_fires(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/serve/engine2.py":
+            "import jax\nstep = jax.jit(lambda x: x)\n",
+    })
+    assert any("outside" in f.message for f in run("R002", ctx))
+
+
+def test_r002_owner_and_aliases(tmp_path):
+    ctx = tree(tmp_path, {
+        # the owner may jit; an alias elsewhere still fires
+        "src/repro/serve/compile_cache.py":
+            "import jax\nf = jax.jit(lambda x: x)\n",
+        "src/repro/quant/sneaky.py":
+            "from jax import jit as J\ng = J(lambda x: x)\n",
+    })
+    findings = run("R002", ctx)
+    assert [f.file for f in findings] == ["src/repro/quant/sneaky.py"]
+
+
+def test_r002_nonliteral_static_args_fire_even_in_owner(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/serve/compile_cache.py":
+            "import jax\nNAMES = ('a',)\n"
+            "f = jax.jit(lambda a: a, static_argnames=NAMES)\n",
+    })
+    assert any("not a literal" in f.message for f in run("R002", ctx))
+
+
+# ---------------------------------------------------------------------------
+# R003 tracer hygiene
+# ---------------------------------------------------------------------------
+
+_JIT_HDR = "import jax\nimport functools\n"
+
+
+def test_r003_branch_on_traced_param_fires(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/quant/f.py": _JIT_HDR + (
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    y = x + 1\n"
+        "    if y > 0:\n"
+        "        return y\n"
+        "    return int(x)\n")})
+    msgs = [f.message for f in run("R003", ctx)]
+    assert any("Python `if`" in m for m in msgs)
+    assert any("int() forces" in m for m in msgs)
+
+
+def test_r003_shape_metadata_is_static(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/quant/f.py": _JIT_HDR + (
+        "@functools.partial(jax.jit, static_argnames=('n',))\n"
+        "def f(x, n):\n"
+        "    M, K = x.shape\n"
+        "    if M != n:\n"
+        "        x = x[:n]\n"
+        "    for _ in range(len(x.shape)):\n"
+        "        pass\n"
+        "    return x\n")})
+    assert run("R003", ctx) == []
+
+
+def test_r003_pallas_kernel_body(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/kernels/k.py": (
+        "from jax.experimental import pallas as pl\n"
+        "import functools\n"
+        "def _kern(x_ref, o_ref, *, bk):\n"
+        "    v = x_ref[0, 0]\n"
+        "    while v > 0:\n"
+        "        v = v - 1\n"
+        "def entry(x):\n"
+        "    return pl.pallas_call(functools.partial(_kern, bk=8))(x)\n")})
+    msgs = [f.message for f in run("R003", ctx)]
+    assert any("Python `while`" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# R004 tiling contracts
+# ---------------------------------------------------------------------------
+
+def test_r004_magic_literal_fires(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/kernels/k.py": (
+        "def k(x, block_m=100):\n"
+        "    return g(x, block_k=48)\n")})
+    msgs = [f.message for f in run("R004", ctx)]
+    assert any("magic literal 100" in m for m in msgs)
+    assert any("magic literal 48" in m for m in msgs)
+
+
+def test_r004_named_constants_checked_and_satisfy(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/kernels/k.py": (
+        "BLOCK_M = 128\nBLOCK_N = 256\nBLOCK_K = 96\n"
+        "GROUP_SIZE = 64\n"
+        "def k(x, block_m=BLOCK_M, block_k=None):\n"
+        "    return x\n")})
+    assert run("R004", ctx) == []
+    ctx2 = tree(tmp_path / "bad", {"src/repro/kernels/k.py": (
+        "BLOCK_M = 100\nBLOCK_N = 100\nBLOCK_K = 100\nGROUP_SIZE = 100\n")})
+    msgs = [f.message for f in run("R004", ctx2)]
+    assert len(msgs) == 4 and any("SUBLANE" in m for m in msgs) \
+        and any("LANE" in m for m in msgs) \
+        and any("pack word" in m for m in msgs)
+
+
+def test_r004_layout_constants_owned_by_hw(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/quant/p.py": "WORD = 32\n"})
+    assert any("redefines layout constant WORD" in f.message
+               for f in run("R004", ctx))
+
+
+# ---------------------------------------------------------------------------
+# R005 registry/docs + EngineStats completeness
+# ---------------------------------------------------------------------------
+
+_QREG = ("from repro.quant.registry import register_quantizer\n"
+         "@register_quantizer('zap')\n"
+         "class Zap:\n    pass\n")
+
+
+def test_r005_undocumented_name_fires(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/core/q.py": _QREG,
+                          "docs/QUANT.md": "# quantizers\n"})
+    assert any("`zap` not documented" in f.message
+               for f in run("R005", ctx))
+
+
+def test_r005_documented_name_satisfies(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/core/q.py": _QREG,
+                          "docs/QUANT.md": "| `zap` | zaps |\n"})
+    assert run("R005", ctx) == []
+
+
+def test_r005_unpopulated_stats_field_fires(tmp_path):
+    ctx = tree(tmp_path, {"src/repro/serve/stats.py": (
+        "from dataclasses import dataclass\n"
+        "@dataclass(frozen=True)\n"
+        "class EngineStats:\n"
+        "    tokens: int = 0\n"
+        "    ghost: int = 0\n"
+        "    @classmethod\n"
+        "    def capture(cls, engine):\n"
+        "        return cls(**{'tokens': 1})\n")})
+    msgs = [f.message for f in run("R005", ctx)]
+    assert any("EngineStats.ghost is never populated" in m for m in msgs)
+    assert not any("tokens" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# R006 sharding coverage
+# ---------------------------------------------------------------------------
+
+_SHARDING = "KNOWN = {'k', 'v', 'ln'}\n"
+
+
+def test_r006_unknown_leaf_fires(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "def init_m(cfg):\n"
+            "    return {'mystery': zeros(), 'wq': zeros(),\n"
+            "            'sub': init_other(cfg)}\n"),
+        "src/repro/dist/sharding.py": _SHARDING,
+    })
+    findings = run("R006", ctx)
+    msgs = [f.message for f in findings]
+    assert any("`mystery`" in m for m in msgs)
+    # w* leaves match the matmul rule; init_* values are subtrees
+    assert not any("wq" in m or "sub" in m for m in msgs)
+
+
+def test_r006_known_and_subscript_leaves(tmp_path):
+    ctx = tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "def init_cache(cfg):\n"
+            "    c = {'k': zeros(), 'v': zeros()}\n"
+            "    c['ln'] = zeros()\n"
+            "    return c\n"
+            "def forward(p):\n"
+            "    return {'not_checked': p}\n"),   # not an init_ function
+        "src/repro/dist/sharding.py": _SHARDING,
+    })
+    assert run("R006", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# R007 docs links
+# ---------------------------------------------------------------------------
+
+def test_r007_dangling_refs_fire(tmp_path):
+    ctx = tree(tmp_path, {
+        "docs/GUIDE.md": ("see [x](missing.md) and `src/repro/gone.py` "
+                          "for details\n"),
+        "README.md": "[ok](docs/GUIDE.md) and `docs/GUIDE.md`\n",
+    })
+    findings = run("R007", ctx)
+    assert {f.message.split("(")[0].strip() for f in findings} == {
+        "dangling link", "stale file reference `src/repro/gone.py`"}
+    assert all(f.file == "docs/GUIDE.md" for f in findings)
+
+
+def test_r007_resolving_refs_satisfy(tmp_path):
+    ctx = tree(tmp_path, {
+        "docs/GUIDE.md": "[readme](../README.md) runs `tools/x.py` "
+                         "and skips https://example.com plus `a.json`\n",
+        "README.md": "hello\n",
+        "tools/x.py": "pass\n",
+    })
+    assert run("R007", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# R008 no test shims
+# ---------------------------------------------------------------------------
+
+def test_r008_shim_module_and_sys_modules_fire(tmp_path):
+    ctx = tree(tmp_path, {
+        "tests/_thing_fallback.py": "st = None\n",
+        "tests/test_a.py": ("import sys\n"
+                            "sys.modules['hypothesis'] = object()\n"),
+    })
+    msgs = [f.message for f in run("R008", ctx)]
+    assert any("fallback/shim module" in m for m in msgs)
+    assert any("sys.modules" in m for m in msgs)
+
+
+def test_r008_importerror_gate_is_fine(tmp_path):
+    ctx = tree(tmp_path, {"tests/test_a.py": (
+        "try:\n"
+        "    from hypothesis import given, settings, strategies as st\n"
+        "except ImportError:\n"
+        "    given = settings = st = None\n")})
+    assert run("R008", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_partition(tmp_path):
+    f1 = Finding("R004", "a.py", 3, "bad tile")
+    f2 = Finding("R007", "b.md", 9, "dangling link (x)")
+    path = tmp_path / "base.txt"
+    path.write_text(render_baseline([f1, f2], {f1.key(): "grandfathered"}))
+    base = load_baseline(path)
+    assert base[f1.key()] == "grandfathered" and base[f2.key()] == ""
+
+    f3 = Finding("R002", "c.py", 1, "stray jit")
+    new, suppressed, stale = partition([f1, f3], base)
+    assert new == [f3] and suppressed == [f1] and stale == [f2.key()]
+
+    # determinism: same findings, same bytes
+    assert render_baseline([f2, f1], base) == render_baseline([f1, f2],
+                                                              base)
+
+
+def test_baseline_rejects_malformed_lines(tmp_path):
+    p = tmp_path / "base.txt"
+    p.write_text("R004 a.py no-tabs-here\n")
+    with pytest.raises(ValueError, match="malformed"):
+        load_baseline(p)
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+def test_full_tree_matches_committed_baseline_exactly():
+    """The repo itself is lint-clean modulo the committed baseline: no
+    new findings AND no stale suppressions. This is the same contract
+    the CI step enforces via the CLI exit code."""
+    ctx = AnalysisContext(REPO)
+    findings = ctx.parse_failures() + run_rules(ctx)
+    new, _, stale = partition(findings, load_baseline(BASELINE))
+    assert new == [], "\n".join(f.render() for f in new)
+    assert stale == [], "\n".join(stale)
+
+
+def test_cli_exits_nonzero_on_injected_violation(tmp_path):
+    """End-to-end through the CLI: a bad fixture tree must fail, and
+    --update-baseline must make the same tree pass."""
+    root = tmp_path / "mini"
+    (root / "src/repro/kernels").mkdir(parents=True)
+    (root / "src/repro/kernels/k.py").write_text("BLOCK_K = 100\n")
+    base = tmp_path / "base.txt"
+
+    cmd = [sys.executable, str(REPO / "tools" / "repro_lint.py"),
+           "--root", str(root), "--baseline", str(base)]
+    r = subprocess.run(cmd, capture_output=True, text=True)
+    assert r.returncode == 1 and "BLOCK_K" in r.stdout
+
+    r = subprocess.run(cmd + ["--update-baseline"], capture_output=True,
+                       text=True)
+    assert r.returncode == 0
+    r = subprocess.run(cmd, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout

@@ -20,8 +20,8 @@ import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # CPU CI image without hypothesis
-    from _hypothesis_fallback import given, settings, st
+except ImportError:  # not installed: property tests below are gated out
+    given = settings = st = None
 
 from repro.configs import get_config
 from repro.models import init_params
@@ -91,20 +91,21 @@ def _check_pool(kv):
         assert not kv.owned_pages(s)
 
 
-@settings(deadline=None)
-@given(st.integers(0, 10**6))
-def test_paged_sharing_matches_dense_oracle(seed):
-    state = _setup()
-    rng = np.random.default_rng(seed)
-    key = POOLS[seed % len(POOLS)]
-    eng = state["paged"][key]
-    eng._prefix.clear()          # example state derives from seed alone
-    for _wave in range(2):       # wave 2 hits wave 1's accumulated index
-        reqs = _workload(rng, state["cfg"].vocab_size, state["bases"])
-        want = _serve(state["dense"], reqs)
-        got = _serve(eng, reqs)
-        assert got == want, (seed, key, _wave)
-        _check_pool(eng.kv)
+if given is not None:
+    @settings(deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_paged_sharing_matches_dense_oracle(seed):
+        state = _setup()
+        rng = np.random.default_rng(seed)
+        key = POOLS[seed % len(POOLS)]
+        eng = state["paged"][key]
+        eng._prefix.clear()          # example state derives from seed alone
+        for _wave in range(2):       # wave 2 hits wave 1's accumulated index
+            reqs = _workload(rng, state["cfg"].vocab_size, state["bases"])
+            want = _serve(state["dense"], reqs)
+            got = _serve(eng, reqs)
+            assert got == want, (seed, key, _wave)
+            _check_pool(eng.kv)
 
 
 def test_fuzz_engines_accumulated_sharing():

@@ -1,71 +1,17 @@
 #!/usr/bin/env python
-"""Docs link checker: every relative markdown link and every
-slash-containing backticked file reference in docs/*.md (and the root
-*.md) must resolve to a real file, so the docs can't silently rot as
-the tree is refactored.
-
-Resolution: a markdown link resolves relative to its document; a
-backticked path like `serve/engine.py` resolves against the repo root,
-src/, src/repro/ and docs/ (first hit wins). References without a "/"
-(e.g. `manifest.json`, artifact members) are not checked.
-
-  python tools/check_doc_links.py          # exits 1 on dangling refs
+"""Thin compatibility shim: the docs link check is now repro-lint rule
+R007 (src/repro/analysis/rules/docs.py, catalog in docs/ANALYSIS.md).
+This entry point just runs that one rule so old habits and scripts keep
+working; CI runs the full linter via tools/repro_lint.py.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-# [text](relative/target.md#anchor) — external schemes are skipped
-MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-# `path/with/slash.ext` possibly followed by ":symbol" or " --flags"
-CODE_REF = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
-                      r"\.(?:py|md|yml|yaml|json|txt))[:\s`]")
-SEARCH_ROOTS = ("", "src", "src/repro", "docs")
-
-
-def _doc_files():
-    return sorted(list((ROOT / "docs").glob("*.md"))
-                  + list(ROOT.glob("*.md")))
-
-
-def _resolve_code_ref(ref: str) -> bool:
-    return any((ROOT / base / ref).exists() for base in SEARCH_ROOTS)
-
-
-def check() -> list[str]:
-    problems = []
-    for doc in _doc_files():
-        text = doc.read_text()
-        rel = doc.relative_to(ROOT)
-        for m in MD_LINK.finditer(text):
-            target = m.group(1)
-            if re.match(r"^[a-z][a-z0-9+.-]*:", target) \
-                    or target.startswith("#"):
-                continue                      # external / in-page
-            path = (doc.parent / target.split("#", 1)[0]).resolve()
-            if not path.exists():
-                problems.append(f"{rel}: dangling link ({target})")
-        for m in CODE_REF.finditer(text):
-            ref = m.group(1)
-            if not _resolve_code_ref(ref):
-                problems.append(f"{rel}: stale file reference `{ref}`")
-    return problems
-
-
-def main() -> int:
-    problems = check()
-    for p in problems:
-        print(p)
-    if problems:
-        print(f"{len(problems)} dangling doc reference(s)")
-        return 1
-    print(f"doc links OK ({len(_doc_files())} files checked)")
-    return 0
-
+from repro_lint import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--rule", "R007"]))

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""repro-lint: run the repo's invariant rules (src/repro/analysis/)
+over the tree and gate on the committed suppression baseline.
+
+  PYTHONPATH=src python tools/repro_lint.py                 # full run
+  PYTHONPATH=src python tools/repro_lint.py --rule R004     # one rule
+  PYTHONPATH=src python tools/repro_lint.py --list-rules
+  PYTHONPATH=src python tools/repro_lint.py --update-baseline
+
+Exit status: 0 when every finding is baselined and no baseline entry is
+stale; 1 otherwise. `--update-baseline` rewrites the baseline to
+exactly the current findings (deterministic order, justifications of
+surviving entries carried forward) and exits 0 — commit the diff.
+
+Rule catalog and the suppression workflow: docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.baseline import (load_baseline, partition,  # noqa: E402
+                                     render_baseline)
+from repro.analysis.context import AnalysisContext  # noqa: E402
+from repro.analysis.registry import (available_rules, get_rule,  # noqa: E402
+                                     run_rules)
+
+DEFAULT_BASELINE = ROOT / "tools" / "repro_lint_baseline.txt"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="repo invariant lint (docs/ANALYSIS.md)")
+    ap.add_argument("--root", default=str(ROOT),
+                    help="tree to analyze (default: the repo)")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="RNNN",
+                    help="run only this rule (repeatable); baseline "
+                    "gating still applies to the selected rules")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="suppression baseline file")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything, gate "
+                    "on any finding)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                    "and exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in available_rules():
+            rule = get_rule(rid)
+            print(f"{rid}  {rule.title}")
+            if rule.rationale:
+                print(f"      {rule.rationale}")
+        return 0
+
+    ctx = AnalysisContext(args.root)
+    findings = run_rules(ctx, args.rules)
+    findings = ctx.parse_failures() + findings
+
+    if args.update_baseline:
+        old = load_baseline(args.baseline)
+        Path(args.baseline).write_text(render_baseline(findings, old))
+        print(f"wrote {args.baseline} ({len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'})")
+        return 0
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    new, suppressed, stale = partition(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if stale and not args.rules:
+        # a partial run can't tell a stale entry from an unrun rule
+        for key in stale:
+            print(f"stale baseline entry (no longer fires): "
+                  f"{key.replace(chr(9), ' | ')}")
+    else:
+        stale = []
+
+    n_rules = len(args.rules) if args.rules else len(available_rules())
+    print(f"repro-lint: {n_rules} rule(s), {len(new)} finding(s), "
+          f"{len(suppressed)} suppressed, {len(stale)} stale")
+    if new or stale:
+        print("fix the findings, or run --update-baseline and commit "
+              "the diff with a justification per entry")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
