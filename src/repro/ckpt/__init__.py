@@ -1,4 +1,5 @@
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.ckpt.packed import load_packed, save_packed
+from repro.ckpt.packed import load_draft_scales, load_packed, save_packed
 
-__all__ = ["CheckpointManager", "save_packed", "load_packed"]
+__all__ = ["CheckpointManager", "save_packed", "load_packed",
+           "load_draft_scales"]

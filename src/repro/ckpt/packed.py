@@ -17,12 +17,19 @@ trees and checks token-identical output.
 Format history (manifest["format_version"], loaders accept <= current):
   v1 (PR 3)  — tree + arrays + spec; per-channel scales only.
   v2 (PR 4)  — qt leaves record groups/group_size (G-axis scales).
-  v3 (this)  — "sharding" block (symbolic mesh axes) + per-leaf
+  v3 (PR 5)  — "sharding" block (symbolic mesh axes) + per-leaf
                symbolic PartitionSpecs, so `load_packed(mesh=...)`
                places every leaf straight onto a jax.sharding mesh with
                no host-side full-tree materialization; optional
                `scale_dtype="bfloat16"` halves alpha/beta bytes
                (manifest-flagged; fp32 artifacts load unchanged).
+  v4 (this)  — optional per-leaf "draft" block: offline re-fit scales
+               for a `draft_bits` prefix of the code planes
+               (quant/draft.py), read back by `load_draft_scales` so a
+               self-speculative boot skips the on-the-fly LS refit.
+               Also: bf16-stored scales now STAY bf16 in memory (the
+               kernels expand them in fp32 in VMEM); pre-v4 loads
+               rehydrated them to fp32.
 
 Sharding metadata is *symbolic* — axis names from dist.sharding's rules
 with no sizes — so one artifact serves any mesh shape: at load the spec
@@ -53,7 +60,7 @@ import numpy as np
 from repro.quant.qlinear import QuantizedTensor
 from repro.quant.spec import QuantSpec
 
-FORMAT_VERSION = 3
+FORMAT_VERSION = 4
 SCALE_DTYPES = (None, "float32", "bfloat16")
 
 # one warning per process for legacy per-channel artifacts loaded under
@@ -71,10 +78,26 @@ def _symbolic_spec(names, leaf):
                                      symbolic_mesh()))
 
 
-def _encode(tree, arrays: dict, path=(), scale_dtype=None):
+def _store_scale(arr, arrays: dict, scale_dtype):
+    """Collect one alpha/beta array; returns (key, flagged_bf16). bf16
+    is stored as raw uint16 bits (npz has no bfloat16 and would degrade
+    it to a void dtype). Scales that are ALREADY bf16 (e.g. via
+    cast_scales) take this path unconditionally — storing them verbatim
+    would commit an artifact load_packed cannot read."""
+    key = f"a{len(arrays)}"
+    arr = np.asarray(arr)
+    bf16 = scale_dtype == "bfloat16" or str(arr.dtype) == "bfloat16"
+    arrays[key] = (arr.astype(jnp.bfloat16).view(np.uint16) if bf16
+                   else arr)
+    return key, bf16
+
+
+def _encode(tree, arrays: dict, path=(), scale_dtype=None,
+            draft_bits=None):
     """Nested dict tree -> manifest node; arrays collected by key."""
     if isinstance(tree, dict):
-        return {k: _encode(v, arrays, path + (k,), scale_dtype)
+        return {k: _encode(v, arrays, path + (k,), scale_dtype,
+                           draft_bits)
                 for k, v in tree.items()}
     if isinstance(tree, QuantizedTensor):
         ent = {"kind": "qt", "k_in": tree.k_in,
@@ -87,21 +110,28 @@ def _encode(tree, arrays: dict, path=(), scale_dtype=None):
                "pspec": {f: _symbolic_spec(path + ("." + f,),
                                            getattr(tree, f))
                          for f in ("codes", "alphas", "betas")}}
-        for field in ("codes", "alphas", "betas"):
-            key = f"a{len(arrays)}"
-            arr = np.asarray(getattr(tree, field))
-            if field != "codes" and (scale_dtype == "bfloat16"
-                                     or str(arr.dtype) == "bfloat16"):
-                # halve the G-axis scale bytes: store bf16 bits (npz has
-                # no bfloat16 and would degrade it to a void dtype),
-                # flag it, round-trip through a view. Scales that are
-                # ALREADY bf16 (e.g. via cast_scales) take this path
-                # unconditionally — storing them verbatim would commit
-                # an artifact load_packed cannot read.
-                arr = arr.astype(jnp.bfloat16).view(np.uint16)
+        key = f"a{len(arrays)}"
+        arrays[key] = np.asarray(tree.codes)
+        ent["codes"] = key
+        for field in ("alphas", "betas"):
+            # halve the G-axis scale bytes under scale_dtype="bfloat16"
+            key, bf16 = _store_scale(getattr(tree, field), arrays,
+                                     scale_dtype)
+            if bf16:
                 ent["scale_dtype"] = "bfloat16"
-            arrays[key] = arr
             ent[field] = key
+        if draft_bits is not None and draft_bits < tree.bits:
+            # v4 optional block: offline re-fit scales for the leading
+            # draft_bits code planes (quant/draft.py); codes are shared
+            # with the target so this is the draft's entire footprint
+            from repro.quant.draft import refit_draft_scales
+            da, db = refit_draft_scales(tree, draft_bits)
+            ka, bf16 = _store_scale(da, arrays, scale_dtype)
+            kb, _ = _store_scale(db, arrays, scale_dtype)
+            ent["draft"] = {"bits": int(draft_bits),
+                            "alphas": ka, "betas": kb}
+            if bf16:
+                ent["draft"]["scale_dtype"] = "bfloat16"
         return ent
     key = f"a{len(arrays)}"
     arr = np.asarray(tree)
@@ -144,9 +174,11 @@ def _decode(node, arrays, place: _Placer):
         def scales(field):
             a = arrays[node[field]]
             if node.get("scale_dtype") == "bfloat16":
-                # fp32 load path kept: bf16-stored scales rehydrate to
-                # fp32 values (rounded once at save)
-                a = np.asarray(a).view(jnp.bfloat16).astype(np.float32)
+                # bf16 scales stay bf16 IN MEMORY (half the resident
+                # scale bytes); the matmul kernels and the jnp
+                # reference both expand them in fp32, so numerics match
+                # the old rehydrate-to-fp32 load path exactly
+                a = np.asarray(a).view(jnp.bfloat16)
             return place(a, pspec[field] if pspec else None)
         alphas = scales("alphas")
         if "groups" in node and alphas.shape[-3] != node["groups"]:
@@ -166,15 +198,20 @@ def _decode(node, arrays, place: _Placer):
 
 
 def save_packed(directory, params, *, spec: QuantSpec | None = None,
-                meta: dict | None = None, scale_dtype: str | None = None
-                ) -> Path:
+                meta: dict | None = None, scale_dtype: str | None = None,
+                draft_bits: int | None = None) -> Path:
     """Write a packed model artifact; returns the final directory.
     `scale_dtype="bfloat16"` stores QuantizedTensor alphas/betas as
     bf16 (half the G-axis scale bytes; values round once — parity is
-    within bf16 epsilon of the fp32 artifact)."""
+    within bf16 epsilon of the fp32 artifact). `draft_bits=d` also
+    stores LS re-fit scales for the leading d code planes of every
+    quantized leaf (the v4 optional draft block) so a self-speculative
+    boot (`serve --speculate k --draft-bits d`) skips the refit."""
     if scale_dtype not in SCALE_DTYPES:
         raise ValueError(f"scale_dtype={scale_dtype!r}; "
                          f"expected one of {SCALE_DTYPES}")
+    if draft_bits is not None and draft_bits < 1:
+        raise ValueError(f"draft_bits must be >= 1, got {draft_bits}")
     from repro.dist.sharding import SYMBOLIC_AXES
     final = Path(directory)
     tmp = final.with_name(final.name + ".tmp")
@@ -192,8 +229,11 @@ def save_packed(directory, params, *, spec: QuantSpec | None = None,
                      "rule": "repro.dist.sharding.named_pspec"},
         "tree": _encode(params, arrays,
                         scale_dtype=None if scale_dtype == "float32"
-                        else scale_dtype),
+                        else scale_dtype,
+                        draft_bits=draft_bits),
     }
+    if draft_bits is not None:
+        manifest["draft_bits"] = int(draft_bits)
     np.savez(tmp / "arrays.npz", **arrays)
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     if final.exists():
@@ -238,6 +278,40 @@ def load_packed(directory, *, mesh=None, fsdp: bool = False):
             if manifest.get("spec") else None)
     _warn_legacy_groups(d, params, spec)
     return params, spec, manifest.get("meta", {})
+
+
+def load_draft_scales(directory):
+    """Read the v4 draft block: a nested dict mirroring the param tree
+    with {"bits", "alphas", "betas"} at quantized-leaf positions, ready
+    for quant.draft.make_draft_params(scales_tree=...). Returns None
+    when the artifact carries no draft block (pre-v4, or saved without
+    `draft_bits`) — callers fall back to the on-the-fly LS refit."""
+    d = Path(directory)
+    if not (d / "COMMITTED").exists():
+        raise FileNotFoundError(
+            f"{d} is not a committed packed artifact (missing COMMITTED)")
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+    found = [False]
+
+    def walk(node):
+        if "kind" not in node or not isinstance(node.get("kind"), str):
+            return {k: walk(v) for k, v in node.items()}
+        blk = node.get("draft") if node["kind"] == "qt" else None
+        if blk is None:
+            return None
+        found[0] = True
+
+        def scale(key):
+            a = arrays[blk[key]]
+            if blk.get("scale_dtype") == "bfloat16":
+                a = np.asarray(a).view(jnp.bfloat16)
+            return jnp.asarray(a)
+        return {"bits": int(blk["bits"]),
+                "alphas": scale("alphas"), "betas": scale("betas")}
+
+    tree = walk(manifest["tree"])
+    return tree if found[0] else None
 
 
 def _warn_no_pspec(d, version) -> None:

@@ -79,10 +79,13 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
     # [g*sub, (g+1)*sub) of this K-tile (sub = BK // BG)
     sub = bk // bg
     signs = signs.reshape(bits, bg, sub, bn)
+    # scales may arrive bf16 (packed artifacts keep them bf16 in
+    # memory); expand in fp32 so accumulation matches fp32-scale runs
     w = jnp.broadcast_to(
         beta_ref[...][:, None, :], (bg, sub, bn)).astype(jnp.float32)
     for i in range(bits):                                # static unroll
-        w = w + alpha_ref[:, :, i][:, None, :] * signs[i]
+        a_i = alpha_ref[:, :, i].astype(jnp.float32)
+        w = w + a_i[:, None, :] * signs[i]
     w = w.reshape(bk, bn)
 
     acc_ref[...] += jax.lax.dot_general(

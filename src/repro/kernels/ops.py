@@ -39,31 +39,43 @@ def _kernel_groups_ok(qt) -> bool:
     return qt.k_in % G == 0 and (qt.k_in // G) % WORD == 0
 
 
+def _active_codes(qt):
+    """Code planes the tensor's scales actually weight. Draft views keep
+    the full stored planes (they alias the target's packed words) but
+    carry fewer alphas; the slice happens here, at trace time, so the
+    smaller plane stack never persists in HBM."""
+    if qt.bits == qt.stored_bits:
+        return qt.codes
+    return qt.codes[..., : qt.bits, :, :]
+
+
 def bcq_apply(x, qt):
     """x (..., k_in) @ QuantizedTensor -> (..., n_out)."""
-    lead = qt.codes.shape[:-3]
+    codes = _active_codes(qt)
+    lead = codes.shape[:-3]
     if lead:                      # expert/group stacks: reference path
         w = _dequant_nd(qt, x.dtype)
         return jnp.einsum("...k,...kn->...n", x, w)
     if not _use_pallas() or not _kernel_groups_ok(qt):
-        w = ref.dequant_ref(qt.codes, qt.alphas, qt.betas, qt.k_in,
+        w = ref.dequant_ref(codes, qt.alphas, qt.betas, qt.k_in,
                             dtype=x.dtype)
         return jnp.einsum("...k,kn->...n", x, w)
 
     interpret = jax.default_backend() != "tpu"
     xm = x.reshape(-1, qt.k_in)
-    kp = qt.codes.shape[-2] * WORD
+    kp = codes.shape[-2] * WORD
     if kp != qt.k_in:
         xm = jnp.pad(xm, ((0, 0), (0, kp - qt.k_in)))
     fn = bcq_gemv if xm.shape[0] <= 8 else bcq_matmul
-    y = fn(xm, qt.codes, qt.alphas, qt.betas, interpret=interpret)
+    y = fn(xm, codes, qt.alphas, qt.betas, interpret=interpret)
     return y.reshape(*x.shape[:-1], qt.n_out)
 
 
 def _dequant_nd(qt, dtype):
     """Dequantize with arbitrary leading dims (expert/group stacks)."""
-    lead = qt.codes.shape[:-3]
-    codes = qt.codes.reshape(-1, *qt.codes.shape[-3:])
+    acodes = _active_codes(qt)
+    lead = acodes.shape[:-3]
+    codes = acodes.reshape(-1, *acodes.shape[-3:])
     alphas = qt.alphas.reshape(-1, *qt.alphas.shape[-3:])
     betas = qt.betas.reshape(-1, *qt.betas.shape[-2:])
     ws = jax.vmap(lambda c, a, b: ref.dequant_ref(c, a, b, qt.k_in, dtype))(

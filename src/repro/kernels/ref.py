@@ -30,8 +30,11 @@ def dequant_ref(codes, alphas, betas, k_in: int, dtype=jnp.float32):
     signs = unpack_signs(codes, k_in)                    # (bits, K, N)
     G = alphas.shape[0]
     glen = -(-k_in // G)
-    a = jnp.repeat(alphas, glen, axis=0)[:k_in]          # (K, N, bits)
-    b = jnp.repeat(betas, glen, axis=0)[:k_in]           # (K, N)
+    # scales may be bf16 in memory (packed artifacts); expand in fp32
+    a = jnp.repeat(alphas.astype(jnp.float32),
+                   glen, axis=0)[:k_in]                  # (K, N, bits)
+    b = jnp.repeat(betas.astype(jnp.float32),
+                   glen, axis=0)[:k_in]                  # (K, N)
     w = jnp.einsum("ikn,kni->kn", signs, a) + b
     return w.astype(dtype)
 

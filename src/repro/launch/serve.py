@@ -74,6 +74,18 @@ def main():
     ap.add_argument("--kv-group-size", type=int, default=0,
                     help="head_dim entries per KV scale group (0 = one "
                          "group per head vector); must divide head_dim")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: a low-bit draft "
+                         "view of the SAME packed weights proposes K "
+                         "tokens per tick, one batched target pass "
+                         "verifies them (greedy acceptance); implies "
+                         "the paged cache backend; needs quantized "
+                         "params (--quant or --load-quantized)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    help="code planes the speculative draft keeps "
+                         "(< the target's bits); draft scales come "
+                         "from the artifact's v4 draft block when "
+                         "present, else an on-the-fly LS re-fit")
     args = ap.parse_args()
 
     if args.devices:
@@ -163,9 +175,17 @@ def main():
                                        calib_batches_for("wiki"), spec=spec)
             if args.save_quantized:
                 from repro.ckpt.packed import save_packed
+                # store the draft block whenever a draft is expressible:
+                # the re-fit scales are tiny and let any later
+                # `--speculate` boot skip the on-the-fly refit
+                d_bits = (args.draft_bits
+                          if 0 < args.draft_bits < args.quant else None)
                 out = save_packed(args.save_quantized, params, spec=spec,
-                                  meta={"arch": args.arch})
-                print(f"saved packed artifact to {out}")
+                                  meta={"arch": args.arch},
+                                  draft_bits=d_bits)
+                print(f"saved packed artifact to {out}"
+                      + (f" (w{d_bits} draft scales included)"
+                         if d_bits else ""))
         elif args.save_quantized:
             ap.error("--save-quantized requires --quant")
 
@@ -178,12 +198,27 @@ def main():
             batch = -(-batch // d) * d
             print(f"batch_size rounded {args.batch_size} -> {batch} "
                   f"(must split over {d} data shards)")
-    paged = mesh is not None or args.kv_bits > 0
+    draft_params = None
+    if args.speculate:
+        from repro.quant.draft import make_draft_params
+        scales_tree = None
+        if args.load_quantized:
+            from repro.ckpt.packed import load_draft_scales
+            scales_tree = load_draft_scales(args.load_quantized)
+            print("draft scales: "
+                  + ("manifest v4 draft block" if scales_tree is not None
+                     else "on-the-fly LS re-fit (no v4 draft block)"))
+        draft_params = make_draft_params(params, args.draft_bits,
+                                         scales_tree)
+    paged = mesh is not None or args.kv_bits > 0 or args.speculate > 0
     eng = ServeEngine(cfg, params, batch_size=batch,
                       max_len=160, dtype="float32",
                       cache_kind="paged" if paged else "dense",
                       mesh=mesh, kv_bits=args.kv_bits,
-                      kv_group_size=args.kv_group_size)
+                      kv_group_size=args.kv_group_size,
+                      speculate=args.speculate,
+                      draft_bits=args.draft_bits,
+                      draft_params=draft_params)
     if args.kv_bits:
         kv = eng.kv
         raw = kv.__class__(cfg, n_pages=kv.n_pages,

@@ -1,8 +1,10 @@
 from repro.models.model import (copy_pages, decode_step, decode_step_paged,
-                                extend_paged, forward, init_cache,
+                                draft_propose_paged, extend_paged,
+                                verify_paged, forward, init_cache,
                                 init_paged_cache, init_params, loss_fn,
                                 prefill, scatter_prefill_cache)
 
 __all__ = ["init_params", "forward", "loss_fn", "prefill", "init_cache",
-           "decode_step", "decode_step_paged", "extend_paged",
-           "init_paged_cache", "scatter_prefill_cache", "copy_pages"]
+           "decode_step", "decode_step_paged", "draft_propose_paged",
+           "extend_paged", "verify_paged", "init_paged_cache",
+           "scatter_prefill_cache", "copy_pages"]

@@ -397,27 +397,88 @@ def decode_step_paged(cfg, params, cache, tokens, pos, block_tables):
     return logits[:, 0], new_cache
 
 
-def extend_paged(cfg, params, cache, tokens, start_pos, block_tables,
+def draft_propose_paged(cfg, params, cache, cur, base_pos, block_tables,
+                        k_eff, null_row, k):
+    """k greedy draft decode steps fused into ONE pass: the token
+    feedback loop (argmax of step j feeds step j+1) runs on device, so
+    a speculative tick costs one dispatch for all k proposals instead
+    of k host round-trips with a logits transfer each. `k` is static
+    (the unrolled step count); `k_eff` (B,) int32 clamps per-row depth —
+    step j routes rows with k_eff <= j to `null_row`'s reserve page and
+    position 0, exactly like any inactive decode row (their K/V writes
+    land in the null page; their argmax feedback is computed but the
+    caller ignores tokens past k_eff). Rows with k_eff == 0 never write
+    anywhere real. Returns (draft tokens (B, k) int32, cache).
+
+    Quantized draft weights are dequantized ONCE, before the step loop:
+    at decode batch sizes the binary-code expansion (O(K*N*bits)) dwarfs
+    the matmul it feeds (O(B*K*N)), and the k unrolled steps all consume
+    the same weights — paying the expansion per step made propose cost
+    ~k full draft decodes. The dense weights are trace-local workspace
+    (alive only inside this dispatch), so the draft's zero-resident-HBM
+    property is untouched: what persists is still just codes + re-fit
+    scales."""
+    is_qt = lambda l: hasattr(l, "dequant")
+    params = jax.tree_util.tree_map(
+        lambda l: l.dequant() if is_qt(l) else l, params, is_leaf=is_qt)
+    toks = []
+    for j in range(k):
+        live_j = k_eff > j
+        bt = jnp.where(live_j[:, None], block_tables, null_row[:, None])
+        pos_j = jnp.where(live_j, base_pos + j, 0)
+        logits, cache = decode_step_paged(cfg, params, cache,
+                                          cur[:, None], pos_j, bt)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(cur)
+    return jnp.stack(toks, axis=1), cache
+
+
+def _extend_scan(cfg, params, cache, tokens, start_pos, block_tables,
                  n_valid):
-    """Chunked prefill: run C prompt tokens (tokens (B, C) int32, padded;
-    n_valid (B,) counts the real ones) at absolute positions start_pos +
-    [0..C), writing their K/V into the sequences' pages and attending
-    over pages + chunk causally. Returns (logits of the last valid chunk
-    position (B, V), cache). Only attention patterns support chunked
-    prefill (recurrent mamba state needs sequential threading)."""
+    """Shared multi-token paged pass: run C tokens (tokens (B, C) int32,
+    padded; n_valid (B,) counts the real ones) at absolute positions
+    start_pos + [0..C), writing their K/V into the sequences' pages and
+    attending over pages + chunk causally. Returns logits at EVERY
+    chunk position ((B, C, V), cache). Only attention patterns support
+    this (recurrent mamba state needs sequential threading)."""
     if any(spec.kind != "attn" for spec in cfg.pattern) or cfg.mla is not None:
         raise NotImplementedError(
-            "chunked paged prefill requires an attention-only pattern")
-    B, C = tokens.shape
+            "multi-token paged passes require an attention-only pattern")
+    C = tokens.shape[1]
     chunk_mask = jnp.arange(C)[None, :] < n_valid[:, None]
     x = embed_inputs(cfg, params, tokens)
     step = lambda spec, p, h, c: attn.attn_extend_paged(
         cfg, spec, p, h, c, block_tables, start_pos, chunk_mask)
-    logits, new_cache = _decode_scan(cfg, params, cache, x, step)
+    return _decode_scan(cfg, params, cache, x, step)
+
+
+def extend_paged(cfg, params, cache, tokens, start_pos, block_tables,
+                 n_valid):
+    """Chunked prefill: _extend_scan reduced to the logits of the last
+    valid chunk position ((B, V), cache) — all a prefill needs to seed
+    its first decode token."""
+    B, C = tokens.shape
+    logits, new_cache = _extend_scan(cfg, params, cache, tokens,
+                                     start_pos, block_tables, n_valid)
     idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
     last = jnp.take_along_axis(
         logits, jnp.broadcast_to(idx, (B, 1, logits.shape[-1])), axis=1)
     return last[:, 0], new_cache
+
+
+def verify_paged(cfg, params, cache, tokens, start_pos, block_tables,
+                 n_valid):
+    """Speculative verify: score C = k+1 positions in ONE batched pass
+    and keep the logits at every position ((B, C, V), cache) — position
+    j's row decides the fate of draft token j+1 (greedy acceptance:
+    accept while draft token == argmax of the previous row). The pass
+    also writes the TARGET's K/V for all C positions, overwriting
+    whatever the draft speculatively wrote there — which is what makes
+    greedy speculative decode token-identical to target-only decode
+    regardless of the draft (serve/engine.py holds the accept/rollback
+    logic)."""
+    return _extend_scan(cfg, params, cache, tokens, start_pos,
+                        block_tables, n_valid)
 
 
 def scatter_prefill_cache(cfg, paged_cache, row_cache, slot, page_ids,

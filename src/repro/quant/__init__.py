@@ -1,3 +1,5 @@
+from repro.quant.draft import (draft_extra_bytes, draft_view,
+                               make_draft_params, refit_draft_scales)
 from repro.quant.kv import (kv_bytes_per_token_head, kv_dequantize,
                             kv_layout, kv_quantize)
 from repro.quant.packing import (pack_signs, pack_signs_last, padded_k,
@@ -20,4 +22,6 @@ __all__ = [
     "get_quantizer", "available_quantizers", "LeafScore",
     "sensitivity_sweep", "suggest_overrides", "format_overrides",
     "format_report",
+    "draft_view", "make_draft_params", "refit_draft_scales",
+    "draft_extra_bytes",
 ]

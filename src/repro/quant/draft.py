@@ -1,0 +1,142 @@
+"""Draft views: a low-bit model sliced out of a higher-bit one, free.
+
+GPTQT's greedy residual coding makes each sign plane a refinement of the
+previous ones, so the leading `d` planes of a w3/w4 QuantizedTensor are
+themselves a valid w`d` coding of the same weight — a draft model for
+self-speculative decoding that shares the packed sign words
+byte-for-byte with the target. The only new tensors a draft needs are
+its scales: the target's leading alphas are fit *jointly* with the
+trailing planes present, so reusing them under-weights the truncated
+code. `refit_draft_scales` re-solves the per-(group, column) least
+squares
+
+    min_{a', b'} || S' a' + b' 1 - W ||^2    over each group's gs rows,
+
+where S' is the (gs, d) matrix of leading sign planes and W the
+full-bit dequant — the closed-form optimum given the frozen signs (the
+same refit step quant/kv.py's alternating rounds apply, plus the offset
+column). That is the whole HBM cost of the draft: (G, N, d) alphas and
+(G, N) betas per leaf; codes and every unquantized leaf are shared by
+reference (`draft_extra_bytes` audits exactly that).
+
+Offline, `ckpt.packed.save_packed(draft_bits=...)` stores the re-fit
+scales as a manifest-v4 optional block; `make_draft_params` consumes
+that block when present and falls back to the on-the-fly refit for v3
+artifacts (a few batched (d+1)x(d+1) solves per leaf, once at boot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packing import unpack_signs
+from repro.quant.qlinear import QuantizedTensor
+
+# Tikhonov floor for the (d+1)x(d+1) normal equations: sign columns can
+# be linearly dependent on tiny groups (gs < d+1), where the unregular-
+# ized system is singular by construction.
+_LS_EPS = 1e-6
+
+
+def refit_draft_scales(qt: QuantizedTensor, draft_bits: int):
+    """LS re-fit (alphas, betas) for the leading `draft_bits` planes of
+    `qt` against its full-bit dequant. Returns (alphas (..., G, N, d)
+    float32, betas (..., G, N) float32); handles leading stack dims."""
+    d = int(draft_bits)
+    if not 1 <= d <= qt.bits:
+        raise ValueError(
+            f"draft_bits={d} must be in [1, {qt.bits}] (active planes)")
+    N = qt.n_out
+    G = qt.n_groups
+    gs = qt.k_in // G if G > 1 else qt.k_in
+    w = qt.dequant(jnp.float32)                          # (..., K, N)
+    signs = unpack_signs(qt.codes, qt.k_in)[..., :d, :, :]
+    lead = signs.shape[:-3]
+    S = signs.reshape(*lead, d, G, gs, N)
+    Wg = w.reshape(*lead, G, gs, N)
+    SS = jnp.einsum("...igkn,...jgkn->...gnij", S, S)    # (...,G,N,d,d)
+    S1 = jnp.einsum("...igkn->...gni", S)                # (...,G,N,d)
+    Sw = jnp.einsum("...igkn,...gkn->...gni", S, Wg)     # (...,G,N,d)
+    w1 = jnp.einsum("...gkn->...gn", Wg)                 # (...,G,N)
+    # augmented system [[S'S', S'1], [1'S', gs]] [a'; b'] = [S'W; 1'W]
+    top = jnp.concatenate([SS, S1[..., :, None]], axis=-1)
+    bot = jnp.concatenate(
+        [S1, jnp.full((*S1.shape[:-1], 1), float(gs), jnp.float32)],
+        axis=-1)[..., None, :]
+    A = jnp.concatenate([top, bot], axis=-2)
+    A = A + _LS_EPS * jnp.eye(d + 1, dtype=jnp.float32)
+    rhs = jnp.concatenate([Sw, w1[..., None]], axis=-1)
+    c = jnp.linalg.solve(A, rhs[..., None])[..., 0]      # (...,G,N,d+1)
+    return (c[..., :d].astype(jnp.float32),
+            c[..., d].astype(jnp.float32))
+
+
+def draft_view(qt: QuantizedTensor, draft_bits: int, scales=None):
+    """A QuantizedTensor serving the leading `draft_bits` planes of
+    `qt`. The codes leaf is the SAME array object as the target's —
+    zero extra HBM beyond the draft scales. `scales=(alphas, betas)`
+    installs precomputed (manifest-v4) scales; None refits on the fly.
+    `draft_bits == qt.bits` returns `qt` itself."""
+    d = int(draft_bits)
+    if d == qt.bits and scales is None:
+        return qt
+    if d > qt.bits:
+        raise ValueError(
+            f"draft_bits={d} exceeds the target's {qt.bits} active planes")
+    if scales is None:
+        alphas, betas = refit_draft_scales(qt, d)
+    else:
+        alphas, betas = (jnp.asarray(scales[0]), jnp.asarray(scales[1]))
+    # match the target's scale dtype so one kernel expand path serves
+    # both (bf16-scaled artifacts keep bf16 drafts)
+    alphas = alphas.astype(qt.alphas.dtype)
+    betas = betas.astype(qt.betas.dtype)
+    return QuantizedTensor(codes=qt.codes, alphas=alphas, betas=betas,
+                           k_in=qt.k_in, orig_dtype=qt.orig_dtype)
+
+
+def make_draft_params(params, draft_bits: int, scales_tree=None):
+    """Map `draft_view` over a param tree. Unquantized leaves are shared
+    by reference (the identical array object). `scales_tree`, when
+    given, mirrors the tree structure with {"bits", "alphas", "betas"}
+    dicts at QuantizedTensor positions (ckpt.packed.load_draft_scales);
+    entries whose stored bits disagree with `draft_bits` fall back to
+    the on-the-fly refit."""
+    def walk(node, sc):
+        if isinstance(node, QuantizedTensor):
+            use = None
+            if isinstance(sc, dict) and "alphas" in sc:
+                if int(sc.get("bits", -1)) == int(draft_bits):
+                    use = (sc["alphas"], sc["betas"])
+            return draft_view(node, draft_bits, scales=use)
+        if isinstance(node, dict):
+            return {k: walk(v, sc.get(k) if isinstance(sc, dict) else None)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            sub = sc if isinstance(sc, (list, tuple)) else [None] * len(node)
+            return type(node)(walk(v, s) for v, s in zip(node, sub))
+        return node
+    return walk(params, scales_tree)
+
+
+def draft_extra_bytes(target_params, draft_params) -> int:
+    """Device bytes the draft tree adds beyond the target: every array
+    buffer present in the draft but not aliased from the target. For a
+    proper draft view this is exactly the re-fit scales."""
+    def arrays_of(tree):
+        out = []
+        for leaf in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+            if isinstance(leaf, QuantizedTensor):
+                out.extend((leaf.codes, leaf.alphas, leaf.betas))
+            else:
+                out.append(leaf)
+        return out
+
+    seen = {id(a) for a in arrays_of(target_params)}
+    extra = 0
+    for a in arrays_of(draft_params):
+        if id(a) not in seen:
+            seen.add(id(a))
+            extra += int(a.size) * a.dtype.itemsize
+    return extra

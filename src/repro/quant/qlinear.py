@@ -12,6 +12,14 @@ bits) and betas (..., G, N) must agree on G and N with the codes, and
 G > 1 must divide k_in exactly (per-channel G=1 tolerates any k_in).
 Validation is shape-only — tracers and ShapeDtypeStructs pass through —
 and skipped for leaves that carry no shape (tree-structure plumbing).
+
+A tensor's *active* bit-width is `alphas.shape[-1]`, which may be LESS
+than the number of stored code planes (`codes.shape[-3]`): the greedy
+residual coding makes each plane a refinement of the previous ones, so
+slicing the leading planes of a w4 tensor plus re-fit alphas yields a
+valid w2 "draft" view that shares the packed sign words byte-for-byte
+(quant/draft.py). `bits` reports the active width; `stored_bits` the
+planes physically present in `codes`.
 """
 from __future__ import annotations
 
@@ -45,10 +53,11 @@ class QuantizedTensor:
             return                  # no/partial shape info: trust the caller
         bits, KW, N = cs[-3:]
         G = as_[-3]
-        if as_[-2:] != (N, bits):
+        if as_[-2] != N or not (1 <= as_[-1] <= bits):
             raise ValueError(
                 f"alphas {as_} do not match codes {cs}: want "
-                f"(..., G, N={N}, bits={bits})")
+                f"(..., G, N={N}, bits<={bits}) — active bits are the "
+                f"alpha width and may not exceed the stored code planes")
         if bs[-2:] != (G, N):
             raise ValueError(
                 f"betas {bs} do not match alphas {as_}: want "
@@ -78,6 +87,13 @@ class QuantizedTensor:
     # ---- metadata ----
     @property
     def bits(self):
+        """Active bit-width: planes the scales actually weight. For a
+        draft view this is smaller than `stored_bits`."""
+        return self.alphas.shape[-1]
+
+    @property
+    def stored_bits(self):
+        """Code planes physically present in the packed sign words."""
         return self.codes.shape[-3]
 
     @property
@@ -129,10 +145,14 @@ class QuantizedTensor:
     def dequant(self, dtype=None):
         """Materialize W (..., k_in, n_out)."""
         signs = unpack_signs(self.codes, self.k_in)      # (...,bits,K,N)
+        signs = signs[..., : self.bits, :, :]            # active planes
         G = self.alphas.shape[-3]
         rep = self.k_in // G + (1 if self.k_in % G else 0)
-        a = jnp.repeat(self.alphas, rep, axis=-3)[..., :self.k_in, :, :]
-        b = jnp.repeat(self.betas, rep, axis=-2)[..., :self.k_in, :]
+        # bf16 scales (packed artifacts) expand in fp32
+        a = jnp.repeat(self.alphas.astype(jnp.float32),
+                       rep, axis=-3)[..., :self.k_in, :, :]
+        b = jnp.repeat(self.betas.astype(jnp.float32),
+                       rep, axis=-2)[..., :self.k_in, :]
         w = jnp.einsum("...ikn,...kni->...kn", signs, a) + b
         return w.astype(dtype or self.orig_dtype)
 

@@ -30,8 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import (copy_pages, decode_step, decode_step_paged,
-                                extend_paged, forward, prefill,
-                                scatter_prefill_cache)
+                                draft_propose_paged, extend_paged, forward,
+                                prefill, scatter_prefill_cache, verify_paged)
 
 _CACHE: dict = {}
 _STATS = {"hits": 0, "misses": 0}
@@ -66,6 +66,25 @@ def _build(kind, cfg):
             lambda p, c, t, sp, bt, nv: extend_paged(cfg, p, c, t, sp,
                                                      bt, nv),
             donate_argnums=(1,))
+    if kind == "draft_propose":
+        # the draft's k-step propose pass (fused argmax feedback loop;
+        # see models/model.py:draft_propose_paged). A separate kind from
+        # decode_paged keeps warmup/hit accounting per role honest; the
+        # draft params' smaller alpha shapes would key separate
+        # executables anyway. k (the unroll depth) is static — one
+        # executable per distinct speculation depth.
+        def propose(p, c, cur, sp, bt, ke, null_row, k):
+            return draft_propose_paged(cfg, p, c, cur, sp, bt, ke,
+                                       null_row, k)
+        return jax.jit(propose, donate_argnums=(1,), static_argnums=(7,))
+    if kind == "verify_paged":
+        # speculative verify: k+1 positions in one pass, logits kept at
+        # EVERY position (k is keyed implicitly by the token width —
+        # jax.jit compiles one executable per distinct k+1)
+        def verify_step(p, c, t, sp, bt, nv, live, null_row):
+            bt = jnp.where(live[:, None] > 0, bt, null_row[:, None])
+            return verify_paged(cfg, p, c, t, sp, bt, nv)
+        return jax.jit(verify_step, donate_argnums=(1,))
     if kind == "scatter_prefill":
         return jax.jit(
             lambda c, r, sl, pi, nv: scatter_prefill_cache(cfg, c, r, sl,

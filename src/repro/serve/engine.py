@@ -145,13 +145,24 @@ class ServeEngine:
                  page_size=64, n_pages=None, prefill_chunk=None,
                  bucket_prompts=True, watermark=1, prefix_sharing=True,
                  prefix_max_pages=None, mesh=None, kv_bits=0,
-                 kv_group_size=0):
+                 kv_group_size=0, speculate=0, draft_bits=2,
+                 draft_params=None, accept_rule="greedy",
+                 typical_tau=0.3):
         assert cache_kind in ("dense", "paged"), cache_kind
         if kv_bits and cache_kind != "paged":
             raise ValueError(
                 "kv_bits requires cache_kind='paged': the binary-coded "
                 "KV layout lives in the page pool (quantize-on-write "
                 "needs page-granular scatter)")
+        if speculate and cache_kind != "paged":
+            raise ValueError(
+                "speculate requires cache_kind='paged': draft KV is "
+                "written speculatively into the page pool and rejected "
+                "tokens roll back by page truncation")
+        if accept_rule not in ("greedy", "typical"):
+            raise ValueError(
+                f"accept_rule={accept_rule!r}; expected 'greedy' or "
+                f"'typical'")
         if cache_kind == "paged" and cfg.mla is not None:
             raise NotImplementedError(
                 "cache_kind='paged' does not support MLA latent caches "
@@ -184,6 +195,10 @@ class ServeEngine:
         attn_only = (cfg.mla is None
                      and all(s.kind == "attn" for s in cfg.pattern))
         no_window = all(s.window is None for s in cfg.pattern)
+        if speculate and not attn_only:
+            raise NotImplementedError(
+                "speculate>0 verifies k+1 positions through the paged "
+                "extend path, which is attention-only")
         # bucketed prefill needs padding tokens to be harmless: causal
         # attention masks them and decode overwrites their cache slots,
         # but rolling window buffers and recurrent mamba state both mix
@@ -242,6 +257,11 @@ class ServeEngine:
                                               mesh)
             self._extend = compile_cache.get("extend_paged", cfg, mesh)
             self._copy = compile_cache.get("copy_pages", None, mesh)
+            if speculate:
+                self._draft_propose = compile_cache.get("draft_propose",
+                                                        cfg, mesh)
+                self._verify = compile_cache.get("verify_paged", cfg,
+                                                 mesh)
         else:
             if prefill_chunk:
                 raise NotImplementedError(
@@ -273,10 +293,35 @@ class ServeEngine:
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
         self._prefill = compile_cache.get("prefill", cfg, mesh)
+        # self-speculative decoding: the draft shares the target's
+        # packed sign words and differs only in its (re-fit) scales —
+        # zero extra HBM beyond the draft alphas/betas (quant/draft.py)
+        self.speculate = int(speculate)
+        self.draft_bits = int(draft_bits)
+        self.accept_rule = accept_rule
+        self.typical_tau = float(typical_tau)
+        self.draft_params = None
+        if self.speculate:
+            if draft_params is None:
+                from repro.quant.draft import make_draft_params
+                from repro.quant.qlinear import QuantizedTensor
+                has_qt = any(
+                    isinstance(leaf, QuantizedTensor)
+                    for leaf in jax.tree.leaves(
+                        params,
+                        is_leaf=lambda x: isinstance(x, QuantizedTensor)))
+                if not has_qt:
+                    raise ValueError(
+                        "speculate>0 needs GPTQT-quantized params (the "
+                        "draft is a code-plane prefix of the target) or "
+                        "an explicit draft_params tree")
+                draft_params = make_draft_params(params, self.draft_bits)
+            self.draft_params = draft_params
         # raw accumulators (hot path); `stats_snapshot()` freezes them
         # plus the pool/index/compile-cache counters into an EngineStats
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
-                      "ticks": 0, "prefill_tokens": 0}
+                      "ticks": 0, "prefill_tokens": 0,
+                      "draft_tokens": 0, "accepted_tokens": 0}
         self._entries = []
 
     def stats_snapshot(self):
@@ -502,6 +547,8 @@ class ServeEngine:
                 if e.prefilled >= len(e.prompt)]
 
     def _decode_tick(self):
+        if self.speculate:
+            return self._spec_decode_tick()
         ready = self._decode_ready()
         if not ready:
             return
@@ -551,6 +598,128 @@ class ServeEngine:
             hit_eos = e.req.eos is not None and tok == e.req.eos
             if (len(e.req.out) >= e.req.max_new_tokens or hit_eos
                     or self.pos[slot] >= self._seq_cap() - 1):
+                self._finish(e)
+
+    # ---------------- speculative decode ----------------
+    def _spec_decode_tick(self):
+        """Propose -> verify -> accept. The draft proposes up to k
+        tokens per ready sequence (k draft decode steps; draft KV lands
+        speculatively at pos..pos+k-1), then ONE batched target pass
+        scores the k+1 positions [cur, draft...] with causal masking —
+        and, crucially, overwrites every speculatively-written K/V slot
+        with the target's own K/V, which is what makes greedy
+        speculative decode token-identical to target-only decode for
+        ANY draft. Acceptance takes the longest draft prefix the target
+        agrees with plus the target's token at the first disagreement
+        (or the bonus token after full acceptance); rejected tokens
+        roll back by truncating pos and unref'ing whole pages past the
+        accept point (kv.truncate) — stale K/V inside the kept tail
+        page is masked by context length and overwritten by the next
+        write, exactly like any partial tail page."""
+        k = self.speculate
+        cap = self._seq_cap()
+        ready = self._decode_ready()
+        if not ready:
+            return
+        k_eff = {}
+        grown = []
+        for slot in ready:
+            if slot not in self.sched.running:
+                continue    # evicted while growing an earlier slot
+            p = int(self.pos[slot])
+            # clamp speculation depth at the sequence capacity: the
+            # verify pass writes k_eff+1 positions starting at pos
+            ke = min(k, cap - 1 - p)
+            ok, copies = self.sched.ensure_write_capacity(
+                slot, p, p + ke + 1)
+            if ok:
+                self._apply_copies(copies)
+                k_eff[slot] = ke
+                grown.append(slot)
+        ready = [s for s in grown if s in self.sched.running]
+        if not ready:
+            return
+        t0 = time.time()
+        self._sync_block_tables()
+        base_pos = self.pos.copy()
+
+        # ---- propose: ONE fused k-step draft pass (on-device argmax
+        # feedback loop, models/model.py:draft_propose_paged) instead of
+        # k host round-trips — the per-step dispatch + transfer overhead
+        # used to dominate the tick and cancel the speculation gain.
+        # Rows whose clamped depth is exhausted (k_eff <= j) write to
+        # their shard's null page at position 0, like any inactive row.
+        ke_arr = np.zeros((self.B,), np.int32)
+        for s in ready:
+            ke_arr[s] = k_eff[s]
+        dt_dev, self.cache = self._draft_propose(
+            self.draft_params, self.cache,
+            jnp.asarray(self.cur, jnp.int32),
+            jnp.asarray(base_pos, jnp.int32), self._bt_dev,
+            jnp.asarray(ke_arr), self._null_row, k)
+
+        # ---- verify: one batched target pass over k+1 positions; the
+        # verify tokens are assembled on device so draft tokens never
+        # round-trip through the host before verify is dispatched
+        verify_toks = jnp.concatenate(
+            [jnp.asarray(self.cur[:, None], jnp.int32), dt_dev], axis=1)
+        live = np.zeros((self.B,), np.int32)
+        live[ready] = 1
+        n_valid = np.zeros((self.B,), np.int32)
+        for s in ready:
+            n_valid[s] = k_eff[s] + 1
+        logits_all, self.cache = self._verify(
+            self.params, self.cache, verify_toks,
+            jnp.asarray(np.where(live > 0, base_pos, 0), jnp.int32),
+            self._bt_dev, jnp.asarray(n_valid), jnp.asarray(live),
+            self._null_row)
+        draft_toks = np.asarray(dt_dev)                        # (B, k)
+        greedy = np.asarray(jnp.argmax(logits_all, axis=-1))   # (B, k+1)
+        probs = (np.asarray(jax.nn.softmax(logits_all, axis=-1))
+                 if self.accept_rule == "typical" else None)
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["ticks"] += 1
+
+        # ---- accept
+        for slot in ready:
+            e = self.sched.running[slot]
+            ke = k_eff[slot]
+            dt, g = draft_toks[slot], greedy[slot]
+            self.stats["draft_tokens"] += ke
+            m = 0
+            if probs is not None:
+                # typical acceptance: keep a draft token the target
+                # gives at least typical_tau of its own argmax mass
+                while m < ke:
+                    pm = probs[slot, m]
+                    if pm[dt[m]] < self.typical_tau * pm.max():
+                        break
+                    m += 1
+            else:
+                while m < ke and dt[m] == g[m]:
+                    m += 1
+            self.stats["accepted_tokens"] += m
+            # accepted draft prefix + the target's token at position m
+            # (correction on mismatch, bonus after full acceptance) —
+            # emitted one by one under the vanilla stop conditions
+            burst = [int(dt[j]) for j in range(m)] + [int(g[m])]
+            emitted, fin = 0, False
+            for tok in burst:
+                e.req.out.append(tok)
+                self.stats["tokens"] += 1
+                emitted += 1
+                hit_eos = e.req.eos is not None and tok == e.req.eos
+                if (len(e.req.out) >= e.req.max_new_tokens or hit_eos
+                        or int(base_pos[slot]) + emitted >= cap - 1):
+                    fin = True
+                    break
+            new_pos = int(base_pos[slot]) + emitted
+            self.pos[slot] = new_pos
+            self.cur[slot] = burst[emitted - 1]
+            # rollback: KV is cached for [0, new_pos); whole pages past
+            # that point return to the pool (or to their other readers)
+            self.kv.truncate(slot, new_pos)
+            if fin:
                 self._finish(e)
 
     # ---------------- engine ----------------

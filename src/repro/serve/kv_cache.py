@@ -372,6 +372,27 @@ class PagedKVCache:
         self.bt_version[slot] += 1
         self._active[slot] = False
 
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Speculative rollback: drop the slot's trailing pages so it
+        owns exactly `pages_for(n_tokens)` — rejected draft tokens past
+        a page boundary release their pages (unref: a page shared via
+        the prefix index stays live for its other readers). Rejected
+        tokens WITHIN the last kept page need no work: the engine
+        truncates `pos`, attention masks by context length, and the
+        next write overwrites the stale tail — identical to how partial
+        tail pages always behave. Returns the number of pages freed."""
+        keep = self.pages_for(n_tokens)
+        owned = self._owned[slot]
+        assert keep <= len(owned), (slot, n_tokens, len(owned))
+        dropped = owned[keep:]
+        self.block_tables[slot, keep:keep + len(dropped)] = 0
+        del owned[keep:]
+        for pid in dropped:
+            self.unref(pid)
+        if dropped:
+            self.bt_version[slot] += 1
+        return len(dropped)
+
     def owned_pages(self, slot: int):
         return list(self._owned[slot])
 

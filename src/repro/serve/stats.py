@@ -45,6 +45,13 @@ class EngineStats:
     kv_bytes_per_page: int = 0
     kv_pool_bytes: int = 0
 
+    # self-speculative decoding (0 == speculation off)
+    speculate_k: int = 0
+    draft_bits: int = 0
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
+    acceptance_rate: float = 0.0
+
     # radix prefix index
     prefix_hits: int = 0
     prefix_lookups: int = 0
@@ -111,6 +118,14 @@ class EngineStats:
             "kv_pool_bytes": (
                 int(engine.kv.pool_bytes())
                 if hasattr(engine.kv, "pool_bytes") else 0),
+            "speculate_k": int(getattr(engine, "speculate", 0)),
+            "draft_bits": (int(getattr(engine, "draft_bits", 0))
+                           if getattr(engine, "speculate", 0) else 0),
+            "draft_tokens": int(s.get("draft_tokens", 0)),
+            "accepted_tokens": int(s.get("accepted_tokens", 0)),
+            "acceptance_rate": (
+                int(s.get("accepted_tokens", 0))
+                / max(int(s.get("draft_tokens", 0)), 1)),
             "prefix_hits": int(s.get("prefix_hits", 0)),
             "prefix_lookups": int(s.get("prefix_lookups", 0)),
             "prefix_hit_rate": float(s.get("prefix_hit_rate", 0.0)),

@@ -228,7 +228,11 @@ def test_quantized_tensor_validates_group_invariant():
     with pytest.raises(ValueError, match="betas"):
         QuantizedTensor(codes, alphas, betas[:1], k_in=64)  # G mismatch
     with pytest.raises(ValueError, match="alphas"):
-        QuantizedTensor(codes, alphas[:, :, :1], betas, k_in=64)
+        QuantizedTensor(codes, alphas[:, :1, :], betas[:, :1], k_in=64)
+    # slicing the BITS axis is legal now: fewer alphas than stored code
+    # planes is a draft view (leading planes + re-fit scales)
+    qt = QuantizedTensor(codes, alphas[:, :, :1], betas, k_in=64)
+    assert qt.bits == 1 and qt.stored_bits == 2
 
 
 @pytest.mark.parametrize("block_m,block_n,block_k",

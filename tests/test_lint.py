@@ -135,6 +135,25 @@ def test_r002_owner_and_aliases(tmp_path):
     assert [f.file for f in findings] == ["src/repro/quant/sneaky.py"]
 
 
+def test_r002_speculative_step_jits_must_live_in_compile_cache(tmp_path):
+    """The speculative draft/verify steps are jitted wrappers like any
+    other engine step: an engine module jitting them directly (instead
+    of borrowing from serve/compile_cache.py) escapes the process-wide
+    warmup sharing and fires."""
+    ctx = tree(tmp_path, {
+        "src/repro/serve/spec_engine.py": (
+            "import jax\n"
+            "from repro.models import verify_paged\n"
+            "draft_step = jax.jit(lambda p, c, t: t)\n"
+            "verify_step = jax.jit(verify_paged, donate_argnums=(1,))\n"),
+        "src/repro/serve/compile_cache.py":
+            "import jax\nf = jax.jit(lambda x: x)\n",
+    })
+    findings = run("R002", ctx)          # one finding per offending file
+    assert [f.file for f in findings] == ["src/repro/serve/spec_engine.py"]
+    assert all("outside" in f.message for f in findings)
+
+
 def test_r002_nonliteral_static_args_fire_even_in_owner(tmp_path):
     ctx = tree(tmp_path, {
         "src/repro/serve/compile_cache.py":
@@ -260,6 +279,35 @@ def test_r005_unpopulated_stats_field_fires(tmp_path):
     msgs = [f.message for f in run("R005", ctx)]
     assert any("EngineStats.ghost is never populated" in m for m in msgs)
     assert not any("tokens" in m for m in msgs)
+
+
+def test_r005_speculation_stats_fields_must_be_populated(tmp_path):
+    """The speculative counters are EngineStats fields like any other:
+    declaring them without wiring capture() fires per missing field, and
+    the fully-wired form (the real stats.py shape) stays quiet."""
+    decl = ("from dataclasses import dataclass\n"
+            "@dataclass(frozen=True)\n"
+            "class EngineStats:\n"
+            "    speculate_k: int = 0\n"
+            "    draft_tokens: int = 0\n"
+            "    accepted_tokens: int = 0\n"
+            "    acceptance_rate: float = 0.0\n"
+            "    @classmethod\n"
+            "    def capture(cls, engine):\n")
+    ctx = tree(tmp_path / "bad", {"src/repro/serve/stats.py": decl + (
+        "        return cls(**{'speculate_k': 1})\n")})
+    msgs = [f.message for f in run("R005", ctx)]
+    for f in ("draft_tokens", "accepted_tokens", "acceptance_rate"):
+        assert any(f"EngineStats.{f} is never populated" in m
+                   for m in msgs), (f, msgs)
+    assert not any("speculate_k" in m for m in msgs)
+    ctx2 = tree(tmp_path / "ok", {"src/repro/serve/stats.py": decl + (
+        "        s = dict(engine.stats)\n"
+        "        return cls(**{'speculate_k': 1,\n"
+        "                      'draft_tokens': s.get('draft_tokens', 0),\n"
+        "                      'accepted_tokens': 0,\n"
+        "                      'acceptance_rate': 0.0})\n")})
+    assert run("R005", ctx2) == []
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,7 @@ follow-ups: save -> load bit-exactness, load-quantized boot producing
 token-identical output without re-quantizing, device-resident block
 tables, and the radix prefix-index page cap."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -194,7 +195,7 @@ def test_manifest_v3_records_symbolic_shardings(tmp_path):
     qp, _ = quantize_model(cfg, p, calib, spec=spec)
     d = save_packed(tmp_path / "m", qp, spec=spec)
     m = json.loads((d / "manifest.json").read_text())
-    assert m["format_version"] == 3
+    assert m["format_version"] == 4
     assert m["sharding"]["axes"] == ["data", "model"]
     wq = m["tree"]["blocks"]["L0"]["attn"]["wq"]
     assert wq["pspec"]["codes"][-2:] == ["data", "model"]
@@ -260,9 +261,11 @@ def test_future_format_is_refused(tmp_path):
 
 def test_bf16_scales_halve_bytes_and_stay_within_tolerance(tmp_path):
     """scale_dtype='bfloat16' stores alphas/betas as bf16 bits (half the
-    scale bytes of the G>1 overhead), loads back as fp32 values equal to
-    one bf16 rounding of the originals, and serves token-identically to
-    an engine fed the same-rounded scales directly."""
+    scale bytes of the G>1 overhead), loads back STILL bf16 in memory
+    (the decode expand paths upcast per-tile, so fp32 rehydration on
+    load would only double resident scale bytes), and serves
+    token-identically to an engine fed the same-rounded scales
+    directly."""
     cfg, p, calib = _tiny()
     spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed",
                                  group_size=64)
@@ -289,13 +292,16 @@ def test_bf16_scales_halve_bytes_and_stay_within_tolerance(tmp_path):
     for (_, lq), (_, ll) in zip(_leaves(qp), _leaves(lp)):
         if not isinstance(lq, QuantizedTensor):
             continue
-        assert ll.alphas.dtype == np.float32       # fp32 load path kept
+        # scales stay bf16 in memory — no fp32 rehydration on load
+        assert ll.alphas.dtype == jnp.bfloat16
+        assert ll.betas.dtype == jnp.bfloat16
         # exactly one bf16 rounding, no double rounding
-        ref = lq.cast_scales("bfloat16").cast_scales("float32")
+        ref = lq.cast_scales("bfloat16")
         np.testing.assert_array_equal(np.asarray(ll.alphas),
                                       np.asarray(ref.alphas))
         np.testing.assert_array_equal(np.asarray(ll.betas),
                                       np.asarray(ref.betas))
+        ll = ll.cast_scales("float32")             # for the rel check
         # and the rounding is small: bf16 keeps ~8 mantissa bits
         denom = np.abs(np.asarray(lq.alphas)) + 1e-8
         rel = np.abs(np.asarray(ll.alphas) - np.asarray(lq.alphas)) / denom
@@ -334,10 +340,57 @@ def test_already_bf16_scales_save_loadable(tmp_path):
         k_in=32).cast_scales("bfloat16")
     d = save_packed(tmp_path / "m", {"w": qt})
     lp, _, _ = load_packed(d)           # must not raise
-    assert lp["w"].alphas.dtype == np.float32
+    assert lp["w"].alphas.dtype == jnp.bfloat16    # stays bf16 in memory
     np.testing.assert_array_equal(
-        np.asarray(lp["w"].alphas),
+        np.asarray(lp["w"].alphas.astype(jnp.float32)),
         np.asarray(qt.alphas.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# manifest v4: optional draft-scale block
+# ---------------------------------------------------------------------------
+
+def test_v4_draft_block_roundtrips_refit_scales(tmp_path):
+    """save_packed(draft_bits=d) stores per-leaf re-fit draft scales as
+    the manifest-v4 optional block; load_draft_scales returns them
+    bit-exact to the on-the-fly refit, so a --speculate boot from the
+    artifact builds the identical draft tree without the solve. An
+    artifact saved without the block returns None (v3-style fallback)."""
+    import json
+
+    from repro.ckpt.packed import load_draft_scales
+    from repro.quant.draft import make_draft_params
+    cfg, p, calib = _tiny()
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    d = save_packed(tmp_path / "m", qp, spec=spec, draft_bits=2)
+    assert load_draft_scales(
+        save_packed(tmp_path / "plain", qp, spec=spec)) is None
+
+    m = json.loads((d / "manifest.json").read_text())
+    assert m["format_version"] == 4 and m["draft_bits"] == 2
+    wq = m["tree"]["blocks"]["L0"]["attn"]["wq"]
+    assert wq["draft"]["bits"] == 2
+
+    lp, _, _ = load_packed(d)
+    tree = load_draft_scales(d)
+    assert tree is not None
+    from_block = make_draft_params(lp, 2, tree)
+    refit = make_draft_params(lp, 2)
+    for (path, a), (_, b) in zip(_leaves(from_block), _leaves(refit)):
+        if not isinstance(a, QuantizedTensor):
+            continue
+        assert a.bits == 2 and a.stored_bits == 3
+        assert a.codes is b.codes            # shared sign planes
+        np.testing.assert_array_equal(np.asarray(a.alphas),
+                                      np.asarray(b.alphas))
+        np.testing.assert_array_equal(np.asarray(a.betas),
+                                      np.asarray(b.betas))
+    # mismatched draft_bits must ignore the stored block, not misuse it
+    w3 = make_draft_params(lp, 1, tree)
+    for _, leaf in _leaves(w3):
+        if isinstance(leaf, QuantizedTensor):
+            assert leaf.bits == 1
 
 
 # ---------------------------------------------------------------------------

@@ -116,6 +116,38 @@ def test_allocator_alloc_free_invariants():
     assert kv.high_water == 4
 
 
+def test_truncate_frees_trailing_pages_and_respects_sharing():
+    """Speculative rollback primitive: truncate(slot, n) keeps exactly
+    pages_for(n) pages, zeroes the freed block-table tail, and unrefs
+    (not frees) pages another reader still holds."""
+    cfg = _tiny_cfg()
+    kv = PagedKVCache(cfg, n_pages=9, page_size=4, max_seqs=3,
+                      max_pages_per_seq=5, dtype="float32")
+    s0 = kv.alloc_slot()
+    kv.ensure(s0, 18)                       # 5 pages
+    v0 = kv.bt_version[s0]
+    assert kv.truncate(s0, 9) == 2          # 18 -> 9 tokens: 3 pages kept
+    _check_invariants(kv)
+    assert len(kv.owned_pages(s0)) == 3
+    assert kv.bt_version[s0] > v0           # mirror must re-sync the row
+    assert kv.truncate(s0, 9) == 0          # idempotent at the boundary
+    assert kv.bt_version[s0] == v0 + 1
+    # mid-page truncation keeps the partial tail page
+    assert kv.truncate(s0, 7) == 1 and len(kv.owned_pages(s0)) == 2
+    # a shared page is released from this row but stays live for the
+    # other reader (COW/prefix sharing during speculation)
+    s1 = kv.alloc_slot()
+    kv.share(s1, kv.owned_pages(s0))
+    free0 = kv.free_page_count
+    assert kv.truncate(s0, 4) == 1          # drops s0's 2nd page
+    _check_invariants(kv)
+    assert kv.free_page_count == free0      # survivor: s1 still refs it
+    assert len(kv.owned_pages(s1)) == 2
+    kv.release(s0)
+    kv.release(s1)
+    assert kv.free_page_count == kv.usable_pages
+
+
 def test_compact_remaps_pages_preserving_content():
     cfg = _tiny_cfg()
     kv = PagedKVCache(cfg, n_pages=9, page_size=4, max_seqs=2,

@@ -31,6 +31,12 @@ BATCH, MAX_LEN = 3, 48
 # (page_size, n_pages, prefill_chunk): small pools force preemption;
 # chunked variants interleave prefill chunks with decode ticks
 POOLS = [(8, 6, None), (8, 9, 5), (16, 6, 5), (16, 9, None)]
+# (speculate_k, draft): the speculative axis reuses the pool-pressure
+# workload — "perfect" drafts accept everything (bursts of k+1 tokens
+# grow sequences fast), "adversarial" drafts accept ~nothing (every
+# tick over-allocates k positions and truncates them back)
+SPECS = [(2, "perfect"), (4, "perfect"), (2, "adversarial"),
+         (4, "adversarial")]
 
 _state = {}
 
@@ -51,6 +57,15 @@ def _setup():
                          page_size=key[0], n_pages=key[1],
                          prefill_chunk=key[2])
         for key in POOLS
+    }
+    drafts = {"perfect": params,
+              "adversarial": init_params(cfg, jax.random.PRNGKey(1))}
+    _state["spec"] = {
+        (k, d): ServeEngine(cfg, params, batch_size=BATCH,
+                            max_len=MAX_LEN, dtype="float32",
+                            cache_kind="paged", page_size=8, n_pages=9,
+                            speculate=k, draft_params=drafts[d])
+        for k, d in SPECS
     }
     # two long base sequences; workload prompts share prefixes of them
     rng = np.random.default_rng(7)
@@ -105,6 +120,42 @@ if given is not None:
             want = _serve(state["dense"], reqs)
             got = _serve(eng, reqs)
             assert got == want, (seed, key, _wave)
+            _check_pool(eng.kv)
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(0, 10**6))
+    def test_speculative_matches_dense_oracle(seed):
+        """Same oracle check with the speculative engines: greedy
+        self-speculative decode is token-identical to the dense engine
+        for ANY draft (the verify pass overwrites draft K/V), under the
+        same prefix-sharing + pool-pressure workloads."""
+        state = _setup()
+        rng = np.random.default_rng(seed)
+        key = SPECS[seed % len(SPECS)]
+        eng = state["spec"][key]
+        eng._prefix.clear()
+        for _wave in range(2):
+            reqs = _workload(rng, state["cfg"].vocab_size, state["bases"])
+            want = _serve(state["dense"], reqs)
+            got = _serve(eng, reqs)
+            assert got == want, (seed, key, _wave)
+            _check_pool(eng.kv)
+
+
+def test_speculative_fuzz_deterministic_seeds():
+    """hypothesis-free slice of the speculative axis: fixed seeds
+    through every (k, draft) engine, two waves each so the second wave
+    speculates on top of the first wave's accumulated prefix index."""
+    state = _setup()
+    for i, key in enumerate(SPECS):
+        eng = state["spec"][key]
+        eng._prefix.clear()
+        rng = np.random.default_rng(1000 + i)
+        for _wave in range(2):
+            reqs = _workload(rng, state["cfg"].vocab_size, state["bases"])
+            want = _serve(state["dense"], reqs)
+            got = _serve(eng, reqs)
+            assert got == want, (key, _wave)
             _check_pool(eng.kv)
 
 

@@ -1,0 +1,268 @@
+"""Self-speculative decoding exactness (serve/engine.py:_spec_decode_tick).
+
+The invariant under test everywhere: with greedy acceptance, speculative
+decode is token-identical to the dense-engine oracle for ANY draft —
+the verify pass overwrites every speculatively-written K/V slot with the
+target's own K/V before reading it (models/attention.py scatters before
+gathering, causally masked), so a rejected draft leaves nothing behind
+that the next tick can observe. Two draft regimes bracket the space:
+
+  perfect      — draft_params IS the target: every proposal accepted,
+                 ticks shrink by ~(k+1)x, rollback path never fires
+  adversarial  — differently-seeded params: ~0 acceptance, every tick
+                 speculates k tokens and rolls all of them back (the
+                 page-boundary truncate path fires constantly)
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+BATCH, MAX_LEN = 3, 48
+
+
+def _cfg():
+    return get_config("tiny-lm").replace(dtype="float32", n_layers=2,
+                                         d_model=64, d_ff=128, remat="none")
+
+
+_state = {}
+
+
+def _setup():
+    if _state:
+        return _state
+    cfg = _cfg()
+    _state["cfg"] = cfg
+    _state["params"] = init_params(cfg, KEY)
+    # adversarial draft: a differently-seeded model proposes tokens the
+    # target essentially never agrees with -> every tick rolls back
+    _state["adversarial"] = init_params(cfg, jax.random.PRNGKey(1))
+    _state["dense"] = ServeEngine(cfg, _state["params"], batch_size=BATCH,
+                                  max_len=MAX_LEN, dtype="float32")
+    _state["spec"] = {}
+    return _state
+
+
+def _spec_engine(k, draft, page_size=8):
+    """Speculative engines are cached per (k, draft, page_size): the jit
+    wrappers come from the process-wide compile cache but engine setup
+    still costs allocator + mirror construction."""
+    state = _setup()
+    key = (k, draft, page_size)
+    if key not in state["spec"]:
+        dp = state["params"] if draft == "perfect" else state["adversarial"]
+        state["spec"][key] = ServeEngine(
+            state["cfg"], state["params"], batch_size=BATCH,
+            max_len=MAX_LEN, dtype="float32", cache_kind="paged",
+            page_size=page_size, speculate=k, draft_params=dp)
+    return state["spec"][key]
+
+
+def _reqs(n=3, seed=0, max_new=12):
+    rng = np.random.default_rng(seed)
+    cfg = _setup()["cfg"]
+    return [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(4, 14))).astype(np.int32),
+             max_new) for _ in range(n)]
+
+
+def _serve(eng, reqs):
+    rs = [Request(prompt=p.copy(), max_new_tokens=n) for p, n in reqs]
+    eng.run(rs)
+    return [r.out for r in rs]
+
+
+def _check_pool(kv):
+    assert kv.live_pages + kv.free_page_count == kv.usable_pages
+    for s in range(kv.max_seqs):
+        assert not kv.owned_pages(s)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("draft", ["perfect", "adversarial"])
+def test_speculative_matches_dense_oracle(k, draft):
+    state = _setup()
+    eng = _spec_engine(k, draft)
+    reqs = _reqs(seed=10 * k)
+    want = _serve(state["dense"], reqs)
+    d0, a0 = eng.stats["draft_tokens"], eng.stats["accepted_tokens"]
+    got = _serve(eng, reqs)
+    assert got == want, (k, draft)
+    _check_pool(eng.kv)
+    drafted = eng.stats["draft_tokens"] - d0
+    accepted = eng.stats["accepted_tokens"] - a0
+    assert drafted > 0
+    rate = accepted / drafted
+    if draft == "perfect":
+        assert rate == 1.0          # the draft IS the target
+    else:
+        assert rate < 0.5           # rollback path exercised hard
+
+
+def test_perfect_draft_cuts_ticks():
+    """k=4 with a perfect draft must finish in far fewer target ticks
+    than vanilla decode — the speedup mechanism itself, independent of
+    wall-clock noise. Every accepted tick emits k+1 tokens."""
+    state = _setup()
+    reqs = _reqs(n=2, seed=3, max_new=16)
+    vanilla = ServeEngine(state["cfg"], state["params"], batch_size=BATCH,
+                          max_len=MAX_LEN, dtype="float32",
+                          cache_kind="paged", page_size=8)
+    want = _serve(vanilla, reqs)
+    t_vanilla = vanilla.stats["ticks"]
+    eng = _spec_engine(4, "perfect")
+    t0 = eng.stats["ticks"]
+    got = _serve(eng, reqs)
+    assert got == want
+    assert (eng.stats["ticks"] - t0) * 2 <= t_vanilla
+
+
+def test_page_boundary_rollbacks_stay_exact():
+    """Tiny pages + zero-acceptance draft: every tick writes draft K/V
+    across a page boundary, allocates the pages for it, then truncates
+    them all back. Outputs must still match the oracle and the pool must
+    balance — the truncate path (serve/kv_cache.py) is the whole test."""
+    state = _setup()
+    eng = _spec_engine(4, "adversarial", page_size=4)
+    # prompt lengths straddling page multiples: pos lands on/next to a
+    # boundary so speculative writes always cross into a fresh page
+    reqs = [((np.arange(L) * 3 + L).astype(np.int32)
+             % state["cfg"].vocab_size, 10) for L in (3, 4, 5, 8, 9)]
+    want = _serve(state["dense"], reqs)
+    alloc0 = eng.kv.pages_allocated
+    got = _serve(eng, reqs)
+    assert got == want
+    _check_pool(eng.kv)
+    # speculation really over-allocated (then returned) boundary pages:
+    # strictly more page traffic than the tokens kept needed
+    kept_pages = sum(eng.kv.pages_for(len(p) + n) for p, n in reqs)
+    assert eng.kv.pages_allocated - alloc0 > kept_pages
+
+
+def test_shared_prefix_with_speculation():
+    """Prefix sharing composes with speculation: attached shared pages
+    fork copy-on-write before draft K/V lands in them, and rollbacks
+    never truncate below the accepted position, so the radix index stays
+    consistent across requests."""
+    state = _setup()
+    eng = _spec_engine(2, "adversarial")
+    base = (np.arange(12) * 5 + 1).astype(np.int32) % state["cfg"].vocab_size
+    reqs = [(np.concatenate([base, np.asarray([7 + i], np.int32)]), 8)
+            for i in range(4)]
+    want = _serve(state["dense"], reqs)
+    eng._prefix.clear()
+    h0 = eng.stats.get("prefix_hits", 0)
+    got = _serve(eng, reqs)
+    assert got == want
+    assert eng.stats["prefix_hits"] > h0
+    _check_pool(eng.kv)
+
+
+def test_typical_acceptance_perfect_draft_exact_lossy_otherwise():
+    """accept_rule='typical': a perfect draft proposes the target's own
+    argmax, which always clears the tau threshold -> still exact. An
+    adversarial draft may keep sub-argmax tokens the target deems
+    typical — allowed to diverge, but must emit full-length outputs and
+    keep the pool balanced."""
+    state = _setup()
+    reqs = _reqs(n=2, seed=42, max_new=10)
+    want = _serve(state["dense"], reqs)
+    exact = ServeEngine(state["cfg"], state["params"], batch_size=BATCH,
+                        max_len=MAX_LEN, dtype="float32",
+                        cache_kind="paged", page_size=8, speculate=2,
+                        draft_params=state["params"],
+                        accept_rule="typical")
+    assert _serve(exact, reqs) == want
+    lossy = ServeEngine(state["cfg"], state["params"], batch_size=BATCH,
+                        max_len=MAX_LEN, dtype="float32",
+                        cache_kind="paged", page_size=8, speculate=2,
+                        draft_params=state["adversarial"],
+                        accept_rule="typical")
+    outs = _serve(lossy, reqs)
+    assert [len(o) for o in outs] == [n for _, n in reqs]
+    _check_pool(lossy.kv)
+
+
+def test_quantized_self_draft_is_free_and_exact():
+    """The real artifact story: GPTQT-packed params serve as their own
+    draft (leading code planes + re-fit scales). Speculative output is
+    token-identical to the non-speculative paged engine on the same
+    quantized params, and the draft tree adds exactly its scale bytes —
+    the sign codes and every unquantized leaf are shared by reference."""
+    from repro.core import quantize_model
+    from repro.quant import QuantSpec, QuantizedTensor
+    from repro.quant.draft import draft_extra_bytes
+    cfg = _cfg()
+    p = init_params(cfg, KEY)
+    calib = [jax.random.randint(jax.random.fold_in(KEY, i), (2, 48), 0,
+                                cfg.vocab_size) for i in range(2)]
+    spec = QuantSpec.from_config(cfg.quant, method="gptqt", mode="packed")
+    qp, _ = quantize_model(cfg, p, calib, spec=spec)
+    reqs = _reqs(n=3, seed=5, max_new=8)
+    plain = ServeEngine(cfg, qp, batch_size=BATCH, max_len=MAX_LEN,
+                        dtype="float32", cache_kind="paged", page_size=8)
+    want = _serve(plain, reqs)
+    eng = ServeEngine(cfg, qp, batch_size=BATCH, max_len=MAX_LEN,
+                      dtype="float32", cache_kind="paged", page_size=8,
+                      speculate=2, draft_bits=2)   # auto draft from codes
+    assert _serve(eng, reqs) == want
+    _check_pool(eng.kv)
+    extra = draft_extra_bytes(qp, eng.draft_params)
+    scale_bytes = sum(
+        int(l.alphas.size) * l.alphas.dtype.itemsize
+        + int(l.betas.size) * l.betas.dtype.itemsize
+        for l in jax.tree.leaves(
+            eng.draft_params,
+            is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor))
+    assert extra == scale_bytes
+    # the draft really runs at fewer active planes over the same codes
+    for leaf in jax.tree.leaves(
+            eng.draft_params,
+            is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            assert leaf.bits == 2 and leaf.stored_bits == 3
+
+
+def test_engine_stats_speculation_fields():
+    """EngineStats.capture populates the speculation counters and the
+    derived acceptance_rate; a non-speculative engine reports zeros."""
+    state = _setup()
+    eng = _spec_engine(2, "perfect")
+    _serve(eng, _reqs(n=2, seed=9, max_new=6))
+    st = eng.stats_snapshot()
+    assert st.speculate_k == 2 and st.draft_bits == 2
+    assert st.draft_tokens > 0
+    assert st.accepted_tokens == eng.stats["accepted_tokens"]
+    assert st.acceptance_rate == st.accepted_tokens / st.draft_tokens
+    plain = state["dense"].stats_snapshot()
+    assert plain.speculate_k == 0 and plain.draft_tokens == 0
+    assert plain.acceptance_rate == 0.0
+
+
+def test_speculative_trace_amortization():
+    """One engine, wildly varying accept/rollback counts per tick: the
+    draft and verify jits must each hold ONE trace (fixed k+1 token
+    width; per-row n_valid/live masks carry the variation), and the COW
+    copy jit's pow2 bucketing bounds its growth by the bucket count, not
+    the number of distinct fork-list lengths."""
+    eng = _spec_engine(4, "adversarial")
+    sizes0 = {n: getattr(eng, n)._cache_size()
+              for n in ("_draft_propose", "_verify", "_copy")}
+    for seed in range(3):
+        _serve(eng, _reqs(n=4, seed=seed, max_new=9))
+    # shared-prefix wave: COW forks of varying counts on top of rollback
+    base = (np.arange(10) + 2).astype(np.int32)
+    _serve(eng, [(np.concatenate([base[:c], np.asarray([c], np.int32)]), 5)
+                 for c in (4, 6, 8, 10)])
+    grow = {n: getattr(eng, n)._cache_size() - sizes0[n]
+            for n in sizes0}
+    assert grow["_draft_propose"] <= 1
+    assert grow["_verify"] <= 1
+    # pow2 buckets for 1..max fork-lists: at most log2 distinct shapes
+    assert grow["_copy"] <= 4
