@@ -21,7 +21,8 @@ import sys
 
 # importing the suite modules populates the scenario registry
 from benchmarks import (kv_capacity, prefix_cache_ops,  # noqa: F401
-                        serve_speculative, serve_throughput, table4_speed)
+                        serve_model_zoo, serve_speculative,
+                        serve_throughput, table4_speed)
 from repro.bench import (Metric, available_scenarios, exit_code,
                          register_scenario, run_scenarios)
 

@@ -1,0 +1,114 @@
+"""Model-zoo serving scenario: the paged stack across architectures.
+
+Registered as `serve_model_zoo` (quick; see docs/BENCHMARKS.md). For
+each non-plain-attention architecture — MLA (paged latent cache),
+Mamba-mix (state slabs beside attention pages), MoE (batched-expert
+BCQ dispatch) — serve the same greedy workload through the dense and
+paged engines and report:
+
+  - tokens/s on the paged engine (timing metric, wide noise band);
+  - `greedy_matched`: 1 iff paged output is token-identical to dense —
+    the deterministic conformance gate (noise 0: any paging-visible
+    numeric drift fails CI);
+  - the capacity counters each architecture adds: latent bytes/page
+    for MLA, slab high-water + bytes/slab for Mamba.
+
+Plain attention is covered by `serve_throughput`; this scenario owns
+the zoo.
+
+  PYTHONPATH=src:. python -m benchmarks.serve_model_zoo    # standalone
+  PYTHONPATH=src:. python -m benchmarks.run --quick        # via runner
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bench import counter, info, register_scenario, throughput
+
+MAX_LEN = 64
+PAGE = 8
+MAX_NEW = 8
+N_REQS = 3
+
+# arch tag -> registry name
+ZOO = {
+    "mla": "minicpm3-4b",
+    "mamba_mix": "jamba-1.5-large-398b",
+    "moe": "mixtral-8x7b",
+}
+
+_MODELS: dict = {}
+
+
+def _model(arch):
+    """Smoke-sized model per arch, shared across scenario calls in one
+    process (init only — the numbers measure serving)."""
+    if arch not in _MODELS:
+        import jax
+
+        from repro.configs import smoke_config
+        from repro.models import init_params
+        cfg = smoke_config(ZOO[arch]).replace(dtype="float32", remat="none")
+        _MODELS[arch] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODELS[arch]
+
+
+def _requests(vocab, seed=0):
+    from repro.serve import Request
+    out = []
+    for i in range(N_REQS):
+        L = 4 + 3 * (i % 3)
+        out.append(Request(prompt=(np.arange(L) * 7 + 11 * i + seed)
+                           .astype(np.int32) % vocab,
+                           max_new_tokens=MAX_NEW))
+    return out
+
+
+def _serve(cfg, params, paged):
+    from repro.serve import ServeEngine
+    kw = dict(cache_kind="paged", page_size=PAGE) if paged else {}
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=MAX_LEN,
+                      dtype="float32", **kw)
+    reqs = _requests(cfg.vocab_size)
+    eng.run(reqs)
+    return [r.out for r in reqs], eng.stats_snapshot()
+
+
+@register_scenario("serve_model_zoo", quick=True, tags=("serving", "zoo"))
+def serve_model_zoo_scenario(ctx) -> dict:
+    """Dense-vs-paged conformance + throughput for MLA/Mamba/MoE."""
+    metrics: dict = {}
+    for arch in ZOO:
+        cfg, params = _model(arch)
+        want, _ = _serve(cfg, params, paged=False)
+        got, s = _serve(cfg, params, paged=True)
+        metrics[f"{arch}/greedy_matched"] = counter(
+            int(got == want), higher_is_better=True)
+        metrics[f"{arch}/tok_s"] = throughput(s.decode_tok_s)
+        metrics[f"{arch}/tokens"] = info(s.tokens, unit="tok")
+        metrics[f"{arch}/pages_high_water"] = counter(
+            s.kv_high_water_pages, unit="pages")
+        if arch == "mla":
+            # compressed latent pages: (kv_lora_rank + rope dim) per
+            # token, not 2 * Hkv * hd — the capacity win paging buys
+            metrics[f"{arch}/latent_bytes_per_page"] = info(
+                s.kv_bytes_per_page, unit="B")
+        if arch == "mamba_mix":
+            metrics[f"{arch}/slab_high_water"] = counter(
+                s.slab_high_water, unit="slabs")
+            metrics[f"{arch}/slabs_allocated"] = counter(
+                s.slabs_allocated, unit="slabs")
+            metrics[f"{arch}/slab_bytes_per_slab"] = info(
+                s.slab_bytes_per_slab, unit="B")
+    return metrics
+
+
+def main() -> None:
+    """Standalone CLI: print the scenario's metrics as CSV-ish lines."""
+    from repro.bench import BenchContext
+    for name, m in serve_model_zoo_scenario(BenchContext(quick=True)).items():
+        print(f"serve_model_zoo/{name},{m.value:.6g},{m.unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ EXTRA = {
     c.name: c for c in [
         _paper.OPT_125M, _paper.LLAMA2_7B, _paper.BLOOM_560M,
         _paper.TINY_LM, _paper.TINY_LM_WIDE, _paper.TINY_LM_DEEP,
+        _paper.TINY_MLA, _paper.TINY_MOE,
     ]
 }
 

@@ -7,7 +7,7 @@ The tiny models keep each family's distinguishing block structure
 (OPT: MHA+ReLU-ish dense FFN; Llama2: GQA+SwiGLU; Bloom: MHA+GeLU dense)
 at a width that trains to meaningful perplexity on CPU in minutes.
 """
-from repro.configs.base import LayerSpec, ModelConfig
+from repro.configs.base import LayerSpec, MLAConfig, ModelConfig, MoEConfig
 
 # Full-size reference points (config fidelity; exercised via dry-run only)
 OPT_125M = ModelConfig(
@@ -36,3 +36,18 @@ TINY_LM = ModelConfig(
 TINY_LM_WIDE = TINY_LM.replace(name="tiny-lm-wide", d_model=384, n_heads=6,
                                n_kv_heads=3, d_ff=1536, n_layers=4)
 TINY_LM_DEEP = TINY_LM.replace(name="tiny-lm-deep", n_layers=8)
+
+# Tiny zoo members for end-to-end CLI smokes: byte-tokenizer vocab (258)
+# versions of the MLA and MoE block structures, trainable on CPU in well
+# under a minute so CI can do train -> quantize -> serve for real.
+TINY_MLA = TINY_LM.replace(
+    name="tiny-mla", n_layers=2, d_model=128, d_ff=512,
+    head_dim=24,  # qk head dim = nope(16)+rope(8)
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+)
+TINY_MOE = TINY_LM.replace(
+    name="tiny-moe", family="moe", n_layers=2, d_model=128, d_ff=512,
+    pattern=(LayerSpec(kind="attn", mlp="moe"),),
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=256),
+)

@@ -128,7 +128,8 @@ def named_pspec(cfg, names, leaf, mesh, *, fsdp: bool = True) -> P:
 
     if name in _QT_LEAVES:
         return _qt_pspec(name, names[-2] if len(names) > 1 else "", shape,
-                         sizes, data_ax, model_ax)
+                         sizes, data_ax, model_ax,
+                         is_expert=any(n == "moe" for n in names))
 
     if len(shape) < 2 or not _is_matmul(name):
         return P(*([None] * len(shape)))
@@ -157,14 +158,29 @@ def named_pspec(cfg, names, leaf, mesh, *, fsdp: bool = True) -> P:
     return _guard(shape, lead + (data_ax, model_ax), sizes)
 
 
-def _qt_pspec(leaf_name, base_name, shape, sizes, data_ax, model_ax):
+def _qt_pspec(leaf_name, base_name, shape, sizes, data_ax, model_ax,
+              is_expert=False):
     """QuantizedTensor children shard like the dense weight they stand
     in for: codes (..., bits, K/32, N), alphas (..., G, N, bits),
-    betas (..., G, N)."""
+    betas (..., G, N). Batched-expert stacks (leading E dim under a
+    "moe" path) mirror the dense expert-parallel rule: E rides the
+    model axis when divisible, codes keep FSDP on the packed-K dim and
+    scales replicate within an expert."""
     if base_name in _CONTRACT:
         k_ax, n_ax = model_ax, data_ax
     else:
         k_ax, n_ax = data_ax, model_ax
+    base_rank = {".codes": 3, ".alphas": 3, ".betas": 2}[leaf_name]
+    if (is_expert and base_name != "router" and len(shape) > base_rank
+            and model_ax is not None and shape[0] % sizes[model_ax] == 0):
+        mid = (None,) * (len(shape) - base_rank - 1)
+        if leaf_name == ".codes":
+            spec = (model_ax,) + mid + (None, data_ax, None)
+        elif leaf_name == ".alphas":
+            spec = (model_ax,) + mid + (None, None, None)
+        else:  # .betas
+            spec = (model_ax,) + mid + (None, None)
+        return _guard(shape, spec, sizes)
     if leaf_name == ".codes":
         spec = (None,) * (len(shape) - 2) + (k_ax, n_ax)
     elif leaf_name == ".alphas":
@@ -207,6 +223,11 @@ def cache_pspec(cfg, path, leaf, mesh) -> P:
     if name in ("k_pages", "v_pages") and len(shape) == 5:
         # (G, P, page, H, hd): pages across data, kv heads across model
         return _guard(shape, P(None, data_ax, None, model_ax, None), sizes)
+
+    if name in ("ckv_pages", "kpe_pages") and len(shape) == 5:
+        # MLA latent pages (G, P, page, 1, r): pages across data; the
+        # per-token latent/rope vectors are small and replicate
+        return _guard(shape, P(None, data_ax, None, None, None), sizes)
 
     # binary-coded pool leaves (quant/kv.py layout): same placement —
     # pages ride the data axis, kv heads the model axis — applied to the

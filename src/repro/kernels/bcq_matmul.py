@@ -58,15 +58,11 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
 
-def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
-            bits: int, nk: int, bg: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    codes = codes_ref[...]                               # (bits, BK/32, BN)
+def _expand_w(codes, alphas, betas, *, bits: int, bg: int):
+    """Expand one VMEM tile of packed codes + group scales into a dense
+    (BK, BN) fp32 weight tile: shift-unpack the sign bitplanes, then
+    broadcast each group's scales over its rows. Shared by the single-
+    matrix and batched-expert kernel bodies."""
     bk32, bn = codes.shape[1], codes.shape[2]
     bk = bk32 * WORD
     shifts = jax.lax.broadcasted_iota(
@@ -82,12 +78,23 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
     # scales may arrive bf16 (packed artifacts keep them bf16 in
     # memory); expand in fp32 so accumulation matches fp32-scale runs
     w = jnp.broadcast_to(
-        beta_ref[...][:, None, :], (bg, sub, bn)).astype(jnp.float32)
+        betas[:, None, :], (bg, sub, bn)).astype(jnp.float32)
     for i in range(bits):                                # static unroll
-        a_i = alpha_ref[:, :, i].astype(jnp.float32)
+        a_i = alphas[:, :, i].astype(jnp.float32)
         w = w + a_i[:, None, :] * signs[i]
-    w = w.reshape(bk, bn)
+    return w.reshape(bk, bn)
 
+
+def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
+            bits: int, nk: int, bg: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _expand_w(codes_ref[...], alpha_ref[...], beta_ref[...],
+                  bits=bits, bg=bg)
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], w.astype(x_ref.dtype),
         (((1,), (0,)), ((), ())),
@@ -96,6 +103,58 @@ def _kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
     @pl.when(k == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _expert_kernel(x_ref, codes_ref, alpha_ref, beta_ref, o_ref, acc_ref, *,
+                   bits: int, nk: int, bg: int):
+    """Batched-expert body: identical math, one extra leading grid axis
+    selecting the expert. Every operand block carries a singleton expert
+    dim (BlockSpec block size 1 on E) that the body squeezes away."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _expand_w(codes_ref[0], alpha_ref[0], beta_ref[0], bits=bits, bg=bg)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w.astype(x_ref.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _group_geometry(K: int, G: int, block_k: int):
+    """Legalize BK against the scale grouping. Returns
+    (gs, block_k, bg, gtile) where gs is the group size (0 for
+    per-channel), bg the groups per K-tile, and gtile maps the K grid
+    index to the alpha/beta tile index along G. Shared by the single-
+    matrix and batched-expert entries so both legalize identically."""
+    if G == 1:
+        return 0, block_k, 1, lambda k: 0
+    if K % G:
+        raise ValueError(f"G={G} scale groups must divide K={K}")
+    gs = K // G
+    if gs % WORD:
+        raise ValueError(
+            f"group_size={gs} must be a multiple of {WORD} for the "
+            f"packed kernel (use the jnp reference path otherwise)")
+    if gs < block_k:
+        # several whole groups per K-tile: round BK down to a group
+        # multiple (stays >= gs >= 32)
+        block_k = block_k - block_k % gs
+    elif gs % block_k:
+        # group spans tiles but doesn't divide evenly: shrink BK to
+        # the largest common divisor (a multiple of 32, since both
+        # are) so every K-tile stays inside one group
+        block_k = math.gcd(gs, block_k)
+    if gs <= block_k:
+        return gs, block_k, block_k // gs, lambda k: k
+    tiles_per_group = gs // block_k
+    return gs, block_k, 1, lambda k: k // tiles_per_group
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
@@ -114,25 +173,7 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=BLOCK_M, block_n=BLOCK_N,
     assert alphas.shape == (G, N, bits), alphas.shape
     assert betas.shape == (G, N), betas.shape
 
-    if G == 1:
-        gs = 0
-    else:
-        if K % G:
-            raise ValueError(f"G={G} scale groups must divide K={K}")
-        gs = K // G
-        if gs % WORD:
-            raise ValueError(
-                f"group_size={gs} must be a multiple of {WORD} for the "
-                f"packed kernel (use the jnp reference path otherwise)")
-        if gs < block_k:
-            # several whole groups per K-tile: round BK down to a group
-            # multiple (stays >= gs >= 32)
-            block_k = block_k - block_k % gs
-        elif gs % block_k:
-            # group spans tiles but doesn't divide evenly: shrink BK to
-            # the largest common divisor (a multiple of 32, since both
-            # are) so every K-tile stays inside one group
-            block_k = math.gcd(gs, block_k)
+    gs, block_k, bg, gtile = _group_geometry(K, G, block_k)
 
     # block height must stay a multiple of the 8-sublane tile: round the
     # small-M shortcut up (e.g. M=100 -> bm=104, not 100)
@@ -151,19 +192,8 @@ def bcq_matmul(x, codes, alphas, betas, *, block_m=BLOCK_M, block_n=BLOCK_N,
     nk = Kp // block_k
     grid = (Mp // bm, Np // block_n, nk)
 
-    if gs == 0:
-        bg = 1
-        a_index = lambda i, j, k: (0, j, 0)
-        b_index = lambda i, j, k: (0, j)
-    elif gs <= block_k:
-        bg = block_k // gs
-        a_index = lambda i, j, k: (k, j, 0)              # tile k -> groups
-        b_index = lambda i, j, k: (k, j)                 # [k*bg, (k+1)*bg)
-    else:
-        bg = 1
-        tiles_per_group = gs // block_k
-        a_index = lambda i, j, k: (k // tiles_per_group, j, 0)
-        b_index = lambda i, j, k: (k // tiles_per_group, j)
+    a_index = lambda i, j, k: (gtile(k), j, 0)           # K-tile -> groups
+    b_index = lambda i, j, k: (gtile(k), j)              # [k*bg, (k+1)*bg)
 
     out = pl.pallas_call(
         functools.partial(_kernel, bits=bits, nk=nk, bg=bg),
@@ -192,3 +222,69 @@ def bcq_gemv(x, codes, alphas, betas, *, block_n=GEMV_BLOCK_N,
     codes dominate bytes; x and y are negligible)."""
     return bcq_matmul(x, codes, alphas, betas, block_m=SUBLANE,
                       block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def bcq_expert_matmul(x, codes, alphas, betas, *, block_m=BLOCK_M,
+                      block_n=BLOCK_N, block_k=BLOCK_K, interpret=False):
+    """Batched-expert GEMM: one launch covers an MoE layer's whole
+    expert stack instead of E separate dispatches (or a full dequant of
+    every expert's W). x (E, M, K); codes (E, bits, K/32, N); alphas
+    (E, G, N, bits); betas (E, G, N). Returns (E, M, N) in x.dtype.
+
+    The expert axis becomes a leading parallel grid dimension with block
+    size 1: each (e, i, j, k) step streams expert e's packed K-tile into
+    VMEM and runs the same expand-then-one-GEMM body as `bcq_matmul`
+    (the kernel squeezes the singleton expert dim). Group legalization,
+    padding and the fp32 accumulator are shared with the single-matrix
+    entry, so the two stay numerically identical per expert.
+    """
+    E, M, K = x.shape
+    bits, KW, N = codes.shape[-3:]
+    G = alphas.shape[1]
+    assert KW * WORD == K, (K, KW)
+    assert codes.shape == (E, bits, KW, N), codes.shape
+    assert alphas.shape == (E, G, N, bits), alphas.shape
+    assert betas.shape == (E, G, N), betas.shape
+
+    gs, block_k, bg, gtile = _group_geometry(K, G, block_k)
+
+    bm = min(block_m, -(-max(SUBLANE, M) // SUBLANE) * SUBLANE)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // block_n) * block_n
+    Kp = -(-K // block_k) * block_k
+    if Mp != M or Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    if Np != N or Kp != K:
+        codes = jnp.pad(
+            codes, ((0, 0), (0, 0), (0, (Kp - K) // WORD), (0, Np - N)))
+        Gp = Kp // gs if gs else 1
+        alphas = jnp.pad(alphas, ((0, 0), (0, Gp - G), (0, Np - N), (0, 0)))
+        betas = jnp.pad(betas, ((0, 0), (0, Gp - G), (0, Np - N)))
+
+    nk = Kp // block_k
+    grid = (E, Mp // bm, Np // block_n, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_expert_kernel, bits=bits, nk=nk, bg=bg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, block_k), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bits, block_k // WORD, block_n),
+                         lambda e, i, j, k: (e, 0, k, j)),
+            pl.BlockSpec((1, bg, block_n, bits),
+                         lambda e, i, j, k: (e, gtile(k), j, 0)),
+            pl.BlockSpec((1, bg, block_n),
+                         lambda e, i, j, k: (e, gtile(k), j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, block_n),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, block_n), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, codes, alphas, betas)
+    return out[:, :M, :N]

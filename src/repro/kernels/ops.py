@@ -5,9 +5,11 @@ weights: it picks the Pallas kernel on TPU (or when FORCE_PALLAS is set,
 running interpret=True off-TPU for tests) and the pure-jnp reference
 otherwise. Group-wise scales (G > 1) ride the kernel whenever the
 packed layout lines up (group_size a multiple of the 32-bit pack word,
-so the zero-padded K tail never crosses into a phantom group); expert
-stacks (leading dims) and ragged groupings fall back to the reference
-path.
+so the zero-padded K tail never crosses into a phantom group). A
+single-axis expert stack (codes (E, bits, K/32, N)) with a matching
+batched activation (E, C, k_in) rides the batched-expert kernel — one
+launch for the whole MoE layer; deeper leading dims and ragged
+groupings fall back to the reference path.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bcq_matmul import bcq_gemv, bcq_matmul
+from repro.kernels.bcq_matmul import bcq_expert_matmul, bcq_gemv, bcq_matmul
 from repro.quant.packing import WORD
 
 # None = auto (use Pallas iff backend is TPU). Tests/benches may override.
@@ -53,8 +55,20 @@ def bcq_apply(x, qt):
     """x (..., k_in) @ QuantizedTensor -> (..., n_out)."""
     codes = _active_codes(qt)
     lead = codes.shape[:-3]
-    if lead:                      # expert/group stacks: reference path
+    if lead:                      # expert/group stacks
+        if (len(lead) == 1 and x.ndim == 3 and x.shape[0] == lead[0]
+                and _use_pallas() and _kernel_groups_ok(qt)):
+            interpret = jax.default_backend() != "tpu"
+            kp = codes.shape[-2] * WORD
+            xm = x
+            if kp != qt.k_in:
+                xm = jnp.pad(xm, ((0, 0), (0, 0), (0, kp - qt.k_in)))
+            return bcq_expert_matmul(xm, codes, qt.alphas, qt.betas,
+                                     interpret=interpret)
         w = _dequant_nd(qt, x.dtype)
+        if len(lead) == 1 and x.ndim == 3 and x.shape[0] == lead[0]:
+            # batched expert matmul: (E, C, k) @ (E, k, n) -> (E, C, n)
+            return jnp.einsum("eck,ekn->ecn", x, w)
         return jnp.einsum("...k,...kn->...n", x, w)
     if not _use_pallas() or not _kernel_groups_ok(qt):
         w = ref.dequant_ref(codes, qt.alphas, qt.betas, qt.k_in,

@@ -15,6 +15,7 @@ dense decode token-for-token.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.quant.packing import unpack_signs
@@ -49,6 +50,18 @@ def bcq_gemv_ref(x, codes, alphas, betas, k_in: int):
     """Oracle for the decode-shaped kernel entry: same math as the GEMM
     (the gemv only retiles), so the reference is shared."""
     return bcq_matmul_ref(x, codes, alphas, betas, k_in)
+
+
+def bcq_expert_matmul_ref(x, codes, alphas, betas, k_in: int):
+    """Oracle for the batched-expert kernel: x (E, M, k_in); codes
+    (E, bits, K/32, N); alphas (E, G, N, bits); betas (E, G, N)
+    -> (E, M, N). Dequantize every expert (vmapped single-expert
+    oracle), then one batched matmul."""
+    w = jax.vmap(
+        lambda c, a, b: dequant_ref(c, a, b, k_in, dtype=jnp.float32))(
+        codes, alphas, betas)                            # (E, k_in, N)
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32),
+                      w).astype(x.dtype)
 
 
 def _paged_attend(q, k, v, ctx_lens, *, window, cap):

@@ -64,6 +64,13 @@ def main():
     ap.add_argument("--train-steps", type=int, default=300,
                     help="tiny-LM pretraining steps (ignored with "
                          "--load-quantized)")
+    ap.add_argument("--cache", default="auto",
+                    choices=("auto", "dense", "paged"),
+                    help="cache backend: auto picks paged when a mesh, "
+                         "kv-bits, speculation, or a non-attention block "
+                         "pattern (MLA latents, Mamba state slabs) asks "
+                         "for it; paged forces the paged stack and "
+                         "prints its capacity banner")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--batch-size", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=24)
@@ -211,6 +218,12 @@ def main():
         draft_params = make_draft_params(params, args.draft_bits,
                                          scales_tree)
     paged = mesh is not None or args.kv_bits > 0 or args.speculate > 0
+    if args.cache == "paged":
+        paged = True
+    elif args.cache == "dense":
+        if paged:
+            ap.error("--cache dense conflicts with --mesh/--kv-bits/"
+                     "--speculate (each requires the paged backend)")
     eng = ServeEngine(cfg, params, batch_size=batch,
                       max_len=160, dtype="float32",
                       cache_kind="paged" if paged else "dense",
@@ -219,6 +232,15 @@ def main():
                       speculate=args.speculate,
                       draft_bits=args.draft_bits,
                       draft_params=draft_params)
+    if paged:
+        kv = eng.kv
+        kind = "latent" if cfg.mla is not None else "kv"
+        print(f"paged {kind} cache: {kv.n_pages} pages x "
+              f"{kv.page_size} tok, {kv.bytes_per_page()} B/page")
+        if eng.slab is not None:
+            sl = eng.slab
+            print(f"state slab pool: {sl.usable_slabs} usable slabs "
+                  f"({sl.n_shards} reserve), {sl.bytes_per_slab()} B/slab")
     if args.kv_bits:
         kv = eng.kv
         raw = kv.__class__(cfg, n_pages=kv.n_pages,

@@ -208,9 +208,15 @@ def paged_kv_page_bytes(cfg, page_size, dtype, kv_bits=0,
     serve CLI all read it)."""
     from repro.quant.kv import kv_bytes_per_token_head
     itemsize = jnp.dtype(dtype or cfg.dtype).itemsize
+    n_attn = sum(1 for s in cfg.pattern if s.kind == "attn") * cfg.n_groups
+    if cfg.mla is not None:
+        # latent pages: one compressed c_kv + one shared rotary key per
+        # token — no per-head factor, no separate V page
+        m = cfg.mla
+        per_tok = (m.kv_lora_rank + m.qk_rope_head_dim) * itemsize
+        return page_size * per_tok * n_attn
     per_vec = kv_bytes_per_token_head(cfg.resolved_head_dim, kv_bits,
                                       kv_group_size, itemsize)
-    n_attn = sum(1 for s in cfg.pattern if s.kind == "attn") * cfg.n_groups
     return 2 * page_size * cfg.n_kv_heads * per_vec * n_attn
 
 

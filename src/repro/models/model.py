@@ -253,16 +253,19 @@ def init_paged_cache(cfg, n_pages, page_size, max_seqs, dtype=None,
     instead of raw K/V — 4-8x fewer pool bytes per page at serving
     accuracy (see docs/SERVING.md §Quantized KV cache)."""
     dtype = jnp.dtype(dtype or cfg.dtype)
-    if cfg.mla is not None:
+    if cfg.mla is not None and kv_bits:
         raise NotImplementedError(
-            "paged KV for the MLA latent cache is not implemented yet; "
-            "use cache_kind='dense'")
+            "binary-coded pages code per-head K/V vectors; the MLA latent "
+            "cache is already compressed and serves with kv_bits=0")
     cache = {}
     for i, spec in enumerate(cfg.pattern):
         if spec.kind == "attn":
-            one = attn.init_paged_kv(cfg, n_pages, page_size, dtype,
-                                     kv_bits=kv_bits,
-                                     kv_group_size=kv_group_size)
+            if cfg.mla is not None:
+                one = mla_mod.init_mla_paged(cfg, n_pages, page_size, dtype)
+            else:
+                one = attn.init_paged_kv(cfg, n_pages, page_size, dtype,
+                                         kv_bits=kv_bits,
+                                         kv_group_size=kv_group_size)
         else:
             one = mam.init_mamba_cache(cfg, max_seqs, dtype)
         cache[f"L{i}"] = jax.tree.map(
@@ -391,8 +394,12 @@ def decode_step_paged(cfg, params, cache, tokens, pos, block_tables):
     block_tables: (B, T) int32 page ids, row b = sequence in slot b.
     Same contract as decode_step otherwise."""
     x = embed_inputs(cfg, params, tokens)
-    step = lambda spec, p, h, c: attn.attn_decode_paged(
-        cfg, spec, p, h, c, block_tables, pos)
+    if cfg.mla is not None:
+        step = lambda spec, p, h, c: mla_mod.mla_decode_paged(
+            cfg, spec, p, h, c, block_tables, pos)
+    else:
+        step = lambda spec, p, h, c: attn.attn_decode_paged(
+            cfg, spec, p, h, c, block_tables, pos)
     logits, new_cache = _decode_scan(cfg, params, cache, x, step)
     return logits[:, 0], new_cache
 
@@ -439,16 +446,20 @@ def _extend_scan(cfg, params, cache, tokens, start_pos, block_tables,
     padded; n_valid (B,) counts the real ones) at absolute positions
     start_pos + [0..C), writing their K/V into the sequences' pages and
     attending over pages + chunk causally. Returns logits at EVERY
-    chunk position ((B, C, V), cache). Only attention patterns support
-    this (recurrent mamba state needs sequential threading)."""
-    if any(spec.kind != "attn" for spec in cfg.pattern) or cfg.mla is not None:
+    chunk position ((B, C, V), cache). Attention and MLA patterns only
+    (recurrent mamba state needs sequential threading)."""
+    if any(spec.kind != "attn" for spec in cfg.pattern):
         raise NotImplementedError(
             "multi-token paged passes require an attention-only pattern")
     C = tokens.shape[1]
     chunk_mask = jnp.arange(C)[None, :] < n_valid[:, None]
     x = embed_inputs(cfg, params, tokens)
-    step = lambda spec, p, h, c: attn.attn_extend_paged(
-        cfg, spec, p, h, c, block_tables, start_pos, chunk_mask)
+    if cfg.mla is not None:
+        step = lambda spec, p, h, c: mla_mod.mla_extend_paged(
+            cfg, spec, p, h, c, block_tables, start_pos, chunk_mask)
+    else:
+        step = lambda spec, p, h, c: attn.attn_extend_paged(
+            cfg, spec, p, h, c, block_tables, start_pos, chunk_mask)
     return _decode_scan(cfg, params, cache, x, step)
 
 
@@ -498,6 +509,28 @@ def scatter_prefill_cache(cfg, paged_cache, row_cache, slot, page_ids,
             out[key] = jax.tree.map(
                 lambda pool, one: pool.at[:, slot].set(one[:, 0]),
                 pooled, row)
+            continue
+        if "ckv_pages" in pooled:
+            page = pooled["ckv_pages"].shape[2]
+            npg = page_ids.shape[0]
+
+            def put_latent(pool, one):
+                # one (G, 1, S_pad, r) -> (G, npg, page, 1, r)
+                G, _, S_pad, r = one.shape
+                rows = one[:, 0]
+                pad = npg * page - S_pad
+                if pad:
+                    rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0)))
+                rows = rows.reshape(G, npg, page, 1, r)
+                keep = (jnp.arange(npg * page) < n_valid).reshape(npg, page)
+                cur = pool[:, page_ids]
+                return pool.at[:, page_ids].set(
+                    jnp.where(keep[None, :, :, None, None],
+                              rows.astype(pool.dtype), cur))
+
+            out[key] = {
+                "ckv_pages": put_latent(pooled["ckv_pages"], row["c_kv"]),
+                "kpe_pages": put_latent(pooled["kpe_pages"], row["k_pe"])}
             continue
         quant = "k_codes" in pooled
         page = (pooled["k_codes"] if quant else pooled["k_pages"]).shape[2]

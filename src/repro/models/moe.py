@@ -78,19 +78,25 @@ def moe_forward(cfg, p, x, *, capacity_factor=None, dropless=False):
     xe = xpad[slot_tok[: E * C]].reshape(E, C, D)
 
     # ---- expert computation (SwiGLU) ----
-    def ew(name):  # expert weight, possibly a QuantizedTensor stack
+    def emul(v, name):
+        """v (E, C, k) @ expert stack (E, k, n) -> (E, C, n).
+        QuantizedTensor stacks dispatch through ops.bcq_apply: the
+        batched-expert Pallas kernel on TPU (one launch covers the whole
+        stack, dequant fused) and the vmapped dequant oracle elsewhere."""
         w = p[name]
-        return w.dequant(xe.dtype) if hasattr(w, "dequant") else w.astype(xe.dtype)
+        if hasattr(w, "quantized_matmul"):
+            return w.quantized_matmul(v)
+        return jnp.einsum("eck,ekn->ecn", v, w.astype(v.dtype))
 
     from repro.models import layers as _L
     if _L._TAP is not None:   # calibration: per-expert inputs
         _L._TAP.setdefault(id(p["wg"]), []).append(xe)
         _L._TAP.setdefault(id(p["wu"]), []).append(xe)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, ew("wg")))
-    h = h * jnp.einsum("ecd,edf->ecf", xe, ew("wu"))
+    h = jax.nn.silu(emul(xe, "wg"))
+    h = h * emul(xe, "wu")
     if _L._TAP is not None:
         _L._TAP.setdefault(id(p["wd"]), []).append(h)
-    ye = jnp.einsum("ecf,efd->ecd", h, ew("wd"))
+    ye = emul(h, "wd")
 
     # ---- combine ----
     contrib = ye.reshape(E * C, D) * slot_w[: E * C, None].astype(ye.dtype)

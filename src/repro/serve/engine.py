@@ -147,7 +147,7 @@ class ServeEngine:
                  prefix_max_pages=None, mesh=None, kv_bits=0,
                  kv_group_size=0, speculate=0, draft_bits=2,
                  draft_params=None, accept_rule="greedy",
-                 typical_tau=0.3):
+                 typical_tau=0.3, state_slabs=None):
         assert cache_kind in ("dense", "paged"), cache_kind
         if kv_bits and cache_kind != "paged":
             raise ValueError(
@@ -163,11 +163,6 @@ class ServeEngine:
             raise ValueError(
                 f"accept_rule={accept_rule!r}; expected 'greedy' or "
                 f"'typical'")
-        if cache_kind == "paged" and cfg.mla is not None:
-            raise NotImplementedError(
-                "cache_kind='paged' does not support MLA latent caches "
-                "yet (ROADMAP: 'page the MLA latent cache'); use "
-                "cache_kind='dense'")
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -192,13 +187,16 @@ class ServeEngine:
             n_shards = data_shards
         dtype = dtype or cfg.dtype
 
-        attn_only = (cfg.mla is None
-                     and all(s.kind == "attn" for s in cfg.pattern))
+        # MLA counts as attention here: its latent pages ride the same
+        # block-table/COW/prefix machinery, and its extend path exists
+        # (models/mla.py:mla_extend_paged)
+        attn_only = all(s.kind == "attn" for s in cfg.pattern)
         no_window = all(s.window is None for s in cfg.pattern)
-        if speculate and not attn_only:
+        if speculate and (not attn_only or cfg.mla is not None):
             raise NotImplementedError(
                 "speculate>0 verifies k+1 positions through the paged "
-                "extend path, which is attention-only")
+                "extend path, which needs a standard attention-only "
+                "pattern (MLA drafts are not wired up)")
         # bucketed prefill needs padding tokens to be harmless: causal
         # attention masks them and decode overwrites their cache slots,
         # but rolling window buffers and recurrent mamba state both mix
@@ -211,6 +209,7 @@ class ServeEngine:
         self._extend_prefill = cache_kind == "paged" and \
             (bool(prefill_chunk) or not no_window)
         self._prefix = None
+        self.slab = None
         if cache_kind == "paged":
             if self._extend_prefill and not attn_only:
                 raise NotImplementedError(
@@ -232,6 +231,17 @@ class ServeEngine:
                                    kv_bits=kv_bits,
                                    kv_group_size=kv_group_size)
             self.page_size = page_size
+            # recurrent layers: pooled fixed-size state slabs under the
+            # page-pool's allocator invariants — admission claims one
+            # slab per sequence, exhaustion is declined like OutOfPages
+            if not attn_only:
+                from repro.serve.state_slab import StateSlabPool
+                n_slabs = (batch_size + n_shards if state_slabs is None
+                           else int(state_slabs))
+                n_slabs = -(-n_slabs // n_shards) * n_shards
+                self.slab = StateSlabPool(cfg, n_slabs=n_slabs,
+                                          max_seqs=batch_size,
+                                          n_shards=n_shards, dtype=dtype)
             # prefix sharing skips matched prefill via the extend path,
             # so it has the same attention-only requirement
             if prefix_sharing and attn_only:
@@ -289,7 +299,8 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self.sched = Scheduler(
             self.kv, watermark=watermark if cache_kind == "paged" else 0,
-            prefill_chunk=prefill_chunk, prefix=self._prefix)
+            prefill_chunk=prefill_chunk, prefix=self._prefix,
+            slab=self.slab)
         self.pos = np.zeros((batch_size,), np.int32)
         self.cur = np.zeros((batch_size,), np.int32)
         self._prefill = compile_cache.get("prefill", cfg, mesh)

@@ -75,11 +75,17 @@ class Scheduler:
     """FCFS continuous batching over a PagedKVCache."""
 
     def __init__(self, kv: PagedKVCache, *, watermark: int = 1,
-                 prefill_chunk: int | None = None, prefix=None):
+                 prefill_chunk: int | None = None, prefix=None,
+                 slab=None):
         self.kv = kv
         self.watermark = int(watermark)
         self.prefill_chunk = prefill_chunk
         self.prefix = prefix              # RadixPrefixCache or None
+        # StateSlabPool (serve/state_slab.py) for recurrent-state
+        # configs: admission additionally claims one fixed-size state
+        # slab, and slab exhaustion is declined/preempted exactly like
+        # page exhaustion (same OutOfPages)
+        self.slab = slab
         self.waiting: deque[_Entry] = deque()
         self.running: dict[int, _Entry] = {}   # slot -> entry
         self.preemptions = 0
@@ -178,6 +184,15 @@ class Scheduler:
         slot = self._alloc_slot(shard)
         if slot is None:
             return None
+        if self.slab is not None:
+            try:
+                self.slab.alloc(slot)
+            except OutOfPages:
+                # state-slab exhaustion == page exhaustion: give the
+                # slot back (nothing was allocated) and wait for a
+                # running sequence to return its slab
+                self.kv.release(slot)
+                return None
         self.waiting.popleft()
         e.slot = slot
         e.prefilled = 0
@@ -198,6 +213,8 @@ class Scheduler:
         (recompute on resume; exact under greedy decoding)."""
         e = self.running.pop(slot)
         self.kv.release(slot)
+        if self.slab is not None:
+            self.slab.release(slot)
         if e.req.out:
             gen = np.asarray(e.req.out, np.int32)
             e.prompt = np.concatenate([np.asarray(e.req.prompt, np.int32),
@@ -270,6 +287,8 @@ class Scheduler:
             self.prefix.insert(cached_tokens,
                                self.kv.owned_pages(slot)[:n])
         self.kv.release(slot)
+        if self.slab is not None:
+            self.slab.release(slot)
         e.metrics.t_done = time.time()
         e.metrics.n_generated = len(e.req.out)
         e.req.done = True
@@ -305,7 +324,14 @@ class Scheduler:
             "prefix_tokens_saved": 0,
             "prefix_cached_pages": 0,
             "prefix_evictions": 0,
+            "slab_usable_slabs": 0,
+            "slab_high_water": 0,
+            "slabs_allocated": 0,
         }
+        if self.slab is not None:
+            out["slab_usable_slabs"] = self.slab.usable_slabs
+            out["slab_high_water"] = self.slab.high_water
+            out["slabs_allocated"] = self.slab.slabs_allocated
         if self.prefix is not None:
             out["prefix_hits"] = self.prefix.hits
             out["prefix_lookups"] = self.prefix.lookups

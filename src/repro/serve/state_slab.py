@@ -1,0 +1,190 @@
+"""Pooled fixed-size state slabs for recurrent (Mamba/SSM) layers.
+
+Recurrent state is O(1) per sequence — one (d_inner, d_state) SSM
+carry plus a (d_conv-1, d_inner) conv window per layer — so it doesn't
+page like O(T) attention K/V. It still needs pooled admission control:
+"can this sequence get state storage" is the same capacity question as
+"can this sequence get pages", and a serving engine that admits on KV
+pages alone would oversubscribe the state rows. StateSlabPool answers
+it with one fixed-size *slab* per admitted sequence, under the same
+allocator invariants as PagedKVCache (see serve/kv_cache.py):
+
+  - per-shard slab blocks matching the batch-on-data GSPMD layout
+    (slot s draws from shard s // seqs_per_shard's block);
+  - each shard's first slab is a *reserve* slab, never allocated
+    (conservation arithmetic mirrors the pool's reserve pages);
+  - refcounted slabs with conservation:
+    live_slabs + free_slab_count == usable_slabs (= n_slabs - n_shards).
+    Recurrent state is write-per-step, so a slab's refcount is only
+    ever 0 or 1 — there is no COW analogue — but the accounting is kept
+    identical so the property suite (tests/test_alloc_property.py) runs
+    the same conservation checks against both allocators;
+  - failed allocations raise the same OutOfPages the page pool raises,
+    allocating nothing: the scheduler treats slab exhaustion exactly
+    like page exhaustion (decline admission / preempt);
+  - compact() remaps live slabs onto the lowest ids of their shard,
+    like PagePool.compact's block-diagonal page remap.
+
+The device state rows themselves live in the paged cache pytree
+(init_paged_cache gives mamba layers (G, max_seqs, ...) per-slot rows
+indexed directly by slot); the slab pool is the host-side capacity and
+lifecycle layer, deciding *whether* a slot may hold state at all.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.kv_cache import OutOfPages
+
+
+class StateSlabPool:
+    def __init__(self, cfg, *, n_slabs, max_seqs, n_shards=1, dtype=None):
+        assert n_slabs >= 2, "need at least the reserve slab + one usable"
+        assert n_shards >= 1
+        assert n_slabs % n_shards == 0, \
+            f"n_slabs={n_slabs} must split evenly over {n_shards} shards"
+        assert max_seqs % n_shards == 0, \
+            f"max_seqs={max_seqs} must split evenly over {n_shards} shards"
+        assert n_slabs // n_shards >= 2, \
+            "each shard needs its reserve slab + one usable slab"
+        self.cfg = cfg
+        self.n_slabs = int(n_slabs)
+        self.max_seqs = int(max_seqs)
+        self.n_shards = int(n_shards)
+        self.slabs_per_shard = self.n_slabs // self.n_shards
+        self.seqs_per_shard = self.max_seqs // self.n_shards
+        self._dtype = dtype
+        # per-shard free lists; each shard's first slab is the reserve
+        self._free_by_shard: list[list[int]] = [
+            list(range((s + 1) * self.slabs_per_shard - 1,
+                       s * self.slabs_per_shard, -1))
+            for s in range(self.n_shards)]
+        self._refcount = np.zeros((n_slabs,), np.int32)
+        self._slab_of_slot = np.full((max_seqs,), -1, np.int32)
+        self.high_water = 0
+        self.slabs_allocated = 0
+
+    # ---------------- shard geometry ----------------
+    def shard_of_slab(self, sid: int) -> int:
+        return sid // self.slabs_per_shard
+
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.seqs_per_shard
+
+    def is_reserve_slab(self, sid: int) -> bool:
+        return sid % self.slabs_per_shard == 0
+
+    # ---------------- accounting ----------------
+    @property
+    def usable_slabs(self) -> int:
+        return self.n_slabs - self.n_shards
+
+    def usable_in_shard(self, shard: int = 0) -> int:
+        assert 0 <= shard < self.n_shards, shard
+        return self.slabs_per_shard - 1
+
+    @property
+    def free_slab_count(self) -> int:
+        return sum(len(fl) for fl in self._free_by_shard)
+
+    def free_in_shard(self, shard: int) -> int:
+        return len(self._free_by_shard[shard])
+
+    @property
+    def used_slabs(self) -> int:
+        return self.usable_slabs - self.free_slab_count
+
+    @property
+    def live_slabs(self) -> int:
+        """Distinct slabs with refcount > 0 (each counted once)."""
+        return int((self._refcount > 0).sum())
+
+    def live_in_shard(self, shard: int) -> int:
+        lo = shard * self.slabs_per_shard
+        return int((self._refcount[lo:lo + self.slabs_per_shard] > 0).sum())
+
+    def refcount(self, sid: int) -> int:
+        return int(self._refcount[sid])
+
+    def slab_of(self, slot: int) -> int | None:
+        sid = int(self._slab_of_slot[slot])
+        return None if sid < 0 else sid
+
+    def bytes_per_slab(self) -> int:
+        """Device bytes one slab holds across all recurrent layers: the
+        fp32 SSM carry plus the conv window, per mamba pattern position
+        x the n_groups scan stack. Host-side math — the single owner of
+        the state-capacity arithmetic (EngineStats, the capacity banner
+        and SERVING.md's formula all read it)."""
+        import jax.numpy as jnp
+        mc = self.cfg.mamba
+        if mc is None:
+            return 0
+        di = self.cfg.d_inner
+        itemsize = jnp.dtype(self._dtype or self.cfg.dtype).itemsize
+        ssm = di * mc.d_state * 4                       # carried in fp32
+        conv = (mc.d_conv - 1) * di * itemsize
+        n_mamba = sum(1 for s in self.cfg.pattern
+                      if s.kind != "attn") * self.cfg.n_groups
+        return (ssm + conv) * n_mamba
+
+    def pool_bytes(self) -> int:
+        return self.bytes_per_slab() * self.n_slabs
+
+    # ---------------- lifecycle ----------------
+    def alloc(self, slot: int) -> int:
+        """Claim one slab for `slot` from its shard's block; raises
+        OutOfPages (allocating nothing) when the shard is dry. A slot
+        holds at most one slab — recurrent state never grows."""
+        assert self._slab_of_slot[slot] < 0, (slot, "already holds a slab")
+        shard = self.shard_of_slot(slot)
+        free = self._free_by_shard[shard]
+        if not free:
+            raise OutOfPages(
+                f"slot {slot}: no free state slab in shard {shard}")
+        sid = free.pop()
+        self._refcount[sid] = 1
+        self._slab_of_slot[slot] = sid
+        self.slabs_allocated += 1
+        self.high_water = max(self.high_water, self.used_slabs)
+        return sid
+
+    def release(self, slot: int) -> None:
+        """Return `slot`'s slab (completion or preemption). Idempotent
+        for slots that hold none — the scheduler releases every slot
+        uniformly, attention-only sequences included."""
+        sid = int(self._slab_of_slot[slot])
+        if sid < 0:
+            return
+        assert self._refcount[sid] == 1, (slot, sid)
+        self._refcount[sid] = 0
+        self._free_by_shard[self.shard_of_slab(sid)].append(sid)
+        self._slab_of_slot[slot] = -1
+
+    # ---------------- defrag ----------------
+    def compact(self) -> dict[int, int]:
+        """Remap live slabs onto the lowest ids of their shard and
+        return the {old: new} mapping (host-side only: the device state
+        rows are indexed by slot, not slab id, so no device move is
+        needed — parity with PagePool.compact's contract is what the
+        invariant suite checks)."""
+        mapping: dict[int, int] = {}
+        next_in_shard = [s * self.slabs_per_shard + 1
+                         for s in range(self.n_shards)]
+        for slot in range(self.max_seqs):
+            sid = int(self._slab_of_slot[slot])
+            if sid < 0:
+                continue
+            sh = self.shard_of_slab(sid)
+            mapping[sid] = next_in_shard[sh]
+            next_in_shard[sh] += 1
+            self._slab_of_slot[slot] = mapping[sid]
+        new_rc = np.zeros_like(self._refcount)
+        for old, new in mapping.items():
+            new_rc[new] = self._refcount[old]
+        self._refcount = new_rc
+        self._free_by_shard = [
+            list(range((s + 1) * self.slabs_per_shard - 1,
+                       next_in_shard[s] - 1, -1))
+            for s in range(self.n_shards)]
+        return mapping

@@ -52,6 +52,12 @@ class EngineStats:
     accepted_tokens: int = 0
     acceptance_rate: float = 0.0
 
+    # recurrent state slab pool (0 == no recurrent layers / dense)
+    slab_usable_slabs: int = 0
+    slab_high_water: int = 0
+    slabs_allocated: int = 0
+    slab_bytes_per_slab: int = 0
+
     # radix prefix index
     prefix_hits: int = 0
     prefix_lookups: int = 0
@@ -126,6 +132,12 @@ class EngineStats:
             "acceptance_rate": (
                 int(s.get("accepted_tokens", 0))
                 / max(int(s.get("draft_tokens", 0)), 1)),
+            "slab_usable_slabs": int(s.get("slab_usable_slabs", 0)),
+            "slab_high_water": int(s.get("slab_high_water", 0)),
+            "slabs_allocated": int(s.get("slabs_allocated", 0)),
+            "slab_bytes_per_slab": (
+                int(engine.slab.bytes_per_slab())
+                if getattr(engine, "slab", None) is not None else 0),
             "prefix_hits": int(s.get("prefix_hits", 0)),
             "prefix_lookups": int(s.get("prefix_lookups", 0)),
             "prefix_hit_rate": float(s.get("prefix_hit_rate", 0.0)),

@@ -20,6 +20,7 @@ except ImportError:  # not installed: property tests below are gated out
     given = settings = st = None
 
 from repro.serve import OutOfPages, PagedKVCache
+from repro.serve.state_slab import StateSlabPool
 
 OPS = ("alloc", "ensure", "share", "cow", "release", "preempt",
        "index_ref", "index_unref")
@@ -198,6 +199,92 @@ if given is not None:
         assert kv.free_page_count == kv.usable_pages
         for sh in range(kv.n_shards):
             assert kv.free_in_shard(sh) == kv.usable_in_shard(sh)
+
+
+# ---------------------------------------------------------------------------
+# recurrent state slab pool: same conservation law, no-growth allocator
+# ---------------------------------------------------------------------------
+
+def _slab_soup(seed):
+    """Random alloc / release / compact interleavings against
+    StateSlabPool must keep the page pool's conservation law —
+    live + free == usable (= n_slabs - n_shards) — globally and per
+    shard, never hand out a reserve slab, and keep every refcount 0/1
+    (recurrent state has no COW analogue)."""
+    rng = random.Random(seed)
+    n_shards = rng.choice([1, 2])
+    slabs_per_shard = rng.randint(2, 6)
+    seqs_per_shard = rng.randint(1, 3)
+    pool = StateSlabPool(None, n_slabs=n_shards * slabs_per_shard,
+                         max_seqs=n_shards * seqs_per_shard,
+                         n_shards=n_shards)
+
+    def check():
+        assert pool.live_slabs + pool.free_slab_count == pool.usable_slabs
+        for sh in range(n_shards):
+            assert pool.live_in_shard(sh) + pool.free_in_shard(sh) \
+                == pool.usable_in_shard(sh)
+        for slot in range(pool.max_seqs):
+            sid = pool.slab_of(slot)
+            if sid is not None:
+                assert not pool.is_reserve_slab(sid)
+                assert pool.shard_of_slab(sid) == pool.shard_of_slot(slot)
+                assert pool.refcount(sid) == 1
+
+    held: set[int] = set()
+    for _ in range(rng.randint(20, 80)):
+        op = rng.choice(("alloc", "alloc", "release", "compact"))
+        if op == "alloc":
+            idle = [s for s in range(pool.max_seqs) if s not in held]
+            if idle:
+                slot = rng.choice(idle)
+                before = pool.free_slab_count
+                try:
+                    pool.alloc(slot)
+                    held.add(slot)
+                except OutOfPages:
+                    # failed alloc is atomic and really means a dry shard
+                    assert pool.free_in_shard(pool.shard_of_slot(slot)) == 0
+                    assert pool.free_slab_count == before
+        elif op == "release":
+            slot = rng.randrange(pool.max_seqs)
+            pool.release(slot)          # idempotent for slab-less slots
+            held.discard(slot)
+        else:
+            mapping = pool.compact()
+            # live slabs land on the densest prefix of their shard,
+            # never on a reserve id
+            for new in mapping.values():
+                assert not pool.is_reserve_slab(new)
+        check()
+
+    for slot in range(pool.max_seqs):
+        pool.release(slot)
+    assert pool.free_slab_count == pool.usable_slabs
+    assert pool.live_slabs == 0
+
+
+if given is not None:
+    @settings(deadline=None)
+    @given(st.integers(0, 10**9))
+    def test_slab_pool_conservation_under_random_interleavings(seed):
+        _slab_soup(seed)
+
+
+def test_slab_pool_conservation_deterministic_seeds():
+    """hypothesis-free slice of the slab property (the fuzz above only
+    runs where hypothesis is installed)."""
+    for seed in range(16):
+        _slab_soup(seed)
+
+
+def test_slab_pool_rejects_degenerate_geometry():
+    with pytest.raises(AssertionError):
+        StateSlabPool(None, n_slabs=1, max_seqs=1)          # no reserve
+    with pytest.raises(AssertionError):
+        StateSlabPool(None, n_slabs=5, max_seqs=4, n_shards=2)  # 2 !| 5
+    with pytest.raises(AssertionError):
+        StateSlabPool(None, n_slabs=2, max_seqs=2, n_shards=2)  # no usable
 
 
 if given is not None:

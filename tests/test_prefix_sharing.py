@@ -179,15 +179,20 @@ def test_dense_engine_unaffected_by_prefix_flag():
 
 
 # ---------------------------------------------------------------------------
-# clear-error guard: paged + MLA
+# paged + MLA: latent pages, not K/V pages
 # ---------------------------------------------------------------------------
 
-def test_paged_engine_on_mla_config_raises_clear_error():
-    cfg = smoke_config("minicpm3-4b")
+def test_paged_engine_on_mla_config_pages_the_latent():
+    """MLA rides the paged engine (tests/test_model_zoo_serve.py has the
+    conformance matrix); here: the pool's pages hold the compressed
+    latent — (kv_lora + rope) floats per token — not 2*H*hd K/V."""
+    cfg = smoke_config("minicpm3-4b").replace(dtype="float32")
     assert cfg.mla is not None
-    with pytest.raises(NotImplementedError,
-                       match="page the MLA latent cache"):
-        ServeEngine(cfg, None, cache_kind="paged")
+    eng = ServeEngine(cfg, None, cache_kind="paged", page_size=8)
+    n_attn = sum(s.kind == "attn" for s in cfg.pattern) * (
+        cfg.n_layers // len(cfg.pattern))
+    latent = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    assert eng.kv.bytes_per_page() == latent * 4 * 8 * n_attn
 
 
 # ---------------------------------------------------------------------------

@@ -159,6 +159,92 @@ def test_speculative_fuzz_deterministic_seeds():
             _check_pool(eng.kv)
 
 
+# ---------------------------------------------------------------------------
+# architecture axis: MLA latent pages + Mamba state slabs under pressure
+# ---------------------------------------------------------------------------
+
+# arch -> (registry name, paged-engine kwargs variants). MLA runs the
+# page-pressure pools the attention engines use; the Mamba-mix variants
+# bracket the slab axis: a slab-starved pool (state_slabs=2 -> one
+# usable slab, admission serializes on slab capacity) and a roomy one
+# where only the attention layer's pages can run dry.
+ZOO = {
+    "mla": ("minicpm3-4b",
+            [dict(page_size=8, n_pages=6), dict(page_size=8, n_pages=9)]),
+    "mamba-mix": ("jamba-1.5-large-398b",
+                  [dict(page_size=8, n_pages=9, state_slabs=2),
+                   dict(page_size=8, n_pages=9)]),
+}
+
+_zoo: dict = {}
+
+
+def _zoo_setup():
+    if _zoo:
+        return _zoo
+    from repro.configs import smoke_config
+    for arch, (name, variants) in ZOO.items():
+        cfg = smoke_config(name).replace(dtype="float32", remat="none")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(7)
+        bases = [rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+                 for _ in range(2)]
+        _zoo[arch] = {
+            "cfg": cfg,
+            "bases": bases,
+            "dense": ServeEngine(cfg, params, batch_size=BATCH,
+                                 max_len=MAX_LEN, dtype="float32"),
+            "paged": [ServeEngine(cfg, params, batch_size=BATCH,
+                                  max_len=MAX_LEN, dtype="float32",
+                                  cache_kind="paged", **kw)
+                      for kw in variants],
+        }
+    return _zoo
+
+
+def _zoo_wave(arch, eng, rng, state):
+    if eng._prefix is not None:
+        eng._prefix.clear()
+    for _wave in range(2):
+        reqs = _workload(rng, state["cfg"].vocab_size, state["bases"])
+        want = _serve(state["dense"], reqs)
+        got = _serve(eng, reqs)
+        assert got == want, (arch, _wave)
+        _check_pool(eng.kv)
+        if eng.slab is not None:
+            # every slab came home; conservation survived the workload
+            assert eng.slab.live_slabs == 0
+            assert eng.slab.free_slab_count == eng.slab.usable_slabs
+
+
+if given is not None:
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(0, 10**6))
+    def test_model_zoo_matches_dense_oracle(seed):
+        """The fuzz workloads through the MLA and Mamba-mix engines:
+        latent-page eviction and slab-admission serialization must stay
+        invisible in the token stream."""
+        zoo = _zoo_setup()
+        rng = np.random.default_rng(seed)
+        arch = list(ZOO)[seed % len(ZOO)]
+        state = zoo[arch]
+        eng = state["paged"][seed // len(ZOO) % len(state["paged"])]
+        _zoo_wave(arch, eng, rng, state)
+
+
+def test_model_zoo_fuzz_deterministic_seeds():
+    """hypothesis-free slice of the architecture axis: fixed seeds
+    through every (arch, pool-variant) engine, two waves each."""
+    zoo = _zoo_setup()
+    for arch, state in zoo.items():
+        for v, eng in enumerate(state["paged"]):
+            _zoo_wave(arch, eng, np.random.default_rng(2000 + v), state)
+    # the slab-starved Mamba variant really exercised slab admission
+    starved = zoo["mamba-mix"]["paged"][0]
+    assert starved.slab is not None and starved.slab.usable_slabs == 1
+    assert starved.slab.high_water == 1
+
+
 def test_fuzz_engines_accumulated_sharing():
     """After the fuzz (or standalone on a fresh pool): the shared-prefix
     machinery actually engaged — serve two same-prefix workloads through
